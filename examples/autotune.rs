@@ -1,0 +1,62 @@
+//! Auto-tuning demo (§4.4): search the FLUX knob space per
+//! (cluster, op, shape), print what wins where, and show the cache
+//! behaviour a serving/training loop relies on.
+//!
+//! Run: `cargo run --release --example autotune`
+
+use flux::cost::arch::ALL_CLUSTERS;
+use flux::figures::{ag_problem, rs_problem};
+use flux::overlap::baseline;
+use flux::tuner::{search_space, tune, TunerCache};
+use flux::util::bench::table;
+
+fn main() {
+    let mut rows = Vec::new();
+    for cl in ALL_CLUSTERS {
+        for m in [512usize, 2048, 8192] {
+            for (tag, p) in
+                [("AG", ag_problem(m, 8)), ("RS", rs_problem(m, 8))]
+            {
+                let space = search_space(cl, &p).len();
+                let t = tune(cl, &p, 7);
+                let base = baseline::simulate(cl, &p);
+                rows.push(vec![
+                    cl.name.to_string(),
+                    tag.to_string(),
+                    m.to_string(),
+                    space.to_string(),
+                    format!("swizzle={}", t.config.swizzle),
+                    if t.config.pull { "pull" } else { "push" }.to_string(),
+                    if tag == "AG" {
+                        t.config.comm_rows.to_string()
+                    } else {
+                        "-".into()
+                    },
+                    format!("{:.3}", t.timing.overall_ns / 1e6),
+                    format!(
+                        "{:.0}%",
+                        t.timing.overlap_efficiency(&base) * 100.0
+                    ),
+                ]);
+            }
+        }
+    }
+    table(
+        "auto-tuner winners per (cluster, op, m)",
+        &["cluster", "op", "m", "space", "swizzle", "dir", "comm rows",
+          "overall ms", "eff"],
+        &rows,
+    );
+
+    // Cache behaviour: a serving loop tunes once per shape.
+    let mut cache = TunerCache::new();
+    let p = ag_problem(4096, 8);
+    for _ in 0..5 {
+        cache.get(ALL_CLUSTERS[1], &p, 7);
+    }
+    println!(
+        "\ntuner cache: {} entries, {} misses, {} hits \
+         (tune once, reuse forever)",
+        cache.len(), cache.misses, cache.hits
+    );
+}

@@ -1,0 +1,10 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run (the same generators back the per-figure benches).
+//!
+//! Run: `cargo run --release --example repro_figures`
+
+fn main() {
+    for t in flux::figures::all() {
+        flux::figures::print_table(&t);
+    }
+}

@@ -1,0 +1,179 @@
+//! END-TO-END serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Loads the real tiny TP-4 transformer (AOT artifacts), serves a
+//! batched open-loop request workload through the full coordinator
+//! stack — router/batcher, paged KV-cache manager, per-rank PJRT
+//! execution with host collectives between TP partials — and reports
+//! latency (TTFT + end-to-end) and throughput. Correctness is asserted
+//! en route: the first prefill batch is checked against the Python
+//! full-model golden.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+
+use std::time::Instant;
+
+use flux::runtime::Runtime;
+use flux::serving::batcher::Work;
+use flux::serving::engine::{argmax, Engine};
+use flux::serving::kvcache::KvCacheManager;
+use flux::serving::{Batcher, BatcherConfig, Request};
+use flux::util::json::Json;
+use flux::util::prng::Rng;
+use flux::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let art_dir = rt.dir.clone();
+    println!(
+        "model: tiny GPT (d={}, {} layers, TP={}), {} artifacts",
+        rt.manifest.d_model, rt.manifest.n_layers, rt.manifest.n_tp,
+        rt.manifest.artifacts.len()
+    );
+    let mut eng = Engine::new(rt)?;
+
+    // --- correctness gate: prefill against the Python golden ----------
+    let golden = Json::parse(&std::fs::read_to_string(
+        art_dir.join("golden_swizzle.json"),
+    )?)?;
+    let p = golden.get("prefill")?;
+    let lens = p.get("lens")?.usize_vec()?;
+    let prompts: Vec<Vec<i32>> = p
+        .get("ids")?
+        .as_arr()?
+        .iter()
+        .zip(&lens)
+        .map(|(row, &l)| {
+            row.as_arr().unwrap()[..l]
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect()
+        })
+        .collect();
+    let got = eng.prefill(&prompts)?;
+    let want: Vec<Vec<f64>> = p
+        .get("last_logits")?
+        .as_arr()?
+        .iter()
+        .map(|r| r.f64_vec().unwrap())
+        .collect();
+    let mut max_diff = 0.0f64;
+    for (g, w) in got.iter().zip(&want) {
+        for (x, y) in g.iter().zip(w) {
+            max_diff = max_diff.max((*x as f64 - y).abs());
+        }
+    }
+    anyhow::ensure!(max_diff < 5e-3, "golden mismatch: {max_diff}");
+    println!(
+        "correctness gate: rust TP execution == python full model \
+         (max logit diff {max_diff:.2e})"
+    );
+
+    // --- open-loop workload -------------------------------------------
+    let n_requests = 12usize;
+    let gen_len = 12usize;
+    let mut rng = Rng::new(99);
+    let mut batcher = Batcher::new(BatcherConfig {
+        max_prefill_batch: eng.b,
+        max_decode_batch: eng.b,
+        max_prompt: eng.s,
+        max_seq: eng.smax,
+    });
+    let mut kv = KvCacheManager::new(96, 16);
+    for i in 0..n_requests as u64 {
+        let plen = rng.range(4, 33) as usize;
+        let prompt: Vec<i32> = (0..plen)
+            .map(|_| rng.below(eng.vocab as u64) as i32)
+            .collect();
+        batcher.submit(Request::new(i, 0.0, prompt, gen_len));
+    }
+
+    let t0 = Instant::now();
+    let now_ns = |t0: &Instant| t0.elapsed().as_nanos() as f64;
+    let mut last_tok = vec![0i32; eng.b];
+    let mut slot_of = std::collections::BTreeMap::new();
+    let mut prefill_batches = 0usize;
+    let mut decode_steps = 0usize;
+    loop {
+        match batcher.next_work(&mut kv)? {
+            Work::Prefill(ids) => {
+                prefill_batches += 1;
+                let prompts: Vec<Vec<i32>> = ids
+                    .iter()
+                    .map(|&id| batcher.get(id).prompt.clone())
+                    .collect();
+                let logits = eng.prefill(&prompts)?;
+                let mut toks = Vec::new();
+                for (slot, &id) in ids.iter().enumerate() {
+                    slot_of.insert(id, slot);
+                    last_tok[slot] = argmax(&logits[slot]);
+                    toks.push(last_tok[slot]);
+                    batcher.get_mut(id).prefill_done_ns =
+                        Some(now_ns(&t0));
+                }
+                batcher.complete_decode(&ids, &toks, &mut kv, now_ns(&t0))?;
+            }
+            Work::Decode(ids) => {
+                decode_steps += 1;
+                let logits = eng.decode_step(&last_tok)?;
+                let mut toks = Vec::new();
+                for &id in &ids {
+                    let slot = slot_of[&id];
+                    last_tok[slot] = argmax(&logits[slot]);
+                    toks.push(last_tok[slot]);
+                }
+                batcher.complete_decode(&ids, &toks, &mut kv, now_ns(&t0))?;
+            }
+            Work::Idle => break,
+        }
+        kv.check_invariants()?;
+    }
+    let wall = t0.elapsed();
+
+    // --- report --------------------------------------------------------
+    let ttfts: Vec<f64> = batcher
+        .requests
+        .iter()
+        .filter_map(|r| r.ttft_ns())
+        .map(|x| x / 1e6)
+        .collect();
+    let lats: Vec<f64> = batcher
+        .requests
+        .iter()
+        .filter_map(|r| r.latency_ns())
+        .map(|x| x / 1e6)
+        .collect();
+    let total_toks: usize =
+        batcher.requests.iter().map(|r| r.generated.len()).sum();
+    let ttft = Summary::of(&ttfts);
+    let lat = Summary::of(&lats);
+    println!("\n=== serve_e2e report ===");
+    println!("requests completed   : {n_requests}");
+    println!("tokens generated     : {total_toks}");
+    println!(
+        "prefill batches      : {prefill_batches}   decode steps: \
+         {decode_steps}"
+    );
+    println!("wall time            : {:.2?}", wall);
+    println!(
+        "throughput           : {:.1} tok/s",
+        total_toks as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "TTFT ms              : p50 {:.1}  p95 {:.1}  max {:.1}",
+        ttft.p50, ttft.p95, ttft.max
+    );
+    println!(
+        "latency ms           : p50 {:.1}  p95 {:.1}  max {:.1}",
+        lat.p50, lat.p95, lat.max
+    );
+    println!(
+        "KV peak blocks       : {} / {}",
+        kv.peak_used, kv.total_blocks
+    );
+    println!("PJRT executions      : {}", eng.rt.execute_calls);
+    anyhow::ensure!(
+        batcher.requests.iter().all(|r| r.generated.len() == gen_len),
+        "every request must complete"
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Model-level training comparison on the simulated 128-GPU clusters
+//! (the Fig. 16 training rows): Megatron-LM (non-overlap) vs
+//! TransformerEngine vs Flux for GPT-3 175B and Llama-2 70B under
+//! DP2 x PP8 x TP8 with a 1F1B pipeline.
+//!
+//! Run: `cargo run --release --example train_cluster`
+
+use flux::cost::arch::ALL_CLUSTERS;
+use flux::model::analysis::comm_portion;
+use flux::model::configs::{GPT3_175B, LLAMA2_70B};
+use flux::parallel::{stage_times, train_step_ns, Layout, Method};
+use flux::util::bench::table;
+
+fn main() {
+    let layout = Layout::PAPER_TRAINING;
+    let (micro, tokens, seq) = (16usize, 2048usize, 2048usize);
+    println!(
+        "training layout: DP{} x PP{} x TP{} = {} GPUs, {} microbatches \
+         of {} tokens",
+        layout.dp, layout.pp, layout.tp, layout.gpus(), micro, tokens
+    );
+
+    let mut rows = Vec::new();
+    for cl in ALL_CLUSTERS {
+        for model in [&GPT3_175B, &LLAMA2_70B] {
+            let step = |m: Method| {
+                train_step_ns(cl, model, &layout, micro, tokens, seq, m, 7)
+            };
+            let base = step(Method::NonOverlap);
+            let te = step(Method::Medium);
+            let fx = step(Method::Flux);
+            let portion =
+                comm_portion(cl, model, tokens, seq, layout.tp, true)
+                    .fraction();
+            rows.push(vec![
+                cl.name.to_string(),
+                model.name.to_string(),
+                format!("{:.0}%", portion * 100.0),
+                format!("{:.0}", base / 1e6),
+                format!("{:.0}", te / 1e6),
+                format!("{:.0}", fx / 1e6),
+                format!("{:.2}x", base / fx),
+                format!("{:.2}x", te / fx),
+            ]);
+        }
+    }
+    table(
+        "Fig 16 (training): step time per method",
+        &["cluster", "model", "comm %", "Megatron ms", "TE ms", "Flux ms",
+          "Flux vs Megatron", "Flux vs TE"],
+        &rows,
+    );
+
+    // Stage-level detail for one configuration.
+    let cl = ALL_CLUSTERS[0];
+    println!("\nper-microbatch stage times on {} (GPT-3 175B):", cl.name);
+    for m in Method::ALL {
+        let st = stage_times(cl, &GPT3_175B, &layout, tokens, seq, m, 7);
+        println!(
+            "  {:12} fwd {:7.1} ms   bwd {:7.1} ms",
+            m.name(), st.fwd_ns / 1e6, st.bwd_ns / 1e6
+        );
+    }
+}

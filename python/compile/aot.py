@@ -1,0 +1,263 @@
+"""AOT exporter: lower every build-time computation to HLO *text*.
+
+Run once at build time (`make artifacts`); the Rust coordinator is fully
+self-contained afterwards. Interchange is HLO text, NOT a serialized
+HloModuleProto — jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Emitted into artifacts/:
+  * op-level kernels (quickstart + Rust integration tests):
+      gemm_m{M}k{K}n{N}.hlo.txt          plain GEMM (the Eq.-1 baseline)
+      flux_gemm_rs_r{r}.hlo.txt          fused GEMM+scatter, per rank
+      flux_ag_gemm_r{r}.hlo.txt          fused AG+GEMM, per rank
+  * model-level per-rank partials (serving hot path):
+      embed_prefill / embed_decode / attn_prefill / attn_decode /
+      mlp_prefill / mlp_decode / lm_head  (.hlo.txt each)
+  * weights/*.bin   f32 little-endian tensors, per rank-shard
+  * manifest.json   config + tensor index + artifact signatures
+  * golden_swizzle.json   tile-order golden data for the Rust twin tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.flux_ag_gemm import comm_tile_schedule, flux_ag_gemm
+from .kernels.flux_gemm_rs import flux_gemm_rs
+
+# Op-level artifact shapes (modest so the HLO text stays small; the
+# paper-scale shapes are exercised by the cost model, not by CPU numerics).
+OP_NTP = 4
+OP_M, OP_K, OP_N = 128, 256, 128
+OP_BLOCK = 32
+
+# Serving shapes (static; the router pads batches to these).
+BATCH = 4
+SEQ = 64
+SMAX = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "weights": {}}
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    def lower(self, name: str, fn, *specs):
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": path,
+            "inputs": [[list(s.shape), str(s.dtype)] for s in specs],
+        }
+        print(f"  {path:36s} {len(text):>9d} chars")
+
+    def tensor(self, name: str, arr: np.ndarray):
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        path = os.path.join("weights", name.replace("/", "_") + ".bin")
+        arr.tofile(os.path.join(self.out_dir, path))
+        self.manifest["weights"][name] = {
+            "file": path,
+            "shape": list(arr.shape),
+        }
+
+    def finish(self, cfg: M.ModelConfig):
+        self.manifest["config"] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq, "n_tp": cfg.n_tp,
+            "batch": BATCH, "seq": SEQ, "smax": SMAX,
+            "hd_local": cfg.hd_local, "ff_local": cfg.ff_local,
+        }
+        self.manifest["op_level"] = {
+            "n_tp": OP_NTP, "m": OP_M, "k": OP_K, "n": OP_N,
+            "block": OP_BLOCK,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+
+
+def export_op_level(ex: Exporter):
+    """Kernels for quickstart + Rust runtime integration tests."""
+    # Plain GEMM — the `GEMM_non-split` baseline of Eq. 1.
+    ex.lower(f"gemm_m{OP_M}k{OP_K}n{OP_N}",
+             lambda a, b: (ref.gemm_ref(a, b),),
+             spec((OP_M, OP_K)), spec((OP_K, OP_N)))
+
+    kl = OP_K // OP_NTP  # GEMM+RS input is K-sharded
+    for r in range(OP_NTP):
+        ex.lower(
+            f"flux_gemm_rs_r{r}",
+            functools.partial(
+                lambda a, b, rank: (flux_gemm_rs(
+                    a, b, rank=rank, n_tp=OP_NTP,
+                    block_m=OP_BLOCK, block_n=OP_BLOCK, block_k=OP_BLOCK),),
+                rank=r),
+            spec((OP_M, kl)), spec((kl, OP_N)))
+
+    nl = OP_N // OP_NTP  # AG+GEMM weight is N-sharded
+    for r in range(OP_NTP):
+        ex.lower(
+            f"flux_ag_gemm_r{r}",
+            functools.partial(
+                lambda a, b, rank: (flux_ag_gemm(
+                    a, b, rank=rank, n_tp=OP_NTP,
+                    block_m=OP_BLOCK, block_n=OP_BLOCK, block_k=OP_BLOCK),),
+                rank=r),
+            spec((OP_M, OP_K)), spec((OP_K, nl)))
+
+
+def export_model(ex: Exporter, cfg: M.ModelConfig, weights: dict):
+    d, hl, fl = cfg.d_model, cfg.hd_local, cfg.ff_local
+    i32 = jnp.int32
+
+    # The embedding table is a runtime parameter: large constants are
+    # elided to `constant({...})` by as_hlo_text and would not round-trip
+    # through the text parser on the Rust side.
+    ex.lower("embed_prefill",
+             lambda ids, pos, emb: (M.embed(ids, pos, emb),),
+             spec((BATCH, SEQ), i32), spec((BATCH, SEQ), i32),
+             spec((cfg.vocab, d)))
+
+    ex.lower("embed_decode",
+             lambda ids, pos, emb: (M.embed(ids, pos, emb)[:, None, :],),
+             spec((BATCH,), i32), spec((BATCH,), i32),
+             spec((cfg.vocab, d)))
+
+    ex.lower("attn_prefill",
+             lambda x, mask, g, b, wqkv, wo: M.attn_prefill_partial(
+                 cfg, x, mask, g, b, wqkv, wo),
+             spec((BATCH, SEQ, d)), spec((BATCH, SEQ)),
+             spec((d,)), spec((d,)), spec((d, 3 * hl)), spec((hl, d)))
+
+    ex.lower("attn_decode",
+             lambda x, kc, vc, cl, g, b, wqkv, wo: M.attn_decode_partial(
+                 cfg, x, kc, vc, cl, g, b, wqkv, wo),
+             spec((BATCH, 1, d)), spec((BATCH, SMAX, hl)),
+             spec((BATCH, SMAX, hl)), spec((BATCH,), i32),
+             spec((d,)), spec((d,)), spec((d, 3 * hl)), spec((hl, d)))
+
+    ex.lower("mlp_prefill",
+             lambda x, g, b, w1, w2: (M.mlp_partial(cfg, x, g, b, w1, w2),),
+             spec((BATCH, SEQ, d)), spec((d,)), spec((d,)),
+             spec((d, fl)), spec((fl, d)))
+
+    ex.lower("mlp_decode",
+             lambda x, g, b, w1, w2: (M.mlp_partial(cfg, x, g, b, w1, w2),),
+             spec((BATCH, 1, d)), spec((d,)), spec((d,)),
+             spec((d, fl)), spec((fl, d)))
+
+    ex.lower("lm_head",
+             lambda x, g, b, emb: (M.lm_head(x, g, b, emb),),
+             spec((BATCH, d)), spec((d,)), spec((d,)),
+             spec((cfg.vocab, d)))
+
+
+def export_weights(ex: Exporter, cfg: M.ModelConfig, weights: dict):
+    """Per-rank shards, named the way rust/src/serving/weights.rs loads
+    them: l{layer}.r{rank}.{tensor}."""
+    for l in range(cfg.n_layers):
+        for r in range(cfg.n_tp):
+            sh = M.shard_layer(cfg, weights, l, r)
+            for k, v in sh.items():
+                ex.tensor(f"l{l}.r{r}.{k}", v)
+    ex.tensor("ln_f_g", weights["ln_f_g"])
+    ex.tensor("ln_f_b", weights["ln_f_b"])
+    # Runtime parameter of embed_prefill / embed_decode / lm_head.
+    ex.tensor("embed", weights["embed"])
+
+
+def export_goldens(out_dir: str, cfg: M.ModelConfig, weights: dict):
+    """Golden cross-language fixtures for the Rust twins."""
+    golden = {"swizzle": [], "ring": [], "comm_sched": []}
+    for n_tp in (2, 4, 8):
+        for rank in range(n_tp):
+            golden["swizzle"].append({
+                "num_tiles": 4 * n_tp, "rank": rank, "n_tp": n_tp,
+                "order": ref.swizzle_order(4 * n_tp, rank, n_tp),
+            })
+            golden["ring"].append({
+                "rank": rank, "n_tp": n_tp,
+                "order": ref.ring_comm_order(rank, n_tp),
+            })
+    for m, n_tp, rows in ((128, 4, 16), (256, 8, 32), (64, 2, 32)):
+        for rank in range(n_tp):
+            golden["comm_sched"].append({
+                "m": m, "rank": rank, "n_tp": n_tp, "rows": rows,
+                "schedule": comm_tile_schedule(
+                    m, rank, n_tp, rows),
+            })
+    # A full-forward golden for the Rust e2e serving test.
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, cfg.vocab, size=(BATCH, SEQ)).astype(np.int32)
+    lens = np.asarray([SEQ, SEQ // 2, 10, 1], np.int64)[:BATCH]
+    mask = (np.arange(SEQ)[None, :] < lens[:, None]).astype(np.float32)
+    logits = M.full_forward(cfg, weights, jnp.asarray(ids),
+                            jnp.asarray(mask))
+    # Keep the golden small: logits at each sequence's last valid position.
+    last = np.asarray(
+        [np.asarray(logits)[b, int(lens[b]) - 1] for b in range(BATCH)])
+    golden["prefill"] = {
+        "ids": ids.tolist(), "lens": lens.tolist(),
+        "last_logits": [[float(v) for v in row] for row in last],
+    }
+    with open(os.path.join(out_dir, "golden_swizzle.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"  golden_swizzle.json                  "
+          f"{os.path.getsize(os.path.join(out_dir, 'golden_swizzle.json')):>9d} bytes")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/model.hlo.txt",
+                   help="marker path; artifacts land in its directory")
+    args = p.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig.tiny()
+    weights = M.init_weights(cfg, seed=0)
+
+    ex = Exporter(out_dir)
+    print("op-level kernels:")
+    export_op_level(ex)
+    print("model partials:")
+    export_model(ex, cfg, weights)
+    export_weights(ex, cfg, weights)
+    ex.finish(cfg)
+    export_goldens(out_dir, cfg, weights)
+
+    # Marker file so Make's dependency tracking has a single target.
+    with open(args.out, "w") as f:
+        f.write("flux artifacts complete\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for FLUX's fused GEMM+communication hot-spots.
+from . import ref  # noqa: F401
+from .flux_ag_gemm import (  # noqa: F401
+    ag_gemm_fused,
+    assemble_agg,
+    comm_tile_schedule,
+    flux_ag_gemm,
+)
+from .flux_gemm_rs import flux_gemm_rs, gemm_rs_fused  # noqa: F401

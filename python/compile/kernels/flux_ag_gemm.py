@@ -1,0 +1,177 @@
+"""FLUX fused AllGather+GEMM Pallas kernel (paper Alg. 2/3, §3.2, §4.3).
+
+The CUDA original fuses only the *wait* half of the AllGather into the GEMM
+prologue: a host loop transfers communication tiles (pull- or push-based)
+and sets signals; every GEMM thread block spins on the signal guarding the
+A-tile it consumes. Signals for local tiles are preset, so local tiles
+compute immediately while remote tiles stream in.
+
+TPU/Pallas adaptation (DESIGN.md §3): a dataflow machine has no spinning —
+instead the kernel consumes the aggregated operand with a *grid traversal
+order* chosen to match signal-arrival order: the local rank's M-block
+first, then peers in ring order (the §4.3 NVLink communication order).
+That traversal is the same TileCoord swizzle as Alg. 2, expressed in the
+BlockSpec index maps. Signal-wait latency is modeled where it is observable
+on this substrate: in the L3 discrete-event simulator
+(rust/src/overlap/flux.rs + signals.rs).
+
+The host half (Alg. 3) is mirrored by `comm_tile_schedule` below, which is
+also the golden reference for the Rust scheduler's transfer order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _swizzle_m_local_first(i, rank, n_tp, tiles_m, enabled: bool):
+    """Grid index -> logical m-tile, local rank's block first then ring.
+
+    Mirrors the preset-local-signals behaviour: tiles whose data is already
+    resident are computed first; remote tiles follow in the order the §4.3
+    ring schedule delivers them (rank+1, rank+2, ...).
+    """
+    if not enabled:
+        return i
+    per = tiles_m // n_tp
+    return (i + rank * per) % tiles_m
+
+
+def _ag_gemm_kernel(a_ref, b_ref, o_ref):
+    """Plain tiled-matmul body; the AllGather shows up only in index maps."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def flux_ag_gemm(
+    a_agg,
+    b,
+    *,
+    rank: int,
+    n_tp: int,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+    swizzle: bool = True,
+):
+    """Fused AllGather+GEMM for one rank: C = A_agg @ B_local.
+
+    a_agg: [M, K] the aggregated activation buffer (assembled by the host
+    transfer loop), b: [K, N_local]. Returns [M, N_local] (f32).
+    """
+    m, k_dim = a_agg.shape
+    k_dim2, n = b.shape
+    assert k_dim == k_dim2
+    assert m % (n_tp * block_m) == 0, (
+        f"M={m} must divide into N_TP={n_tp} x block_m={block_m} tiles"
+    )
+    assert n % block_n == 0 and k_dim % block_k == 0
+
+    tiles_m = m // block_m
+    tiles_n = n // block_n
+    tiles_k = k_dim // block_k
+
+    def a_index(i, j, k):
+        return (_swizzle_m_local_first(i, rank, n_tp, tiles_m, swizzle), k)
+
+    def b_index(i, j, k):
+        return (k, j)
+
+    def out_index(i, j, k):
+        return (_swizzle_m_local_first(i, rank, n_tp, tiles_m, swizzle), j)
+
+    out = pl.pallas_call(
+        _ag_gemm_kernel,
+        grid=(tiles_m, tiles_n, tiles_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), a_index),
+            pl.BlockSpec((block_k, block_n), b_index),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), out_index),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a_agg, b)
+    return out
+
+
+def comm_tile_schedule(m: int, rank: int, n_tp: int, comm_tile_rows: int,
+                       pull: bool = True):
+    """Host-side transfer schedule of Alg. 3 — the golden twin of
+    rust/src/overlap/tiles.rs::comm_schedule.
+
+    Returns a list of transfer dicts in issue order. Each communication
+    tile is `comm_tile_rows` rows of the aggregated A buffer. Peers are
+    visited in ring order after the local rank (§4.3); within a peer,
+    tiles go in ascending row order. Local rows need no transfer (their
+    signals are preset).
+
+    pull: rank fetches from peer (src=peer, dst=rank, signal local);
+    push semantics are produced by the peer running the same schedule, so
+    here the flag only tags the record (bandwidth asymmetry is modeled in
+    the L3 simulator).
+    """
+    assert m % n_tp == 0
+    rows_per_rank = m // n_tp
+    assert rows_per_rank % comm_tile_rows == 0, (
+        f"rows/rank {rows_per_rank} not divisible by comm tile "
+        f"{comm_tile_rows}"
+    )
+    tiles_per_rank = rows_per_rank // comm_tile_rows
+    schedule = []
+    for peer in ref.ring_comm_order(rank, n_tp):
+        for t in range(tiles_per_rank):
+            row0 = peer * rows_per_rank + t * comm_tile_rows
+            schedule.append({
+                "src": peer if pull else rank,
+                "dst": rank if pull else peer,
+                "row0": row0,
+                "rows": comm_tile_rows,
+                "pull": pull,
+                "signal": peer * tiles_per_rank + t,
+            })
+    return schedule
+
+
+def assemble_agg(x_shards, rank: int):
+    """Assemble the aggregated A buffer the way the host loop would.
+
+    Layout is always rank-major (row block r belongs to rank r) regardless
+    of arrival order — arrival order changes *timing*, not layout.
+    """
+    del rank  # layout is rank-invariant; arg kept for signature symmetry
+    return ref.all_gather_ref(x_shards, axis=0)
+
+
+def ag_gemm_fused(x_shards, w_locals, *, swizzle: bool = True,
+                  block_m: int = 32, block_n: int = 32, block_k: int = 32,
+                  out_dtype=None):
+    """Full fused AllGather+GEMM across all simulated ranks.
+
+    x_shards[r]: [M/N_TP, K]; w_locals[r]: [K, N_local].
+    Returns per-rank [M, N_local] outputs.
+    """
+    n_tp = len(x_shards)
+    dt = out_dtype or x_shards[0].dtype
+    outs = []
+    for r in range(n_tp):
+        a_agg = assemble_agg(x_shards, r)
+        outs.append(
+            flux_ag_gemm(
+                a_agg, w_locals[r], rank=r, n_tp=n_tp,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                swizzle=swizzle,
+            ).astype(dt)
+        )
+    return outs

@@ -1,0 +1,141 @@
+"""FLUX fused GEMM+ReduceScatter Pallas kernel (paper Alg. 1, §3.1, §4.2).
+
+The CUDA original fuses the ReduceScatter's AlltoAll half into the GEMM
+epilogue: each thread block computes one output tile and stores it directly
+into the buffer of the rank that owns that M-block after the scatter,
+visiting tiles in a rank-swizzled order to avoid memory-controller
+contention (§4.1, Fig. 7).
+
+TPU/Pallas adaptation (DESIGN.md §3): the thread-block tile becomes a grid
+step; the epilogue's `GetOutput` pointer selection becomes the *output
+BlockSpec index_map*, which routes logical tile (i, j) into a
+[N_TP, M/N_TP, N] scattered layout whose leading axis is the destination
+rank. Tile-coordinate swizzling is the grid→logical-tile permutation
+applied consistently to the A and output index maps. The AlltoAll transport
+and local reduction (the `Reduce` branch of Alg. 1) happen outside the
+kernel in `gemm_rs_fused`, exactly mirroring the paper's decoupling of
+ReduceScatter into AlltoAll + local reduce.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against `ref.py` and real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf-L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _swizzle_m(i, rank, n_tp, tiles_m, enabled: bool):
+    """Grid index -> logical m-tile. Rank r starts at peer (r+1)'s block."""
+    if not enabled:
+        return i
+    per = tiles_m // n_tp
+    return (i + (rank + 1) % n_tp * per) % tiles_m
+
+
+def _gemm_rs_kernel(a_ref, b_ref, o_ref, *, k_tiles):
+    """Tiled matmul body with f32 accumulation into the scattered output.
+
+    o_ref block shape is (1, bm, bn): the leading singleton is the
+    destination-rank slot chosen by the output index_map (the `GetOutput`
+    of Alg. 1).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    o_ref[0, :, :] += acc
+
+
+def flux_gemm_rs(
+    a,
+    b,
+    *,
+    rank: int,
+    n_tp: int,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+    swizzle: bool = True,
+):
+    """Run the fused GEMM+scatter kernel for one rank.
+
+    a: [M, K_local] local activation, b: [K_local, N] local weight shard.
+    Returns the *scattered* partial output [N_TP, M/N_TP, N] (f32): slot d
+    holds the tiles this rank computed for destination rank d — i.e. what
+    the CUDA kernel would have P2P-stored into rank d's memory.
+    """
+    m, k_dim = a.shape
+    k_dim2, n = b.shape
+    assert k_dim == k_dim2, f"inner dims mismatch: {k_dim} vs {k_dim2}"
+    assert m % (n_tp * block_m) == 0, (
+        f"M={m} must divide into N_TP={n_tp} x block_m={block_m} tiles"
+    )
+    assert n % block_n == 0 and k_dim % block_k == 0
+
+    tiles_m = m // block_m
+    tiles_n = n // block_n
+    tiles_k = k_dim // block_k
+    per_rank_tiles = tiles_m // n_tp
+
+    def a_index(i, j, k):
+        i_log = _swizzle_m(i, rank, n_tp, tiles_m, swizzle)
+        return (i_log, k)
+
+    def b_index(i, j, k):
+        return (k, j)
+
+    def out_index(i, j, k):
+        i_log = _swizzle_m(i, rank, n_tp, tiles_m, swizzle)
+        dest = i_log // per_rank_tiles  # TileCoord + GetOutput of Alg. 1
+        local_i = i_log % per_rank_tiles
+        return (dest, local_i, j)
+
+    kernel = functools.partial(_gemm_rs_kernel, k_tiles=tiles_k)
+    scattered = pl.pallas_call(
+        kernel,
+        grid=(tiles_m, tiles_n, tiles_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), a_index),
+            pl.BlockSpec((block_k, block_n), b_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n), out_index),
+        out_shape=jax.ShapeDtypeStruct((n_tp, m // n_tp, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return scattered
+
+
+def gemm_rs_fused(a_shards, b_shards, *, swizzle: bool = True,
+                  block_m: int = 32, block_n: int = 32, block_k: int = 32,
+                  out_dtype=None):
+    """Full fused GEMM+ReduceScatter across all simulated ranks.
+
+    Runs the fused kernel on every rank, then performs the AlltoAll
+    transport and the local reduction (§3.1's decoupling). Returns the
+    per-rank [M/N_TP, N] ReduceScatter outputs.
+    """
+    n_tp = len(a_shards)
+    scattered = [
+        flux_gemm_rs(
+            a_shards[r], b_shards[r], rank=r, n_tp=n_tp,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            swizzle=swizzle,
+        )
+        for r in range(n_tp)
+    ]
+    received = ref.all_to_all_ref(scattered)
+    dt = out_dtype or a_shards[0].dtype
+    return [ref.local_reduce_ref(rx).astype(dt) for rx in received]

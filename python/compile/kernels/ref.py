@@ -1,0 +1,141 @@
+"""Pure-jnp reference oracles for the FLUX kernels.
+
+These are the ground truth every Pallas kernel (and the Rust numeric twin)
+is checked against. All collectives are expressed as explicit shard algebra
+over a list of per-rank arrays — "rank r" is element r of the list — so the
+algebraic identity (sharded == full computation) is testable on one host.
+
+Shapes follow the paper's Fig. 2 (Megatron MLP with sharded activations):
+
+  AG+GEMM   : x_r [M/N, K]   (M-sharded)   w_r [K, F/N]  (column shard)
+              y_r = all_gather(x) @ w_r                → [M, F/N]
+  GEMM+RS   : a_r [M, F/N]                 w_r [F/N, K] (row shard)
+              partial_r = a_r @ w_r        → [M, K]
+              out_r = sum_s partial_s[r-th M block]    → [M/N, K]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, out_dtype=None):
+    """Plain matmul with f32 accumulation — the `GEMM_non-split` of Eq. 1."""
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def all_gather_ref(shards, axis=0):
+    """AllGather over a list of per-rank shards → the full array.
+
+    Every rank receives the same concatenation; we return it once.
+    """
+    return jnp.concatenate(list(shards), axis=axis)
+
+
+def reduce_scatter_ref(partials, axis=0):
+    """ReduceScatter over per-rank full-size partials.
+
+    Returns a list: rank r gets the r-th block (along `axis`) of the
+    elementwise sum of all partials. Accumulates in f32 like the kernels.
+    """
+    n = len(partials)
+    total = partials[0].astype(jnp.float32)
+    for p in partials[1:]:
+        total = total + p.astype(jnp.float32)
+    size = total.shape[axis]
+    assert size % n == 0, f"axis {axis} of size {size} not divisible by {n}"
+    block = size // n
+    return [
+        jnp.take(total, jnp.arange(r * block, (r + 1) * block), axis=axis)
+        for r in range(n)
+    ]
+
+
+def all_to_all_ref(scattered):
+    """AlltoAll of the paper's decoupled ReduceScatter (§3.1).
+
+    `scattered[r]` is rank r's output laid out as [N, M/N, ...]: slot d is
+    the tile block rank r computed *for* destination d. After AlltoAll,
+    rank d holds [N, M/N, ...] where slot s came from source rank s.
+    """
+    n = len(scattered)
+    return [
+        jnp.stack([scattered[s][d] for s in range(n)], axis=0)
+        for d in range(n)
+    ]
+
+
+def local_reduce_ref(received):
+    """The local-reduction half of the decoupled ReduceScatter."""
+    return jnp.sum(received.astype(jnp.float32), axis=0)
+
+
+def gemm_rs_ref(a_shards, b_shards, out_dtype=None):
+    """Fused GEMM+ReduceScatter oracle.
+
+    a_shards[r]: [M, K_local], b_shards[r]: [K_local, N_out].
+    Returns a list of per-rank [M/N, N_out] RS outputs.
+    """
+    partials = [
+        gemm_ref(a, b, out_dtype=jnp.float32)
+        for a, b in zip(a_shards, b_shards)
+    ]
+    outs = reduce_scatter_ref(partials, axis=0)
+    dt = out_dtype or a_shards[0].dtype
+    return [o.astype(dt) for o in outs]
+
+
+def ag_gemm_ref(x_shards, w_locals, out_dtype=None):
+    """Fused AllGather+GEMM oracle.
+
+    x_shards[r]: [M/N, K], w_locals[r]: [K, N_local].
+    Returns a list of per-rank [M, N_local] outputs.
+    """
+    x_full = all_gather_ref(x_shards, axis=0)
+    return [gemm_ref(x_full, w, out_dtype=out_dtype) for w in w_locals]
+
+
+# ---------------------------------------------------------------------------
+# Tile bookkeeping twins (mirrored in rust/src/overlap/tiles.rs). These are
+# pure index math; tested for equivalence against the Rust side via the
+# golden file artifacts/golden_swizzle.json (emitted by aot.py).
+# ---------------------------------------------------------------------------
+
+def swizzle_order(num_tiles: int, rank: int, n_tp: int):
+    """FLUX tile-coordinate swizzling (§4.1).
+
+    Rank r starts its tile traversal at its *next* peer's block so that at
+    any instant the N ranks write to N different destination devices,
+    avoiding memory-controller contention (Fig. 7).
+    """
+    assert num_tiles % n_tp == 0
+    per = num_tiles // n_tp
+    start = ((rank + 1) % n_tp) * per
+    return [(start + i) % num_tiles for i in range(num_tiles)]
+
+
+def ring_comm_order(rank: int, n_tp: int):
+    """Host-side communication order on NVLink (§4.3): ring starting after
+    the local rank, e.g. rank 5 of 8 → [6, 7, 0, 1, 2, 3, 4]."""
+    return [(rank + 1 + i) % n_tp for i in range(n_tp - 1)]
+
+
+def tile_dest(tile_m: int, tiles_m: int, n_tp: int) -> int:
+    """Destination rank of an output row-tile in GEMM+ReduceScatter: the
+    owner of that M block after the scatter."""
+    assert tiles_m % n_tp == 0
+    return tile_m // (tiles_m // n_tp)
+
+
+def mlp_tp_ref(x_shards, w1_locals, w2_locals, act=None):
+    """The whole Fig.-2 MLP: AG+GEMM → activation → GEMM+RS.
+
+    x_shards[r]: [M/N, K]; w1_locals[r]: [K, F/N]; w2_locals[r]: [F/N, K].
+    Returns per-rank [M/N, K] outputs.
+    """
+    if act is None:
+        act = lambda v: jnp.where(v > 0, v, 0.0)  # ReLU default
+    h = ag_gemm_ref(x_shards, w1_locals, out_dtype=jnp.float32)
+    h = [act(hi) for hi in h]
+    return gemm_rs_ref(h, w2_locals, out_dtype=x_shards[0].dtype)

@@ -1,0 +1,326 @@
+"""L2: Megatron-style tensor-parallel transformer in JAX.
+
+This is the model whose TP communication FLUX overlaps. The sharding
+follows the paper's Fig. 2 (and Megatron-LM [24] for attention):
+
+  * attention: heads column-sharded across ranks (wqkv: [d, 3*d/N]),
+    output projection row-sharded (wo: [d/N, d]) → the per-rank output is
+    a *partial sum* that the coordinator combines (ReduceScatter+AllGather
+    == AllReduce), which is exactly where the fused GEMM+RS kernel plugs
+    in.
+  * MLP: w1 column-sharded ([d, ff/N], AG+GEMM), w2 row-sharded
+    ([ff/N, d], GEMM+RS).
+
+Everything here is build-time Python: `aot.py` lowers the per-rank partial
+functions to HLO text, and the Rust coordinator (rust/src/serving) runs
+them per rank and performs the collectives between them. `full_forward`
+(no TP) is the oracle the decomposed execution is checked against, both in
+pytest and — via exported artifacts — in Rust integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A (tiny) GPT-style decoder config.
+
+    `tiny()` is the config served end-to-end in examples/serve_e2e.rs; the
+    paper-scale GPT-3 175B / Llama-2 70B configs live in
+    rust/src/model/configs.rs where only their *cost* is needed.
+    """
+
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 8
+    n_layers: int = 4
+    d_ff: int = 1024
+    max_seq: int = 128
+    n_tp: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def heads_local(self) -> int:
+        assert self.n_heads % self.n_tp == 0
+        return self.n_heads // self.n_tp
+
+    @property
+    def hd_local(self) -> int:
+        """Per-rank width of the sharded attention projections."""
+        return self.heads_local * self.head_dim
+
+    @property
+    def ff_local(self) -> int:
+        assert self.d_ff % self.n_tp == 0
+        return self.d_ff // self.n_tp
+
+    @staticmethod
+    def tiny() -> "ModelConfig":
+        return ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Deterministic weight init (numpy PRNG so Rust tests can rely on the
+    exported .bin files being stable across runs)."""
+    rng = np.random.default_rng(seed)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def norm(*shape, scale=None):
+        s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return rng.normal(0.0, s, size=shape).astype(np.float32)
+
+    w = {
+        "embed": norm(v, d, scale=0.02),
+        "ln_f_g": np.ones(d, np.float32),
+        "ln_f_b": np.zeros(d, np.float32),
+    }
+    for l in range(cfg.n_layers):
+        w[f"l{l}.ln1_g"] = np.ones(d, np.float32)
+        w[f"l{l}.ln1_b"] = np.zeros(d, np.float32)
+        w[f"l{l}.wqkv"] = norm(d, 3 * d)
+        w[f"l{l}.wo"] = norm(d, d)
+        w[f"l{l}.ln2_g"] = np.ones(d, np.float32)
+        w[f"l{l}.ln2_b"] = np.zeros(d, np.float32)
+        w[f"l{l}.w1"] = norm(d, ff)
+        w[f"l{l}.w2"] = norm(ff, d)
+    return w
+
+
+def shard_layer(cfg: ModelConfig, w: dict, layer: int, rank: int) -> dict:
+    """Extract rank `rank`'s TP shard of one layer's weights.
+
+    wqkv is sharded per-projection (the q, k and v blocks are each column
+    sharded) so that rank r owns heads [r*hl, (r+1)*hl) of all three.
+    """
+    d = cfg.d_model
+    hl = cfg.hd_local
+    lo, hi = rank * hl, (rank + 1) * hl
+    wqkv = w[f"l{layer}.wqkv"]
+    q, k, v = wqkv[:, 0:d], wqkv[:, d:2 * d], wqkv[:, 2 * d:3 * d]
+    fl = cfg.ff_local
+    return {
+        "ln1_g": w[f"l{layer}.ln1_g"],
+        "ln1_b": w[f"l{layer}.ln1_b"],
+        "wqkv": np.concatenate([q[:, lo:hi], k[:, lo:hi], v[:, lo:hi]],
+                               axis=1),
+        "wo": w[f"l{layer}.wo"][lo:hi, :],
+        "ln2_g": w[f"l{layer}.ln2_g"],
+        "ln2_b": w[f"l{layer}.ln2_b"],
+        "w1": w[f"l{layer}.w1"][:, rank * fl:(rank + 1) * fl],
+        "w2": w[f"l{layer}.w2"][rank * fl:(rank + 1) * fl, :],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * jnp.power(x, 3))))
+
+
+def sin_pos_encoding(positions, d_model: int):
+    """Sinusoidal positions — computed, not learned, so the embed artifact
+    needs no extra weight tensor. positions: [...,] int32."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed(ids, positions, embed_w):
+    """Token + positional embedding. ids: [...,] int32."""
+    return embed_w[ids] + sin_pos_encoding(positions, embed_w.shape[1])
+
+
+def _attention(q, k, v, mask):
+    """q: [B, Hl, Sq, hd]; k, v: [B, Hl, Sk, hd]; mask: [B, 1, Sq, Sk]."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _split_heads(x, n_heads):
+    b, s, hw = x.shape
+    return x.reshape(b, s, n_heads, hw // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+# ---------------------------------------------------------------------------
+# Per-rank partial functions (what aot.py exports)
+# ---------------------------------------------------------------------------
+
+def attn_prefill_partial(cfg: ModelConfig, x, len_mask, ln_g, ln_b, wqkv,
+                         wo):
+    """Rank-local attention over a full prompt.
+
+    x: [B, S, d] (gathered input — every rank holds it, the AllGather
+    having been done by the coordinator), len_mask: [B, S] 1/0 validity.
+    Returns (partial [B, S, d], k_cache [B, S, hd_l], v_cache [B, S, hd_l]).
+    The partial is this rank's *summand* of the attention output: summing
+    over ranks == the row-parallel wo matmul's AllReduce.
+    """
+    b, s, d = x.shape
+    hl = cfg.hd_local
+    h = layer_norm(x, ln_g, ln_b)
+    qkv = jnp.matmul(h, wqkv, preferred_element_type=jnp.float32)
+    q, k, v = qkv[..., :hl], qkv[..., hl:2 * hl], qkv[..., 2 * hl:]
+    qh = _split_heads(q, cfg.heads_local)
+    kh = _split_heads(k, cfg.heads_local)
+    vh = _split_heads(v, cfg.heads_local)
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None]
+    valid = (len_mask[:, None, None, :] > 0)
+    out = _attention(qh, kh, vh, causal & valid)
+    partial = jnp.matmul(_merge_heads(out), wo,
+                         preferred_element_type=jnp.float32)
+    return partial, k, v
+
+
+def attn_decode_partial(cfg: ModelConfig, x, k_cache, v_cache, cache_len,
+                        ln_g, ln_b, wqkv, wo):
+    """Rank-local attention for one decode step with a KV cache.
+
+    x: [B, 1, d]; k_cache/v_cache: [B, Smax, hd_l]; cache_len: [B] int32 —
+    the number of valid cache positions *before* this token.
+    Returns (partial [B, 1, d], k_cache', v_cache') with the new token's
+    K/V written functionally at position cache_len.
+    """
+    b, _, d = x.shape
+    hl = cfg.hd_local
+    smax = k_cache.shape[1]
+    h = layer_norm(x, ln_g, ln_b)
+    qkv = jnp.matmul(h, wqkv, preferred_element_type=jnp.float32)
+    q, k, v = qkv[..., :hl], qkv[..., hl:2 * hl], qkv[..., 2 * hl:]
+
+    # Functional scatter of the new K/V at each sequence's cache_len.
+    pos = jnp.arange(smax)[None, :, None]                    # [1, Smax, 1]
+    at = (pos == cache_len[:, None, None])                   # [B, Smax, 1]
+    k_cache = jnp.where(at, k, k_cache)
+    v_cache = jnp.where(at, v, v_cache)
+
+    qh = _split_heads(q, cfg.heads_local)                    # [B,Hl,1,hd]
+    kh = _split_heads(k_cache, cfg.heads_local)              # [B,Hl,Smax,hd]
+    vh = _split_heads(v_cache, cfg.heads_local)
+    valid = (jnp.arange(smax)[None, None, None, :]
+             <= cache_len[:, None, None, None])              # incl. new tok
+    out = _attention(qh, kh, vh, valid)
+    partial = jnp.matmul(_merge_heads(out), wo,
+                         preferred_element_type=jnp.float32)
+    return partial, k_cache, v_cache
+
+
+def mlp_partial(cfg: ModelConfig, x, ln_g, ln_b, w1, w2):
+    """Rank-local MLP partial: LN → x@w1_local → gelu → @w2_local.
+
+    The w1 matmul is the AG+GEMM of Fig. 2 (x arrives gathered); the w2
+    matmul produces the partial that the GEMM+RS (+AG) combines.
+    x: [B, S, d]; w1: [d, ff_l]; w2: [ff_l, d] → [B, S, d].
+    """
+    del cfg
+    h = layer_norm(x, ln_g, ln_b)
+    h = jnp.matmul(h, w1, preferred_element_type=jnp.float32)
+    h = gelu(h)
+    return jnp.matmul(h, w2, preferred_element_type=jnp.float32)
+
+
+def lm_head(x, ln_g, ln_b, embed_w):
+    """Final LN + tied-embedding projection. x: [B, d] → logits [B, vocab]."""
+    h = layer_norm(x, ln_g, ln_b)
+    return jnp.matmul(h, embed_w.T, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full references (the oracles)
+# ---------------------------------------------------------------------------
+
+def full_forward(cfg: ModelConfig, w: dict, ids, len_mask):
+    """Non-TP full-model prefill → logits for every position.
+
+    ids: [B, S] int32; len_mask: [B, S]. Returns [B, S, vocab] f32.
+    """
+    b, s = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed(ids, positions, jnp.asarray(w["embed"]))
+    for l in range(cfg.n_layers):
+        # TP with N=1: a single "rank" holding the whole layer.
+        full = shard_full_layer(cfg, w, l)
+        a, _, _ = attn_prefill_partial(
+            _as_tp1(cfg), x, len_mask, *full[:4])
+        x = x + a
+        x = x + mlp_partial(_as_tp1(cfg), x, *full[4:])
+    return lm_head(x, jnp.asarray(w["ln_f_g"]), jnp.asarray(w["ln_f_b"]),
+                   jnp.asarray(w["embed"]))
+
+
+def shard_full_layer(cfg: ModelConfig, w: dict, layer: int):
+    """Layer weights as one un-sharded 'rank' (tuple in artifact order)."""
+    return (
+        jnp.asarray(w[f"l{layer}.ln1_g"]), jnp.asarray(w[f"l{layer}.ln1_b"]),
+        jnp.asarray(w[f"l{layer}.wqkv"]), jnp.asarray(w[f"l{layer}.wo"]),
+        jnp.asarray(w[f"l{layer}.ln2_g"]), jnp.asarray(w[f"l{layer}.ln2_b"]),
+        jnp.asarray(w[f"l{layer}.w1"]), jnp.asarray(w[f"l{layer}.w2"]),
+    )
+
+
+def _as_tp1(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, n_tp=1)
+
+
+def tp_forward(cfg: ModelConfig, w: dict, ids, len_mask):
+    """TP-decomposed prefill: per-rank partials + explicit AllReduce.
+
+    This is *exactly* the execution the Rust coordinator performs over the
+    exported artifacts, kept in Python so pytest can assert
+    tp_forward == full_forward before anything is exported.
+    """
+    b, s = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed(ids, positions, jnp.asarray(w["embed"]))
+    shards = [[shard_layer(cfg, w, l, r) for r in range(cfg.n_tp)]
+              for l in range(cfg.n_layers)]
+    for l in range(cfg.n_layers):
+        partials = [
+            attn_prefill_partial(
+                cfg, x, len_mask,
+                jnp.asarray(sh["ln1_g"]), jnp.asarray(sh["ln1_b"]),
+                jnp.asarray(sh["wqkv"]), jnp.asarray(sh["wo"]))[0]
+            for sh in shards[l]
+        ]
+        x = x + sum(partials)          # AllReduce == RS + AG
+        partials = [
+            mlp_partial(cfg, x,
+                        jnp.asarray(sh["ln2_g"]), jnp.asarray(sh["ln2_b"]),
+                        jnp.asarray(sh["w1"]), jnp.asarray(sh["w2"]))
+            for sh in shards[l]
+        ]
+        x = x + sum(partials)
+    return lm_head(x, jnp.asarray(w["ln_f_g"]), jnp.asarray(w["ln_f_b"]),
+                   jnp.asarray(w["embed"]))

@@ -1,0 +1,107 @@
+"""Artifact consistency: what aot.py exports must match what the Rust
+runtime expects (manifest structure, weight shapes, HLO text health,
+golden fixtures)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_has_all_model_artifacts():
+    m = manifest()
+    for name in ["embed_prefill", "embed_decode", "attn_prefill",
+                 "attn_decode", "mlp_prefill", "mlp_decode", "lm_head"]:
+        assert name in m["artifacts"], name
+        path = os.path.join(ART, m["artifacts"][name]["file"])
+        assert os.path.getsize(path) > 100, name
+
+
+def test_op_level_artifacts_per_rank():
+    m = manifest()
+    n_tp = m["op_level"]["n_tp"]
+    for r in range(n_tp):
+        assert f"flux_gemm_rs_r{r}" in m["artifacts"]
+        assert f"flux_ag_gemm_r{r}" in m["artifacts"]
+
+
+def test_no_elided_constants_in_hlo():
+    """as_hlo_text elides big constants as `constant({...})`, which the
+    Rust-side text parser cannot reconstruct — every such tensor must be
+    a runtime parameter instead."""
+    m = manifest()
+    for name, a in m["artifacts"].items():
+        with open(os.path.join(ART, a["file"])) as f:
+            text = f.read()
+        assert "constant({...})" not in text, (
+            f"{name} bakes an elided constant; pass it as an argument"
+        )
+
+
+def test_weight_files_match_declared_shapes():
+    m = manifest()
+    for name, w in m["weights"].items():
+        path = os.path.join(ART, w["file"])
+        n = int(np.prod(w["shape"]))
+        assert os.path.getsize(path) == 4 * n, (
+            f"{name}: {os.path.getsize(path)} bytes != 4*{n}"
+        )
+
+
+def test_weight_shards_reassemble():
+    """Rank shards of w1 must tile the full tensor (spot check l0)."""
+    from compile import model as M
+    m = manifest()
+    cfg = M.ModelConfig.tiny()
+    w_full = M.init_weights(cfg, seed=0)
+    parts = []
+    for r in range(m["config"]["n_tp"]):
+        meta = m["weights"][f"l0.r{r}.w1"]
+        arr = np.fromfile(os.path.join(ART, meta["file"]),
+                          dtype=np.float32).reshape(meta["shape"])
+        parts.append(arr)
+    np.testing.assert_array_equal(
+        np.concatenate(parts, axis=1), w_full["l0.w1"])
+
+
+def test_golden_prefill_matches_regenerated_model():
+    """golden_swizzle.json's prefill logits equal a fresh forward pass —
+    guards against stale goldens after model edits."""
+    import jax.numpy as jnp
+    from compile import model as M
+    with open(os.path.join(ART, "golden_swizzle.json")) as f:
+        g = json.load(f)["prefill"]
+    cfg = M.ModelConfig.tiny()
+    w = M.init_weights(cfg, seed=0)
+    ids = np.asarray(g["ids"], np.int32)
+    lens = np.asarray(g["lens"])
+    seq = ids.shape[1]
+    mask = (np.arange(seq)[None, :] < lens[:, None]).astype(np.float32)
+    logits = M.full_forward(cfg, w, jnp.asarray(ids), jnp.asarray(mask))
+    for b in range(ids.shape[0]):
+        got = np.asarray(logits)[b, int(lens[b]) - 1]
+        want = np.asarray(g["last_logits"][b], np.float32)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_manifest_config_consistent_with_tiny_model():
+    from compile import model as M
+    cfg = M.ModelConfig.tiny()
+    c = manifest()["config"]
+    assert c["d_model"] == cfg.d_model
+    assert c["n_tp"] == cfg.n_tp
+    assert c["hd_local"] == cfg.hd_local
+    assert c["ff_local"] == cfg.ff_local

@@ -1,0 +1,247 @@
+"""L1 correctness: Pallas fused kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/ranks; every property asserts allclose
+against ref.py. These are the CORE correctness signal for the kernels the
+whole stack is built on.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels as K
+from compile.kernels import ref
+
+HYP = dict(deadline=None, max_examples=20,
+           suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(0.0, 1.0, size=shape)
+    return jnp.asarray(x.astype(np.float32)).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+def assert_close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# GEMM + ReduceScatter
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(
+    n_tp=st.sampled_from([2, 4]),
+    m_tiles_per_rank=st.integers(1, 3),
+    k_tiles=st.integers(1, 3),
+    n_tiles=st.integers(1, 3),
+    swizzle=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_rs_matches_ref(n_tp, m_tiles_per_rank, k_tiles, n_tiles,
+                             swizzle, dtype, seed):
+    block = 16
+    m = n_tp * m_tiles_per_rank * block
+    k_local = k_tiles * block
+    n = n_tiles * block
+    rng = np.random.default_rng(seed)
+    a = [rand(rng, (m, k_local), dtype) for _ in range(n_tp)]
+    b = [rand(rng, (k_local, n), dtype) for _ in range(n_tp)]
+    got = K.gemm_rs_fused(a, b, swizzle=swizzle,
+                          block_m=block, block_n=block, block_k=block)
+    want = ref.gemm_rs_ref(a, b)
+    assert len(got) == n_tp
+    for g, w in zip(got, want):
+        assert g.shape == (m // n_tp, n)
+        assert_close(g, w, dtype)
+
+
+def test_gemm_rs_swizzle_is_numerically_invisible():
+    """Swizzling permutes tile *traversal*, never values (§4.1)."""
+    rng = np.random.default_rng(3)
+    a = [rand(rng, (128, 32), jnp.float32) for _ in range(4)]
+    b = [rand(rng, (32, 64), jnp.float32) for _ in range(4)]
+    on = K.gemm_rs_fused(a, b, swizzle=True)
+    off = K.gemm_rs_fused(a, b, swizzle=False)
+    for x, y in zip(on, off):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_gemm_rs_scattered_layout():
+    """Slot d of rank r's scattered output must equal rows [d*M/N,(d+1)*M/N)
+    of rank r's full partial — the AlltoAll pre-image (Alg. 1)."""
+    rng = np.random.default_rng(4)
+    n_tp, m, kl, n = 4, 128, 32, 64
+    a = [rand(rng, (m, kl), jnp.float32) for _ in range(n_tp)]
+    b = [rand(rng, (kl, n), jnp.float32) for _ in range(n_tp)]
+    per = m // n_tp
+    for r in range(n_tp):
+        scattered = K.flux_gemm_rs(a[r], b[r], rank=r, n_tp=n_tp)
+        partial = ref.gemm_ref(a[r], b[r], out_dtype=jnp.float32)
+        for d in range(n_tp):
+            np.testing.assert_allclose(
+                np.asarray(scattered[d]),
+                np.asarray(partial[d * per:(d + 1) * per]),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_rs_rejects_indivisible_m():
+    rng = np.random.default_rng(0)
+    a = rand(rng, (96, 32), jnp.float32)   # 96 rows, n_tp=4, block 32 → 3 tiles
+    b = rand(rng, (32, 64), jnp.float32)
+    with pytest.raises(AssertionError):
+        K.flux_gemm_rs(a, b, rank=0, n_tp=4)
+
+
+# ---------------------------------------------------------------------------
+# AllGather + GEMM
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(
+    n_tp=st.sampled_from([2, 4]),
+    m_tiles_per_rank=st.integers(1, 3),
+    k_tiles=st.integers(1, 3),
+    n_tiles=st.integers(1, 3),
+    swizzle=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ag_gemm_matches_ref(n_tp, m_tiles_per_rank, k_tiles, n_tiles,
+                             swizzle, dtype, seed):
+    block = 16
+    m = n_tp * m_tiles_per_rank * block
+    k = k_tiles * block
+    n_local = n_tiles * block
+    rng = np.random.default_rng(seed)
+    x = [rand(rng, (m // n_tp, k), dtype) for _ in range(n_tp)]
+    w = [rand(rng, (k, n_local), dtype) for _ in range(n_tp)]
+    got = K.ag_gemm_fused(x, w, swizzle=swizzle,
+                          block_m=block, block_n=block, block_k=block)
+    want = ref.ag_gemm_ref(x, w)
+    for g, ww in zip(got, want):
+        assert g.shape == (m, n_local)
+        assert_close(g, ww, dtype)
+
+
+def test_ag_gemm_equals_plain_gemm_on_gathered_input():
+    """The fused kernel is a plain GEMM once data has arrived — fusion must
+    not change the math (§3.2)."""
+    rng = np.random.default_rng(5)
+    x = [rand(rng, (32, 64), jnp.float32) for _ in range(4)]
+    w = rand(rng, (64, 32), jnp.float32)
+    agg = K.assemble_agg(x, 0)
+    got = K.flux_ag_gemm(agg, w, rank=2, n_tp=4)
+    want = ref.gemm_ref(agg, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Collective oracles are themselves self-consistent
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([2, 4, 8]), rows=st.integers(1, 4),
+                  cols=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_rs_then_ag_is_allreduce(n_tp, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    parts = [rand(rng, (rows * n_tp, cols), jnp.float32)
+             for _ in range(n_tp)]
+    rs = ref.reduce_scatter_ref(parts, axis=0)
+    back = ref.all_gather_ref(rs, axis=0)
+    want = sum(np.asarray(p, np.float64) for p in parts)
+    np.testing.assert_allclose(np.asarray(back), want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([2, 4]), rows=st.integers(1, 3),
+                  seed=st.integers(0, 2**31 - 1))
+def test_alltoall_plus_reduce_equals_reduce_scatter(n_tp, rows, seed):
+    """The §3.1 decoupling: RS == AlltoAll ∘ local-reduce."""
+    rng = np.random.default_rng(seed)
+    m, cols = rows * n_tp * 4, 8
+    partials = [rand(rng, (m, cols), jnp.float32) for _ in range(n_tp)]
+    # scattered[r][d] = rank r's partial rows owned by d
+    per = m // n_tp
+    scattered = [
+        jnp.stack([p[d * per:(d + 1) * per] for d in range(n_tp)])
+        for p in partials
+    ]
+    received = ref.all_to_all_ref(scattered)
+    via_a2a = [ref.local_reduce_ref(rx) for rx in received]
+    direct = ref.reduce_scatter_ref(partials, axis=0)
+    for x, y in zip(via_a2a, direct):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Tile bookkeeping (swizzle / ring / schedule)
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([2, 4, 8]),
+                  per=st.integers(1, 8), rank=st.integers(0, 7))
+def test_swizzle_is_a_permutation(n_tp, per, rank):
+    rank %= n_tp
+    order = ref.swizzle_order(n_tp * per, rank, n_tp)
+    assert sorted(order) == list(range(n_tp * per))
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([2, 4, 8]), per=st.integers(1, 8))
+def test_swizzle_ranks_never_collide(n_tp, per):
+    """At every traversal step the N ranks target N distinct destination
+    devices — the §4.1 contention-avoidance invariant (Fig. 7)."""
+    num = n_tp * per
+    orders = [ref.swizzle_order(num, r, n_tp) for r in range(n_tp)]
+    for step in range(num):
+        dests = {ref.tile_dest(orders[r][step], num, n_tp)
+                 for r in range(n_tp)}
+        assert len(dests) == n_tp
+
+
+def test_ring_order_paper_example():
+    """§4.3: rank 5 of 8 communicates in order 6,7,0,1,2,3,4."""
+    assert ref.ring_comm_order(5, 8) == [6, 7, 0, 1, 2, 3, 4]
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([2, 4, 8]),
+                  tiles_per_rank=st.sampled_from([1, 2, 4]),
+                  rank=st.integers(0, 7), pull=st.booleans())
+def test_comm_schedule_covers_all_remote_rows(n_tp, tiles_per_rank, rank,
+                                              pull):
+    rank %= n_tp
+    rows_per_rank = tiles_per_rank * 16
+    m = n_tp * rows_per_rank
+    sched = K.comm_tile_schedule(m, rank, n_tp, 16, pull=pull)
+    covered = set()
+    for t in sched:
+        peer = t["src"] if pull else t["dst"]
+        assert peer != rank, "local rows must not be transferred"
+        rows = range(t["row0"], t["row0"] + t["rows"])
+        assert all(r0 // rows_per_rank == peer for r0 in rows), \
+            "tile rows must lie inside the peer's shard"
+        assert covered.isdisjoint(rows), "no row transferred twice"
+        covered.update(rows)
+    want = set(range(m)) - set(range(rank * rows_per_rank,
+                                     (rank + 1) * rows_per_rank))
+    assert covered == want
+
+
+def test_comm_schedule_signal_ids_unique():
+    sched = K.comm_tile_schedule(256, 3, 8, 16)
+    sigs = [t["signal"] for t in sched]
+    assert len(sigs) == len(set(sigs))

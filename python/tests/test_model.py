@@ -1,0 +1,186 @@
+"""L2 correctness: the TP decomposition of the transformer.
+
+The central claim: per-rank partial executions + explicit collectives
+produce bit-comparable results to the un-sharded model — this is the
+algebra the whole FLUX system (and the Rust coordinator's execution plan)
+relies on.
+"""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+HYP = dict(deadline=None, max_examples=8,
+           suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+CFG = M.ModelConfig.tiny()
+W = M.init_weights(CFG, seed=0)
+
+
+def _ids(rng, b, s):
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)), jnp.int32)
+
+
+def test_tp_forward_matches_full_forward():
+    rng = np.random.default_rng(1)
+    ids = _ids(rng, 2, 16)
+    mask = jnp.ones((2, 16), jnp.float32)
+    full = M.full_forward(CFG, W, ids, mask)
+    tp = M.tp_forward(CFG, W, ids, mask)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tp),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.settings(**HYP)
+@hypothesis.given(n_tp=st.sampled_from([1, 2, 4, 8]),
+                  seed=st.integers(0, 2**31 - 1))
+def test_tp_degree_is_numerically_irrelevant(n_tp, seed):
+    """Changing N_TP must never change the math, only the partitioning."""
+    cfg = dataclasses.replace(CFG, n_tp=n_tp)
+    rng = np.random.default_rng(seed)
+    ids = _ids(rng, 2, 8)
+    mask = jnp.ones((2, 8), jnp.float32)
+    full = M.full_forward(cfg, W, ids, mask)
+    tp = M.tp_forward(cfg, W, ids, mask)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tp),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_attn_partials_sum_to_full_attention():
+    """Summing rank partials == the row-parallel AllReduce (Megatron)."""
+    rng = np.random.default_rng(2)
+    b, s, d = 2, 16, CFG.d_model
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    mask = jnp.ones((b, s), jnp.float32)
+    full_w = M.shard_full_layer(CFG, W, 0)
+    want, _, _ = M.attn_prefill_partial(
+        dataclasses.replace(CFG, n_tp=1), x, mask, *full_w[:4])
+    parts = []
+    for r in range(CFG.n_tp):
+        sh = M.shard_layer(CFG, W, 0, r)
+        p, _, _ = M.attn_prefill_partial(
+            CFG, x, mask,
+            jnp.asarray(sh["ln1_g"]), jnp.asarray(sh["ln1_b"]),
+            jnp.asarray(sh["wqkv"]), jnp.asarray(sh["wo"]))
+        parts.append(p)
+    np.testing.assert_allclose(np.asarray(sum(parts)), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_partials_sum_to_full_mlp():
+    rng = np.random.default_rng(3)
+    b, s, d = 2, 8, CFG.d_model
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    full_w = M.shard_full_layer(CFG, W, 1)
+    want = M.mlp_partial(dataclasses.replace(CFG, n_tp=1), x, *full_w[4:])
+    parts = []
+    for r in range(CFG.n_tp):
+        sh = M.shard_layer(CFG, W, 1, r)
+        parts.append(M.mlp_partial(
+            CFG, x, jnp.asarray(sh["ln2_g"]), jnp.asarray(sh["ln2_b"]),
+            jnp.asarray(sh["w1"]), jnp.asarray(sh["w2"])))
+    np.testing.assert_allclose(np.asarray(sum(parts)), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_matches_prefill_extension():
+    """Prefill s tokens, decode token s+1 == prefill s+1 tokens.
+
+    This is the KV-cache correctness invariant the serving runtime needs.
+    """
+    rng = np.random.default_rng(4)
+    b, s = 2, 8
+    ids = _ids(rng, b, s + 1)
+    mask_full = jnp.ones((b, s + 1), jnp.float32)
+    want = M.full_forward(CFG, W, ids, mask_full)[:, s, :]  # logits@last
+
+    # Manual prefill of s tokens + one decode step, TP-decomposed.
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = M.embed(ids[:, :s], positions, jnp.asarray(W["embed"]))
+    mask = jnp.ones((b, s), jnp.float32)
+    smax = CFG.max_seq
+    caches = {}
+    for l in range(CFG.n_layers):
+        parts = []
+        for r in range(CFG.n_tp):
+            sh = M.shard_layer(CFG, W, l, r)
+            p, k, v = M.attn_prefill_partial(
+                CFG, x, mask,
+                jnp.asarray(sh["ln1_g"]), jnp.asarray(sh["ln1_b"]),
+                jnp.asarray(sh["wqkv"]), jnp.asarray(sh["wo"]))
+            parts.append(p)
+            kc = jnp.zeros((b, smax, CFG.hd_local), jnp.float32)
+            vc = jnp.zeros_like(kc)
+            kc = kc.at[:, :s].set(k)
+            vc = vc.at[:, :s].set(v)
+            caches[(l, r)] = (kc, vc)
+        x = x + sum(parts)
+        parts = []
+        for r in range(CFG.n_tp):
+            sh = M.shard_layer(CFG, W, l, r)
+            parts.append(M.mlp_partial(
+                CFG, x, jnp.asarray(sh["ln2_g"]), jnp.asarray(sh["ln2_b"]),
+                jnp.asarray(sh["w1"]), jnp.asarray(sh["w2"])))
+        x = x + sum(parts)
+
+    # Decode token at position s.
+    pos = jnp.full((b,), s, jnp.int32)
+    x1 = M.embed(ids[:, s], pos, jnp.asarray(W["embed"]))[:, None, :]
+    cl = jnp.full((b,), s, jnp.int32)
+    for l in range(CFG.n_layers):
+        parts = []
+        for r in range(CFG.n_tp):
+            sh = M.shard_layer(CFG, W, l, r)
+            kc, vc = caches[(l, r)]
+            p, kc, vc = M.attn_decode_partial(
+                CFG, x1, kc, vc, cl,
+                jnp.asarray(sh["ln1_g"]), jnp.asarray(sh["ln1_b"]),
+                jnp.asarray(sh["wqkv"]), jnp.asarray(sh["wo"]))
+            caches[(l, r)] = (kc, vc)
+            parts.append(p)
+        x1 = x1 + sum(parts)
+        parts = []
+        for r in range(CFG.n_tp):
+            sh = M.shard_layer(CFG, W, l, r)
+            parts.append(M.mlp_partial(
+                CFG, x1, jnp.asarray(sh["ln2_g"]), jnp.asarray(sh["ln2_b"]),
+                jnp.asarray(sh["w1"]), jnp.asarray(sh["w2"])))
+        x1 = x1 + sum(parts)
+    got = M.lm_head(x1[:, 0, :], jnp.asarray(W["ln_f_g"]),
+                    jnp.asarray(W["ln_f_b"]), jnp.asarray(W["embed"]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_variable_lengths_are_masked():
+    """Padding positions must not influence valid positions' logits."""
+    rng = np.random.default_rng(5)
+    b, s = 2, 12
+    ids = _ids(rng, b, s)
+    lens = [7, 12]
+    mask = jnp.asarray(
+        (np.arange(s)[None, :] < np.array(lens)[:, None]).astype(np.float32))
+    out = M.full_forward(CFG, W, ids, mask)
+    # Changing tokens beyond the length must not change logits before it.
+    ids2 = ids.at[0, 7:].set((ids[0, 7:] + 3) % CFG.vocab)
+    out2 = M.full_forward(CFG, W, ids2, mask)
+    np.testing.assert_allclose(np.asarray(out[0, :7]),
+                               np.asarray(out2[0, :7]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharding_partitions_weights_exactly():
+    """Shards tile the full tensors: no overlap, nothing dropped."""
+    d, ff = CFG.d_model, CFG.d_ff
+    sh = [M.shard_layer(CFG, W, 0, r) for r in range(CFG.n_tp)]
+    w1 = np.concatenate([np.asarray(s["w1"]) for s in sh], axis=1)
+    np.testing.assert_array_equal(w1, W["l0.w1"])
+    w2 = np.concatenate([np.asarray(s["w2"]) for s in sh], axis=0)
+    np.testing.assert_array_equal(w2, W["l0.w2"])
+    wo = np.concatenate([np.asarray(s["wo"]) for s in sh], axis=0)
+    np.testing.assert_array_equal(wo, W["l0.wo"])

@@ -1,0 +1,19 @@
+//! Bench for Fig. 4: PyTorch (non-overlap) vs TransformerEngine on
+//! 8xH800 NVLink — regenerates the figure's series and times the two
+//! simulators.
+use flux::cost::arch::H800_NVLINK;
+use flux::figures;
+use flux::overlap::{baseline, medium};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig04());
+    let mut b = Bench::new();
+    let p = figures::ag_problem(4096, 8);
+    b.run("baseline::simulate AG m=4096 H800", || {
+        baseline::simulate(&H800_NVLINK, &p)
+    });
+    b.run("medium::simulate   AG m=4096 H800", || {
+        medium::simulate(&H800_NVLINK, &p, 7)
+    });
+}

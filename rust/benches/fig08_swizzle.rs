@@ -1,0 +1,17 @@
+//! Bench for Fig. 8: tile-coordinate swizzling on/off (8xA100 NVLink).
+use flux::cost::arch::A100_NVLINK;
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig08());
+    let mut b = Bench::new();
+    let p = figures::rs_problem(8192, 8);
+    for (name, sw) in [("swizzled", true), ("naive", false)] {
+        let cfg = FluxConfig { swizzle: sw, ..Default::default() };
+        b.run(&format!("flux RS m=8192 {name}"), || {
+            simulate(&A100_NVLINK, &p, &cfg, 7)
+        });
+    }
+}

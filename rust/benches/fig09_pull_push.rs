@@ -1,0 +1,17 @@
+//! Bench for Fig. 9: pull- vs push-based AllGather transfers.
+use flux::cost::arch::A100_PCIE;
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig09());
+    let mut b = Bench::new();
+    let p = figures::ag_problem(4096, 8);
+    for (name, pull) in [("pull", true), ("push", false)] {
+        let cfg = FluxConfig { pull, comm_rows: 256, ..Default::default() };
+        b.run(&format!("flux AG m=4096 PCIe {name}"), || {
+            simulate(&A100_PCIE, &p, &cfg, 7)
+        });
+    }
+}

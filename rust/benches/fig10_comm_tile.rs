@@ -1,0 +1,17 @@
+//! Bench for Fig. 10: communication tile size sweep.
+use flux::cost::arch::A100_NVLINK;
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig10());
+    let mut b = Bench::new();
+    let p = figures::ag_problem(8192, 8);
+    for rows in [1024usize, 128] {
+        let cfg = FluxConfig { comm_rows: rows, ..Default::default() };
+        b.run(&format!("flux AG m=8192 comm_rows={rows}"), || {
+            simulate(&A100_NVLINK, &p, &cfg, 7)
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Bench for Figs. 11-13: the op-level three-way comparison on all
+//! three clusters (ECT + overlap efficiency per Eq. 1/2).
+use flux::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+use flux::figures;
+use flux::util::bench::Bench;
+
+fn main() {
+    for cl in [&A100_PCIE, &A100_NVLINK, &H800_NVLINK] {
+        println!("\n### {} ###", cl.name);
+        figures::print_table(&figures::fig11_13(cl));
+    }
+    let mut b = Bench::new();
+    let p = figures::rs_problem(4096, 8);
+    b.run("tuner::tune RS m=4096 (full search)", || {
+        flux::tuner::tune(&A100_NVLINK, &p, 7)
+    });
+}

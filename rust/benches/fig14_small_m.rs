@@ -1,0 +1,14 @@
+//! Bench for Fig. 14: small-m (decoding) shapes on all clusters.
+use flux::cost::arch::H800_NVLINK;
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig14());
+    let mut b = Bench::new();
+    let p = figures::rs_problem(64, 8);
+    b.run("flux RS m=64 H800 (narrow-store cliff)", || {
+        simulate(&H800_NVLINK, &p, &FluxConfig::default(), 7)
+    });
+}

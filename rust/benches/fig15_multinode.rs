@@ -1,0 +1,15 @@
+//! Bench for Fig. 15: 16-way TP over two nodes.
+use flux::cost::arch::H800_NVLINK;
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::overlap::Problem;
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig15());
+    let mut b = Bench::new();
+    let p = Problem::ag(8192, 49152, 12288, 16);
+    b.run("flux AG m=8192 16-way (2 nodes)", || {
+        simulate(&H800_NVLINK, &p, &FluxConfig::for_cluster(&H800_NVLINK), 7)
+    });
+}

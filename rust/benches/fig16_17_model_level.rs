@@ -1,0 +1,18 @@
+//! Bench for Figs. 1, 16 and 17: communication portions and model-level
+//! training / prefill / decoding comparisons.
+use flux::cost::arch::A100_PCIE;
+use flux::figures;
+use flux::model::configs::GPT3_175B;
+use flux::parallel::{train_step_ns, Layout, Method};
+use flux::util::bench::Bench;
+
+fn main() {
+    figures::print_table(&figures::fig01());
+    figures::print_table(&figures::fig16());
+    figures::print_table(&figures::fig17());
+    let mut b = Bench::new();
+    b.run("train_step_ns GPT-3 175B Flux 128xA100-PCIe", || {
+        train_step_ns(&A100_PCIE, &GPT3_175B, &Layout::PAPER_TRAINING,
+                      16, 2048, 2048, Method::Flux, 7)
+    });
+}

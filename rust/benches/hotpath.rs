@@ -1,0 +1,79 @@
+//! L3 hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//! the DES primitives, the tile scheduler, the fused-kernel simulators,
+//! and the serving scheduler — the code the coordinator runs per op /
+//! per request.
+use flux::cost::arch::{A100_NVLINK, A100_PCIE};
+use flux::figures;
+use flux::overlap::flux::{simulate, FluxConfig};
+use flux::overlap::tiles;
+use flux::serving::kvcache::KvCacheManager;
+use flux::serving::{Batcher, BatcherConfig, Request};
+use flux::sim::cluster::Cluster;
+use flux::sim::resources::Pool;
+use flux::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.run("pool 6144-tile wave schedule", || {
+        let mut p = Pool::new(216);
+        let mut end = 0.0f64;
+        for _ in 0..6144 {
+            end = end.max(p.acquire(0.0, 100.0).1);
+        }
+        end
+    });
+
+    b.run("swizzle_order 64 tiles", || {
+        tiles::swizzle_order(64, 3, 8)
+    });
+
+    b.run("comm_schedule m=8192 rows=128", || {
+        tiles::comm_schedule(8192, 3, 8, 128, true)
+    });
+
+    let p_rs = figures::rs_problem(8192, 8);
+    b.run("flux RS sim m=8192 NVLink (end-to-end op)", || {
+        simulate(&A100_NVLINK, &p_rs, &FluxConfig::default(), 7)
+    });
+    let p_ag = figures::ag_problem(8192, 8);
+    b.run("flux AG sim m=8192 PCIe ring-relay", || {
+        simulate(&A100_PCIE, &p_ag,
+                 &FluxConfig::for_cluster(&A100_PCIE), 7)
+    });
+
+    b.run("cluster construction (8 ranks)", || {
+        Cluster::new(&A100_NVLINK, 8, 7)
+    });
+
+    b.run("batcher admit+decode 64 requests", || {
+        let mut batcher = Batcher::new(BatcherConfig {
+            max_prefill_batch: 8,
+            max_decode_batch: 8,
+            max_prompt: 64,
+            max_seq: 128,
+            });
+        let mut kv = KvCacheManager::new(1024, 16);
+        for i in 0..64u64 {
+            batcher.submit(Request::new(i, 0.0, vec![1; 16], 4));
+        }
+        let mut done = 0;
+        while !batcher.all_done() && done < 10_000 {
+            match batcher.next_work(&mut kv).unwrap() {
+                flux::serving::batcher::Work::Prefill(ids) => {
+                    let toks = vec![1i32; ids.len()];
+                    batcher.complete_decode(&ids, &toks, &mut kv, 1.0)
+                        .unwrap();
+                }
+                flux::serving::batcher::Work::Decode(ids) => {
+                    let toks = vec![1i32; ids.len()];
+                    batcher.complete_decode(&ids, &toks, &mut kv, 1.0)
+                        .unwrap();
+                }
+                flux::serving::batcher::Work::Idle => break,
+            }
+            done += 1;
+        }
+        done
+    });
+}

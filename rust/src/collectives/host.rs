@@ -1,0 +1,240 @@
+//! Numeric collectives over per-rank host buffers.
+
+use anyhow::{ensure, Result};
+
+/// A row-major matrix on one simulated rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Rows [r0, r1) as a new matrix.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Blocked matmul with f32 accumulation: C = A @ B.
+/// The numeric GEMM substrate for tile-level twins and tests.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    // i-k-j loop order: streams B rows, vectorizes the j loop.
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let aik = a.at(i, kk);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// AllGather along rows: every rank ends with the concatenation.
+pub fn all_gather(shards: &[Mat]) -> Result<Vec<Mat>> {
+    ensure!(!shards.is_empty());
+    let cols = shards[0].cols;
+    ensure!(shards.iter().all(|s| s.cols == cols), "ragged cols");
+    let rows: usize = shards.iter().map(|s| s.rows).sum();
+    let mut full = Mat::zeros(rows, cols);
+    let mut r0 = 0;
+    for s in shards {
+        full.data[r0 * cols..(r0 + s.rows) * cols]
+            .copy_from_slice(&s.data);
+        r0 += s.rows;
+    }
+    Ok(vec![full; shards.len()])
+}
+
+/// ReduceScatter along rows: rank r gets the r-th row block of the sum.
+pub fn reduce_scatter(partials: &[Mat]) -> Result<Vec<Mat>> {
+    ensure!(!partials.is_empty());
+    let n = partials.len();
+    let (rows, cols) = (partials[0].rows, partials[0].cols);
+    ensure!(
+        partials.iter().all(|p| p.rows == rows && p.cols == cols),
+        "ragged partials"
+    );
+    ensure!(rows % n == 0, "rows {rows} not divisible by n {n}");
+    let block = rows / n;
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut m = Mat::zeros(block, cols);
+        for p in partials {
+            for i in 0..block {
+                for j in 0..cols {
+                    *m.at_mut(i, j) += p.at(r * block + i, j);
+                }
+            }
+        }
+        out.push(m);
+    }
+    Ok(out)
+}
+
+/// AllReduce = ReduceScatter + AllGather.
+pub fn all_reduce(partials: &[Mat]) -> Result<Vec<Mat>> {
+    let rs = reduce_scatter(partials)?;
+    all_gather(&rs)
+}
+
+/// AlltoAll of the §3.1 decoupling: `scattered[r][d]` is what rank r
+/// computed for destination d; returns `received[d][s]` = slot from
+/// source s.
+pub fn all_to_all(scattered: &[Vec<Mat>]) -> Result<Vec<Vec<Mat>>> {
+    let n = scattered.len();
+    ensure!(scattered.iter().all(|s| s.len() == n), "ragged alltoall");
+    Ok((0..n)
+        .map(|d| (0..n).map(|s| scattered[s][d].clone()).collect())
+        .collect())
+}
+
+/// The local-reduction half of the decoupled ReduceScatter.
+pub fn local_reduce(received: &[Mat]) -> Mat {
+    let mut acc = received[0].clone();
+    for m in &received[1..] {
+        for (a, b) in acc.data.iter_mut().zip(&m.data) {
+            *a += b;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::prng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Mat::zeros(3, 3);
+        for i in 0..3 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        let mut rng = Rng::new(1);
+        let a = rand_mat(&mut rng, 3, 3);
+        assert_eq!(matmul(&a, &eye), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] @ ones = [[3,3],[7,7]]
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ones = Mat::from_vec(2, 2, vec![1.0; 4]);
+        assert_eq!(matmul(&a, &ones).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn rs_then_ag_is_allreduce() {
+        forall(16, 0xAB, |rng| {
+            let n = [2usize, 4][rng.below(2) as usize];
+            let rows = n * rng.range(1, 4) as usize;
+            let cols = rng.range(1, 6) as usize;
+            let parts: Vec<Mat> =
+                (0..n).map(|_| rand_mat(rng, rows, cols)).collect();
+            let ar = all_reduce(&parts).unwrap();
+            // Direct sum.
+            let mut want = Mat::zeros(rows, cols);
+            for p in &parts {
+                for (w, v) in want.data.iter_mut().zip(&p.data) {
+                    *w += v;
+                }
+            }
+            for m in &ar {
+                assert!(m.max_abs_diff(&want) < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn alltoall_then_reduce_equals_reduce_scatter() {
+        forall(16, 0xCD, |rng| {
+            let n = [2usize, 4][rng.below(2) as usize];
+            let block = rng.range(1, 4) as usize;
+            let rows = n * block;
+            let cols = rng.range(1, 5) as usize;
+            let parts: Vec<Mat> =
+                (0..n).map(|_| rand_mat(rng, rows, cols)).collect();
+            // scattered[r][d] = rank r's rows owned by d.
+            let scattered: Vec<Vec<Mat>> = parts
+                .iter()
+                .map(|p| {
+                    (0..n)
+                        .map(|d| p.row_slice(d * block, (d + 1) * block))
+                        .collect()
+                })
+                .collect();
+            let recv = all_to_all(&scattered).unwrap();
+            let via = recv.iter().map(|r| local_reduce(r));
+            let direct = reduce_scatter(&parts).unwrap();
+            for (a, b) in via.zip(&direct) {
+                assert!(a.max_abs_diff(b) < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let shards = vec![
+            Mat::from_vec(1, 2, vec![1.0, 2.0]),
+            Mat::from_vec(1, 2, vec![3.0, 4.0]),
+        ];
+        let full = all_gather(&shards).unwrap();
+        assert_eq!(full.len(), 2);
+        assert_eq!(full[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(full[0], full[1]);
+    }
+
+    #[test]
+    fn reduce_scatter_rejects_indivisible() {
+        let parts = vec![Mat::zeros(3, 2), Mat::zeros(3, 2)];
+        assert!(reduce_scatter(&parts).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Host-buffer collectives: the numeric substrate standing in for NCCL.
+//!
+//! Every collective operates on a `Vec` of per-rank row-major f32
+//! matrices — "rank r's memory" is element r. The serving coordinator
+//! uses these to combine per-rank PJRT partials, and the overlap numeric
+//! twins are validated against them.
+
+pub mod host;
+pub mod timed;
+
+pub use host::*;

@@ -1,0 +1,199 @@
+//! GPU architecture + cluster constants (§5 of the paper).
+//!
+//! The three evaluation clusters, translated into the parameters the
+//! simulator needs. Absolute numbers are public-spec or published-bench
+//! values; the *ratios* between compute and interconnect speed are what
+//! the reproduction depends on (DESIGN.md §2).
+
+/// One GPU generation's compute/memory profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub sms: usize,
+    /// Resident GEMM thread blocks per SM (occupancy for 128x128 tiles).
+    /// >1 is what lets spinning blocks (Alg. 2) hide latency.
+    pub blocks_per_sm: usize,
+    /// Dense bf16 tensor-core peak, TFLOP/s.
+    pub peak_bf16_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Sustained fraction of peak a well-tuned large GEMM achieves
+    /// (cuBLAS/CUTLASS reality, not marketing).
+    pub gemm_eff: f64,
+    /// Kernel launch overhead, microseconds.
+    pub launch_us: f64,
+    /// Additional per-kernel *gap* when many small kernels are enqueued on
+    /// busy streams (the unpredictable timing §2.2 complains about); the
+    /// simulator multiplies this by a seeded log-normal jitter.
+    pub stream_gap_us: f64,
+    /// Store-efficiency penalty applied when an epilogue writes rows
+    /// narrower than the minimum efficient store (TMA on Hopper): the
+    /// §6 m=64 ReduceScatter cliff.
+    pub min_store_rows: usize,
+    pub narrow_store_penalty: f64,
+}
+
+pub const A100: GpuArch = GpuArch {
+    name: "A100",
+    sms: 108,
+    blocks_per_sm: 2,
+    peak_bf16_tflops: 312.0,
+    hbm_gbps: 2039.0,
+    gemm_eff: 0.80,
+    launch_us: 4.0,
+    stream_gap_us: 3.0,
+    min_store_rows: 1, // st-based epilogue: no narrow-store cliff
+    narrow_store_penalty: 1.0,
+};
+
+pub const H800: GpuArch = GpuArch {
+    name: "H800",
+    sms: 132,
+    blocks_per_sm: 2,
+    peak_bf16_tflops: 990.0,
+    hbm_gbps: 3350.0,
+    gemm_eff: 0.75,
+    launch_us: 4.0,
+    stream_gap_us: 3.0,
+    min_store_rows: 16, // TMA bulk-tensor stores want >=16 rows
+    narrow_store_penalty: 0.55,
+};
+
+/// Intra-node interconnect flavor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Intra {
+    /// NVSwitch fabric: any-to-any, limited by per-device egress/ingress.
+    NvLink {
+        /// Per-direction bandwidth per device, GB/s.
+        per_dir_gbps: f64,
+    },
+    /// PCIe tree: per-device link into a shared switch per NUMA domain;
+    /// cross-NUMA traffic also crosses the inter-socket link.
+    Pcie {
+        per_dir_gbps: f64,
+        gpus_per_numa: usize,
+        /// Effective bandwidth of the socket-to-socket path, GB/s.
+        numa_link_gbps: f64,
+    },
+}
+
+/// One of the paper's evaluation clusters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub arch: GpuArch,
+    pub gpus_per_node: usize,
+    pub intra: Intra,
+    /// Per-GPU share of inter-node NIC bandwidth, GB/s per direction.
+    pub nic_gbps_per_gpu: f64,
+    /// NCCL ring bus bandwidth for intra-node collectives, GB/s —
+    /// the non-overlapping baseline's effective speed.
+    pub nccl_bus_gbps: f64,
+    /// P2P transfer latency inside a node, microseconds.
+    pub p2p_latency_us: f64,
+    /// Signal set→visible latency (cuStreamWriteValue→spin loop), us.
+    pub signal_latency_us: f64,
+}
+
+/// A100 PCIe (80GB): 8 GPU/node, 2 NUMA domains of 4 GPUs + 1 NIC each,
+/// 2x100Gb/s inter-node.
+pub const A100_PCIE: ClusterSpec = ClusterSpec {
+    name: "A100 PCIe",
+    arch: A100,
+    gpus_per_node: 8,
+    intra: Intra::Pcie {
+        per_dir_gbps: 22.0,
+        gpus_per_numa: 4,
+        numa_link_gbps: 45.0,
+    },
+    nic_gbps_per_gpu: 100.0 / 8.0 * 2.0 / 8.0, // 2x100Gb/s over 8 GPUs
+    nccl_bus_gbps: 13.0, // PCIe Gen4-only ring: published NCCL reality
+    p2p_latency_us: 6.0,
+    signal_latency_us: 4.0,
+};
+
+/// A100 SXM4 (80GB): NVLink3 600GB/s bidir => 300GB/s per direction,
+/// 4x200Gb/s NICs (2 GPUs share one).
+pub const A100_NVLINK: ClusterSpec = ClusterSpec {
+    name: "A100 NVLink",
+    arch: A100,
+    gpus_per_node: 8,
+    intra: Intra::NvLink { per_dir_gbps: 300.0 },
+    nic_gbps_per_gpu: 200.0 / 8.0 / 2.0, // Gb/s->GB/s and 2 GPUs per NIC
+    nccl_bus_gbps: 230.0,
+    p2p_latency_us: 2.0,
+    signal_latency_us: 3.0,
+};
+
+/// H800 SXM5: NVLink 400GB/s bidir per device => 200GB/s per direction
+/// (export-trimmed), 1x400Gb/s NIC per GPU.
+pub const H800_NVLINK: ClusterSpec = ClusterSpec {
+    name: "H800 NVLink",
+    arch: H800,
+    gpus_per_node: 8,
+    intra: Intra::NvLink { per_dir_gbps: 200.0 },
+    nic_gbps_per_gpu: 400.0 / 8.0,
+    nccl_bus_gbps: 160.0,
+    p2p_latency_us: 2.0,
+    signal_latency_us: 3.0,
+};
+
+pub const ALL_CLUSTERS: [&ClusterSpec; 3] =
+    [&A100_PCIE, &A100_NVLINK, &H800_NVLINK];
+
+impl ClusterSpec {
+    pub fn by_name(name: &str) -> Option<&'static ClusterSpec> {
+        let key = name.to_ascii_lowercase().replace(['-', '_'], " ");
+        ALL_CLUSTERS
+            .iter()
+            .copied()
+            .find(|c| c.name.to_ascii_lowercase() == key)
+    }
+
+    /// Per-direction P2P bandwidth between two GPUs in this node, GB/s.
+    pub fn p2p_gbps(&self) -> f64 {
+        match self.intra {
+            Intra::NvLink { per_dir_gbps } => per_dir_gbps,
+            Intra::Pcie { per_dir_gbps, .. } => per_dir_gbps,
+        }
+    }
+
+    /// Total resident thread blocks (SM slots) per device.
+    pub fn sm_slots(&self) -> usize {
+        self.arch.sms * self.arch.blocks_per_sm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ClusterSpec::by_name("a100 pcie"), Some(&A100_PCIE));
+        assert_eq!(ClusterSpec::by_name("A100-NVLink"), Some(&A100_NVLINK));
+        assert_eq!(ClusterSpec::by_name("h800_nvlink"), Some(&H800_NVLINK));
+        assert!(ClusterSpec::by_name("tpu v5").is_none());
+    }
+
+    #[test]
+    fn relative_speeds_match_the_paper_story() {
+        // H800 computes ~3x faster than A100 but its NVLink is slower:
+        // that is why H800 has the *highest* communication proportion
+        // (§6 "High communication proportion").
+        assert!(H800.peak_bf16_tflops / A100.peak_bf16_tflops > 2.5);
+        assert!(
+            H800_NVLINK.p2p_gbps() < A100_NVLINK.p2p_gbps(),
+            "H800 NVLink is export-trimmed below A100's"
+        );
+        // PCIe is an order of magnitude slower than NVLink.
+        assert!(A100_NVLINK.p2p_gbps() / A100_PCIE.p2p_gbps() > 10.0);
+    }
+
+    #[test]
+    fn sm_slots() {
+        assert_eq!(A100_PCIE.sm_slots(), 216);
+        assert_eq!(H800_NVLINK.sm_slots(), 264);
+    }
+}

@@ -1,0 +1,117 @@
+//! Communication cost closed-forms: NCCL-style collectives and P2P
+//! transfers. These price the *non-overlapping baseline* (PyTorch +
+//! NCCL in the paper) and the medium-grained chunk transfers.
+
+use crate::cost::arch::ClusterSpec;
+
+/// Time (ns) to move `bytes` point-to-point inside a node.
+pub fn p2p_ns(cluster: &ClusterSpec, bytes: f64) -> f64 {
+    cluster.p2p_latency_us * 1e3 + bytes / cluster.p2p_gbps()
+}
+
+/// NCCL ring AllGather over n ranks of a tensor of `total_bytes`
+/// (the gathered size): each rank sends its shard around the ring,
+/// (n-1) steps of (total/n) bytes at bus bandwidth.
+pub fn ring_all_gather_ns(
+    cluster: &ClusterSpec,
+    n: usize,
+    total_bytes: f64,
+) -> f64 {
+    assert!(n >= 1);
+    if n == 1 {
+        return 0.0;
+    }
+    // Multi-node rings are bottlenecked by the NIC share per GPU.
+    let bus = if n > cluster.gpus_per_node {
+        cluster.nccl_bus_gbps.min(cluster.nic_gbps_per_gpu)
+    } else {
+        cluster.nccl_bus_gbps
+    };
+    let step_bytes = total_bytes / n as f64;
+    let steps = (n - 1) as f64;
+    steps * (cluster.p2p_latency_us * 1e3 + step_bytes / bus)
+}
+
+/// NCCL ring ReduceScatter: same wire pattern as AllGather.
+pub fn ring_reduce_scatter_ns(
+    cluster: &ClusterSpec,
+    n: usize,
+    total_bytes: f64,
+) -> f64 {
+    ring_all_gather_ns(cluster, n, total_bytes)
+}
+
+/// AllReduce = ReduceScatter + AllGather (ring).
+pub fn ring_all_reduce_ns(
+    cluster: &ClusterSpec,
+    n: usize,
+    total_bytes: f64,
+) -> f64 {
+    ring_reduce_scatter_ns(cluster, n, total_bytes)
+        + ring_all_gather_ns(cluster, n, total_bytes)
+}
+
+/// Inter-node portion for multi-node TP (Fig. 15): the slowest path is
+/// each GPU exchanging its shard with its peer GPU on the other node
+/// through its NIC share.
+pub fn internode_exchange_ns(
+    cluster: &ClusterSpec,
+    bytes_per_gpu: f64,
+) -> f64 {
+    // NIC latency is substantially higher than NVLink's.
+    let nic_latency_ns = 10.0 * 1e3;
+    nic_latency_ns + bytes_per_gpu / cluster.nic_gbps_per_gpu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+
+    const MB: f64 = 1e6;
+
+    #[test]
+    fn p2p_scales_with_bytes() {
+        let t1 = p2p_ns(&A100_NVLINK, 10.0 * MB);
+        let t2 = p2p_ns(&A100_NVLINK, 20.0 * MB);
+        assert!(t2 > t1);
+        // 10MB at 300GB/s ≈ 33us + 2us latency.
+        assert!((t1 - (2.0e3 + 10.0 * MB / 300.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn ring_allgather_matches_formula() {
+        // 8 ranks, 201MB gathered on A100 NVLink bus 230GB/s:
+        // 7 * 25.1MB / 230GB/s ≈ 765us (+latency).
+        let t = ring_all_gather_ns(&A100_NVLINK, 8, 201.0 * MB);
+        let ideal = 7.0 * (201.0 * MB / 8.0) / 230.0;
+        assert!((t - ideal) < 20.0e3, "t={t} ideal={ideal}");
+        assert!(t > ideal);
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        assert_eq!(ring_all_gather_ns(&A100_PCIE, 1, MB), 0.0);
+    }
+
+    #[test]
+    fn pcie_much_slower_than_nvlink() {
+        let pcie = ring_all_gather_ns(&A100_PCIE, 8, 100.0 * MB);
+        let nvl = ring_all_gather_ns(&A100_NVLINK, 8, 100.0 * MB);
+        assert!(pcie > 15.0 * nvl, "pcie {pcie} nvl {nvl}");
+    }
+
+    #[test]
+    fn h800_nic_is_fat() {
+        // 400Gb/s per GPU: 50 GB/s => 100MB exchange ≈ 2ms.
+        let t = internode_exchange_ns(&H800_NVLINK, 100.0 * MB);
+        assert!(t > 1.9e6 && t < 2.4e6, "t={t}");
+    }
+
+    #[test]
+    fn allreduce_is_twice_reduce_scatter() {
+        let rs = ring_reduce_scatter_ns(&A100_NVLINK, 8, 64.0 * MB);
+        let ar = ring_all_reduce_ns(&A100_NVLINK, 8, 64.0 * MB);
+        assert!((ar - 2.0 * rs).abs() < 1e-6);
+    }
+}

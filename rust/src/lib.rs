@@ -1,0 +1,29 @@
+//! FLUX — fast software-based communication overlap through kernel
+//! fusion: a Rust + JAX + Pallas reproduction of Chang et al. (2024).
+//!
+//! Layering (DESIGN.md):
+//! * L1/L2 live in `python/` (Pallas fused kernels, TP transformer) and
+//!   are AOT-lowered to HLO text in `artifacts/`.
+//! * L3 is this crate: the cluster simulator standing in for the paper's
+//!   GPU testbeds, the three overlap strategies (non-overlap,
+//!   medium-grained TransformerEngine-style, fine-grained FLUX), the
+//!   auto-tuner, the serving/training coordinators, and the PJRT runtime
+//!   that executes the AOT artifacts on the CPU for real numerics.
+
+pub mod cost {
+    //! Calibrated cost models: GPU archs, GEMM timing, collectives.
+    pub mod arch;
+    pub mod comm;
+    pub mod gemm;
+}
+
+pub mod collectives;
+pub mod overlap;
+pub mod figures;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod tuner;
+pub mod util;

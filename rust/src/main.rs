@@ -1,0 +1,233 @@
+//! `flux` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   figures   regenerate every paper table/figure (default)
+//!   simulate  one op-level comparison (--cluster, --op, --m, --tp)
+//!   tune      auto-tune one problem and print the winning config
+//!   train     model-level training step comparison
+//!   serve     run the REAL tiny TP transformer on PJRT via the batcher
+//!
+//! Examples:
+//!   flux simulate --cluster "a100 nvlink" --op rs --m 4096
+//!   flux tune --cluster "a100 pcie" --op ag --m 8192
+//!   flux serve --requests 6 --gen 8
+
+use anyhow::{bail, Result};
+
+use flux::cost::arch::ClusterSpec;
+use flux::figures;
+use flux::model::configs::TransformerConfig;
+use flux::overlap::{baseline, medium, Problem};
+use flux::parallel::{train_step_ns, Layout, Method};
+use flux::runtime::Runtime;
+use flux::serving::engine::{argmax, Engine};
+use flux::serving::kvcache::KvCacheManager;
+use flux::serving::{Batcher, BatcherConfig, Request};
+use flux::tuner;
+use flux::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["verbose"])?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("figures");
+    match cmd {
+        "figures" => cmd_figures(),
+        "simulate" => cmd_simulate(&args),
+        "tune" => cmd_tune(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        other => bail!(
+            "unknown command {other:?}; try figures|simulate|tune|train|serve"
+        ),
+    }
+}
+
+fn cluster_of(args: &Args) -> Result<&'static ClusterSpec> {
+    let name = args.get_or("cluster", "a100 nvlink");
+    ClusterSpec::by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown cluster {name:?} (a100-pcie | a100-nvlink | h800-nvlink)"
+        )
+    })
+}
+
+fn problem_of(args: &Args) -> Result<Problem> {
+    let m = args.get_usize("m", 4096)?;
+    let tp = args.get_usize("tp", 8)?;
+    Ok(match args.get_or("op", "rs") {
+        "ag" => figures::ag_problem(m, tp),
+        "rs" => figures::rs_problem(m, tp),
+        o => bail!("unknown --op {o:?} (ag|rs)"),
+    })
+}
+
+fn cmd_figures() -> Result<()> {
+    let args = Args::from_env(&["verbose"])?;
+    for t in figures::all() {
+        figures::print_table(&t);
+    }
+    if let Some(path) = args.get("json") {
+        figures::write_json_report(std::path::Path::new(path))?;
+        println!("\nwrote JSON report to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cl = cluster_of(args)?;
+    let p = problem_of(args)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let base = baseline::simulate(cl, &p);
+    let te = medium::simulate(cl, &p, seed);
+    let mut cache = tuner::TunerCache::new();
+    let fx = cache.get(cl, &p, seed);
+    println!(
+        "{} m={} N_TP={} on {}",
+        p.op.name(), p.m, p.n_tp, cl.name
+    );
+    println!(
+        "  GEMM (non-split, Eq.1) : {:9.3} ms",
+        base.gemm_nonsplit_ns / 1e6
+    );
+    for (name, t) in [
+        ("PyTorch (no overlap)", base),
+        ("TransformerEngine", te),
+        ("Flux (tuned)", fx.timing),
+    ] {
+        println!(
+            "  {name:22}: {:9.3} ms  ECT {:9.3} ms  eff {:5.1}%",
+            t.overall_ns / 1e6,
+            t.ect_ns() / 1e6,
+            t.overlap_efficiency(&base) * 100.0
+        );
+    }
+    println!("  tuned config: {:?}", fx.config);
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cl = cluster_of(args)?;
+    let p = problem_of(args)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let t = tuner::tune(cl, &p, seed);
+    println!(
+        "tuned {} m={} on {} over {} candidates:",
+        p.op.name(), p.m, cl.name, t.candidates_tried
+    );
+    println!("  config  : {:?}", t.config);
+    println!("  overall : {:.3} ms", t.timing.overall_ns / 1e6);
+    println!("  ECT     : {:.3} ms", t.timing.ect_ns() / 1e6);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cl = cluster_of(args)?;
+    let model = TransformerConfig::by_name(args.get_or("model", "gpt3"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --model (gpt3|llama2)"))?;
+    let micro = args.get_usize("microbatches", 16)?;
+    let layout = Layout::PAPER_TRAINING;
+    println!(
+        "{} on {} x{} GPUs (DP{} PP{} TP{}), {} microbatches:",
+        model.name, cl.name, layout.gpus(), layout.dp, layout.pp,
+        layout.tp, micro
+    );
+    let mut base = 0.0;
+    for m in Method::ALL {
+        let t = train_step_ns(cl, model, &layout, micro, 2048, 2048, m, 7);
+        if m == Method::NonOverlap {
+            base = t;
+        }
+        println!(
+            "  {:12}: {:9.1} ms/step  ({:.2}x)",
+            m.name(), t / 1e6, base / t
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_requests = args.get_usize("requests", 4)?;
+    let gen = args.get_usize("gen", 8)?;
+    let rt = Runtime::load_default()?;
+    println!(
+        "loaded {} artifacts from {} (tiny TP{} transformer, d={})",
+        rt.manifest.artifacts.len(), rt.dir.display(),
+        rt.manifest.n_tp, rt.manifest.d_model
+    );
+    let mut eng = Engine::new(rt)?;
+    let mut batcher = Batcher::new(BatcherConfig {
+        max_prefill_batch: eng.b,
+        max_decode_batch: eng.b,
+        max_prompt: eng.s,
+        max_seq: eng.smax,
+    });
+    let mut kv = KvCacheManager::new(64, 16);
+    for i in 0..n_requests as u64 {
+        let plen = 4 + (i as usize * 3) % 12;
+        let prompt: Vec<i32> = (0..plen)
+            .map(|t| ((i as usize * 131 + t * 17) % eng.vocab) as i32)
+            .collect();
+        batcher.submit(Request::new(i, 0.0, prompt, gen));
+    }
+    let t0 = std::time::Instant::now();
+    let mut last_tok = vec![0i32; eng.b];
+    let mut slot_of = std::collections::BTreeMap::new();
+    loop {
+        match batcher.next_work(&mut kv)? {
+            flux::serving::batcher::Work::Prefill(ids) => {
+                let prompts: Vec<Vec<i32>> = ids
+                    .iter()
+                    .map(|&id| batcher.get(id).prompt.clone())
+                    .collect();
+                let logits = eng.prefill(&prompts)?;
+                let mut toks = Vec::new();
+                for (slot, &id) in ids.iter().enumerate() {
+                    slot_of.insert(id, slot);
+                    last_tok[slot] = argmax(&logits[slot]);
+                    toks.push(last_tok[slot]);
+                }
+                batcher.complete_decode(
+                    &ids, &toks, &mut kv,
+                    t0.elapsed().as_nanos() as f64,
+                )?;
+            }
+            flux::serving::batcher::Work::Decode(ids) => {
+                let logits = eng.decode_step(&last_tok)?;
+                let mut toks = Vec::new();
+                for &id in &ids {
+                    let slot = slot_of[&id];
+                    last_tok[slot] = argmax(&logits[slot]);
+                    toks.push(last_tok[slot]);
+                }
+                batcher.complete_decode(
+                    &ids, &toks, &mut kv,
+                    t0.elapsed().as_nanos() as f64,
+                )?;
+            }
+            flux::serving::batcher::Work::Idle => break,
+        }
+    }
+    let dt = t0.elapsed();
+    let total_toks: usize = batcher
+        .requests
+        .iter()
+        .map(|r| r.generated.len())
+        .sum();
+    for r in &batcher.requests {
+        println!(
+            "  req {}: prompt {:?} -> {:?}",
+            r.id, r.prompt, r.generated
+        );
+    }
+    println!(
+        "served {n_requests} requests / {total_toks} tokens in {:.2?} \
+         ({:.1} tok/s, {} PJRT calls)",
+        dt,
+        total_toks as f64 / dt.as_secs_f64(),
+        eng.rt.execute_calls
+    );
+    Ok(())
+}

@@ -1,0 +1,184 @@
+//! Per-layer TP op extraction + communication-portion analysis (Fig. 1).
+//!
+//! With the paper's partitioning (Fig. 2 + Megatron attention), one
+//! transformer layer under N-way TP performs, per forward pass over
+//! m = batch * seq tokens:
+//!
+//!   attention:  AG+GEMM  (m, 3d, d)   — qkv projection
+//!               GEMM+RS  (m, d, d)    — output projection
+//!   MLP:        AG+GEMM  (m, ff, d)   — up projection
+//!               GEMM+RS  (m, d, ff)   — down projection
+//!
+//! Backward doubles the GEMM work (dgrad + wgrad) and mirrors the
+//! collectives (AG <-> RS interchange, §2.1), i.e. the same four comm
+//! volumes again.
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::gemm::{gemm_time_ns, GemmShape};
+use crate::model::configs::TransformerConfig;
+use crate::overlap::{Op, Problem};
+
+/// The four TP'd GEMMs of one layer's forward, global shapes.
+pub fn layer_fwd_ops(
+    cfg: &TransformerConfig,
+    m: usize,
+    n_tp: usize,
+) -> Vec<Problem> {
+    // Megatron pads token counts to the TP degree; tiny decode batches
+    // are padded the same way here.
+    let m = m.div_ceil(n_tp) * n_tp;
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    vec![
+        Problem { op: Op::AgGemm, m, n: 3 * d, k: d, n_tp },
+        Problem { op: Op::GemmRs, m, n: d, k: d, n_tp },
+        Problem { op: Op::AgGemm, m, n: ff, k: d, n_tp },
+        Problem { op: Op::GemmRs, m, n: d, k: ff, n_tp },
+    ]
+}
+
+/// Backward-pass (dgrad) TP ops: collectives interchanged AND the GEMM
+/// transposed. For a forward AG+GEMM C[m,n] = AG(x)[m,k] @ W[k,n/N],
+/// dgrad is dx = dy[m,n/N] @ W^T -> partial [m,k] -> ReduceScatter:
+/// a GemmRs with (n, k) swapped — and vice versa. Communication volume
+/// per op is m*d in both directions, matching Megatron.
+pub fn layer_bwd_ops(
+    cfg: &TransformerConfig,
+    m: usize,
+    n_tp: usize,
+) -> Vec<Problem> {
+    layer_fwd_ops(cfg, m, n_tp)
+        .into_iter()
+        .map(|p| Problem {
+            op: match p.op {
+                Op::AgGemm => Op::GemmRs,
+                Op::GemmRs => Op::AgGemm,
+            },
+            n: p.k,
+            k: p.n,
+            ..p
+        })
+        .collect()
+}
+
+/// Non-TP compute in a layer that the collectives never touch:
+/// the attention score/context matmuls (2 * m * seq * d flops each
+/// direction), priced as plain GEMMs.
+pub fn layer_attention_extra_ns(
+    cluster: &ClusterSpec,
+    cfg: &TransformerConfig,
+    m: usize,
+    seq: usize,
+    n_tp: usize,
+) -> f64 {
+    // Per rank: heads/N, so d/N width. Scores: [m, seq] x heads_local.
+    let d_local = cfg.d_model / n_tp;
+    // Two GEMMs: QK^T (m x seq x d_local) and PV (m x d_local x seq).
+    2.0 * gemm_time_ns(&cluster.arch, &GemmShape::new(m, seq, d_local))
+}
+
+/// Backward GEMM multiplier: dgrad + wgrad.
+pub const BWD_GEMM_FACTOR: f64 = 2.0;
+
+/// Fig.-1 style analysis: fraction of per-layer time that is exposed
+/// TP communication under the *non-overlapping* method.
+pub struct CommPortion {
+    pub compute_ns: f64,
+    pub comm_ns: f64,
+}
+
+impl CommPortion {
+    pub fn fraction(&self) -> f64 {
+        self.comm_ns / (self.comm_ns + self.compute_ns)
+    }
+}
+
+/// Communication portion for one layer forward (+ optionally backward),
+/// the quantity Fig. 1 plots per cluster/model/phase.
+pub fn comm_portion(
+    cluster: &ClusterSpec,
+    cfg: &TransformerConfig,
+    m: usize,
+    seq: usize,
+    n_tp: usize,
+    with_backward: bool,
+) -> CommPortion {
+    use crate::cost::comm::{ring_all_gather_ns, ring_reduce_scatter_ns};
+    let mut compute = layer_attention_extra_ns(cluster, cfg, m, seq, n_tp);
+    let mut comm = 0.0;
+    let add_ops = |ops: &[Problem], factor: f64, c: &mut f64, x: &mut f64| {
+        for p in ops {
+            *x += factor * gemm_time_ns(&cluster.arch, &p.local_gemm());
+            *c += match p.op {
+                Op::AgGemm => {
+                    ring_all_gather_ns(cluster, n_tp, p.comm_bytes())
+                }
+                Op::GemmRs => {
+                    ring_reduce_scatter_ns(cluster, n_tp, p.comm_bytes())
+                }
+            };
+        }
+    };
+    add_ops(&layer_fwd_ops(cfg, m, n_tp), 1.0, &mut comm, &mut compute);
+    if with_backward {
+        compute +=
+            layer_attention_extra_ns(cluster, cfg, m, seq, n_tp) * 2.0;
+        add_ops(
+            &layer_bwd_ops(cfg, m, n_tp),
+            BWD_GEMM_FACTOR,
+            &mut comm,
+            &mut compute,
+        );
+    }
+    CommPortion { compute_ns: compute, comm_ns: comm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+    use crate::model::configs::{GPT3_175B, LLAMA2_70B};
+
+    #[test]
+    fn gpt3_ops_match_the_papers_shapes() {
+        let ops = layer_fwd_ops(&GPT3_175B, 4096, 8);
+        // MLP up: AG with (n, k) = (49152, 12288); down: RS (12288, 49152).
+        assert_eq!((ops[2].n, ops[2].k), (49152, 12288));
+        assert_eq!((ops[3].n, ops[3].k), (12288, 49152));
+    }
+
+    #[test]
+    fn bwd_interchanges_collectives() {
+        let fwd = layer_fwd_ops(&GPT3_175B, 1024, 8);
+        let bwd = layer_bwd_ops(&GPT3_175B, 1024, 8);
+        for (f, b) in fwd.iter().zip(&bwd) {
+            assert_ne!(f.op, b.op);
+            // Transposed GEMM: n and k swap; m preserved.
+            assert_eq!((f.m, f.n, f.k), (b.m, b.k, b.n));
+        }
+    }
+
+    #[test]
+    fn fig1_ordering_of_comm_portions() {
+        // Fig. 1: PCIe training ~40-75%, A100 NVLink ~8-11%, H800 in
+        // between; inference (prefill, no bwd) similar ordering.
+        let m = 4096;
+        let pcie = comm_portion(&A100_PCIE, &GPT3_175B, m, 2048, 8, true)
+            .fraction();
+        let nvl = comm_portion(&A100_NVLINK, &GPT3_175B, m, 2048, 8, true)
+            .fraction();
+        let h800 = comm_portion(&H800_NVLINK, &GPT3_175B, m, 2048, 8, true)
+            .fraction();
+        assert!(pcie > 0.35 && pcie < 0.85, "pcie {pcie}");
+        assert!(nvl > 0.04 && nvl < 0.24, "nvl {nvl}");
+        assert!(h800 > nvl, "h800 {h800} should exceed a100 nvlink {nvl}");
+        assert!(pcie > h800);
+    }
+
+    #[test]
+    fn llama_ops_sane() {
+        let ops = layer_fwd_ops(&LLAMA2_70B, 2048, 8);
+        assert_eq!(ops.len(), 4);
+        assert!(ops.iter().all(|p| p.m == 2048 && p.n_tp == 8));
+    }
+}

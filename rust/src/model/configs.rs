@@ -1,0 +1,94 @@
+//! The evaluated model configurations (§5.2).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// MLP matrices per layer: 2 (GELU up/down) or 3 (SwiGLU).
+    pub mlp_mats: usize,
+    /// KV heads (GQA); == n_heads for classic MHA.
+    pub kv_heads: usize,
+}
+
+/// GPT-3 175B (Brown et al. 2020): the source of the paper's op-level
+/// GEMM shapes — (n, k) = (49152, 12288) for AG and (12288, 49152) for RS.
+pub const GPT3_175B: TransformerConfig = TransformerConfig {
+    name: "GPT-3 175B",
+    n_layers: 96,
+    d_model: 12288,
+    n_heads: 96,
+    d_ff: 49152,
+    vocab: 50257,
+    mlp_mats: 2,
+    kv_heads: 96,
+};
+
+/// Llama-2 70B (Touvron et al. 2023): SwiGLU MLP, grouped-query
+/// attention with 8 KV heads.
+pub const LLAMA2_70B: TransformerConfig = TransformerConfig {
+    name: "Llama-2 70B",
+    n_layers: 80,
+    d_model: 8192,
+    n_heads: 64,
+    d_ff: 28672,
+    vocab: 32000,
+    mlp_mats: 3,
+    kv_heads: 8,
+};
+
+impl TransformerConfig {
+    pub fn by_name(name: &str) -> Option<&'static TransformerConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "gpt3" | "gpt-3" | "gpt-3 175b" | "gpt3-175b" => Some(&GPT3_175B),
+            "llama2" | "llama-2" | "llama-2 70b" | "llama2-70b" => {
+                Some(&LLAMA2_70B)
+            }
+            _ => None,
+        }
+    }
+
+    /// Approximate parameter count (embeddings + per-layer matrices).
+    pub fn params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let kv_frac = self.kv_heads as f64 / self.n_heads as f64;
+        let per_layer = (2.0 + 2.0 * kv_frac) * d * d // q,o + GQA k,v
+            + self.mlp_mats as f64 * d * self.d_ff as f64
+            + 4.0 * d; // norms
+        self.n_layers as f64 * per_layer + self.vocab as f64 * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt3_is_roughly_175b() {
+        let p = GPT3_175B.params();
+        assert!(p > 1.6e11 && p < 1.9e11, "params {p:.3e}");
+    }
+
+    #[test]
+    fn llama2_is_roughly_70b() {
+        let p = LLAMA2_70B.params();
+        assert!(p > 6.0e10 && p < 8.0e10, "params {p:.3e}");
+    }
+
+    #[test]
+    fn op_level_shapes_come_from_gpt3() {
+        // §5.1: (n, k) = (49152, 12288) in AllGather — that is (d_ff, d).
+        assert_eq!(GPT3_175B.d_ff, 49152);
+        assert_eq!(GPT3_175B.d_model, 12288);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(TransformerConfig::by_name("gpt3"), Some(&GPT3_175B));
+        assert_eq!(TransformerConfig::by_name("LLaMA2"), Some(&LLAMA2_70B));
+        assert!(TransformerConfig::by_name("bert").is_none());
+    }
+}

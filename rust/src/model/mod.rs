@@ -1,0 +1,12 @@
+//! Model configurations and tensor-parallel communication analysis.
+//!
+//! The paper evaluates GPT-3 175B and Llama-2 70B; at the model level the
+//! coordinator only needs shapes, FLOPs and the TP collective volumes per
+//! layer — the numerics live in the tiny exported transformer
+//! (python/compile/model.py) served by `serving::engine`.
+
+pub mod analysis;
+pub mod configs;
+
+pub use analysis::*;
+pub use configs::*;

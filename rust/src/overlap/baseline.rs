@@ -1,0 +1,57 @@
+//! Non-overlapping baseline: fastest monolithic GEMM + NCCL ring
+//! collective, strictly serialized — the "PyTorch" bars of Fig. 4/11-14.
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::comm::{ring_all_gather_ns, ring_reduce_scatter_ns};
+use crate::overlap::{Op, OpTiming, Problem};
+
+/// Simulate the non-overlapping execution. All ranks are symmetric, so
+/// the slowest-rank time equals the single-rank time.
+pub fn simulate(cluster: &ClusterSpec, p: &Problem) -> OpTiming {
+    let gemm = p.gemm_nonsplit_ns(cluster);
+    let comm = match p.op {
+        // AllGather happens BEFORE the GEMM (Fig. 2 first GEMM).
+        Op::AgGemm => ring_all_gather_ns(cluster, p.n_tp, p.comm_bytes()),
+        // ReduceScatter happens AFTER the GEMM (Fig. 2 second GEMM).
+        Op::GemmRs => {
+            ring_reduce_scatter_ns(cluster, p.n_tp, p.comm_bytes())
+        }
+    };
+    OpTiming { overall_ns: gemm + comm, gemm_nonsplit_ns: gemm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+
+    #[test]
+    fn baseline_ect_equals_collective_time() {
+        // §2.3: for the non-overlapping method, ECT == pure NCCL time.
+        let p = Problem::ag(4096, 49152, 12288, 8);
+        let t = simulate(&A100_NVLINK, &p);
+        let comm = ring_all_gather_ns(&A100_NVLINK, 8, p.comm_bytes());
+        assert!((t.ect_ns() - comm).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pcie_has_much_higher_comm_fraction() {
+        let p = Problem::rs(8192, 12288, 49152, 8);
+        let pcie = simulate(&A100_PCIE, &p);
+        let nvl = simulate(&A100_NVLINK, &p);
+        let frac = |t: &OpTiming| t.ect_ns() / t.overall_ns;
+        assert!(frac(&pcie) > 3.0 * frac(&nvl),
+                "pcie {} nvl {}", frac(&pcie), frac(&nvl));
+    }
+
+    #[test]
+    fn h800_comm_fraction_exceeds_a100_nvlink() {
+        // Fast compute + slower links => §6's "high communication
+        // proportion for different reasons".
+        let p = Problem::ag(8192, 49152, 12288, 8);
+        let h = simulate(&H800_NVLINK, &p);
+        let a = simulate(&A100_NVLINK, &p);
+        let frac = |t: &OpTiming| t.ect_ns() / t.overall_ns;
+        assert!(frac(&h) > frac(&a));
+    }
+}

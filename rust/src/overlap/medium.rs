@@ -1,0 +1,201 @@
+//! Medium-grained overlap: the prior technique (TransformerEngine
+//! UserBuffer, Wang et al., Jangda et al.) — §2.2 and the "TE" bars of
+//! every evaluation figure.
+//!
+//! The original GEMM is split into N_TP chunk kernels; chunk P2P
+//! transfers ride a ring and overlap with other chunks' compute. The
+//! §2.2 limitations are modeled explicitly:
+//!
+//! 1. every chunk is a *separate kernel*: per-launch overhead plus
+//!    stream-timing jitter, and no wave sharing across kernels;
+//! 2. in ReduceScatter the partial-sum adds create data dependences that
+//!    serialize the chunk GEMMs (no multiplexing);
+//! 3. each chunk GEMM has 1/N the rows: wave quantization and small-m
+//!    inefficiency multiply (the dominant loss at small m).
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::gemm::{tile_grid, GemmShape};
+use crate::overlap::{Op, OpTiming, Problem, BF16};
+use crate::sim::cluster::Cluster;
+
+/// Stream-jitter sigma used for multi-kernel methods when simulating the
+/// production environment the paper describes (§2.2). Deterministic per
+/// seed.
+pub const PROD_JITTER_SIGMA: f64 = 0.25;
+
+pub fn simulate(cluster: &ClusterSpec, p: &Problem, seed: u64) -> OpTiming {
+    let mut c = Cluster::new(cluster, p.n_tp, seed)
+        .with_jitter(PROD_JITTER_SIGMA);
+    let overall = match p.op {
+        Op::AgGemm => simulate_ag(&mut c, p),
+        Op::GemmRs => simulate_rs(&mut c, p),
+    };
+    OpTiming { overall_ns: overall, gemm_nonsplit_ns: p.gemm_nonsplit_ns(cluster) }
+}
+
+/// AllGather overlap: ring-exchange the x chunks; each arrived chunk
+/// unblocks an independent chunk GEMM (these can multiplex on the SM
+/// pool — AG's advantage over RS in Fig. 4).
+fn simulate_ag(c: &mut Cluster, p: &Problem) -> f64 {
+    let n = p.n_tp;
+    let chunk_rows = p.m / n;
+    let chunk_bytes = chunk_rows as f64 * p.k as f64 * BF16;
+    let chunk_shape =
+        GemmShape::new(chunk_rows, p.n / n, p.k);
+    let (_, tiles) = tile_grid(&c.spec.arch, &chunk_shape);
+
+    // Ring steps: at step s, rank r receives chunk (r-s mod n) from
+    // rank r-1. All ranks do this simultaneously; per-rank arrival time
+    // chains through its ingress.
+    let mut overall: f64 = 0.0;
+    for r in 0..n {
+        // Arrival time of each chunk at rank r.
+        let mut arrival = vec![0.0f64; n];
+        let mut prev_end = 0.0f64;
+        for s in 1..n {
+            let src = (r + n - 1) % n; // ring neighbor
+            let chunk = (r + n - s) % n;
+            let (_, end) = c.net.transfer(src, r, chunk_bytes, prev_end);
+            arrival[chunk] = end;
+            prev_end = end;
+        }
+        // Chunk GEMMs are separate kernels. Unlike the single fused
+        // FLUX kernel they do NOT share waves: each occupies the device
+        // (its own launch, its own partial last wave). Streams let a
+        // chunk's launch overlap the previous kernel's drain, but a
+        // GEMM-sized kernel at full occupancy leaves no room for true
+        // co-residency — the §2.2/§3.3 split-GEMM efficiency loss.
+        // Local chunk first, then arrival (ring) order.
+        let mut end_r: f64 = 0.0;
+        for s in 0..n {
+            let chunk = (r + n - s) % n;
+            let issue = end_r.max(arrival[chunk]);
+            let t = c.devices[r].launch_uniform(
+                issue,
+                tiles.len(),
+                tiles[0].dur_ns,
+            );
+            end_r = t.end;
+        }
+        overall = overall.max(end_r);
+    }
+    overall
+}
+
+/// ReduceScatter overlap: chunk GEMMs are *serialized* by the partial-sum
+/// dependence chain (§2.2 limitation 2); each finished chunk's partial is
+/// sent to its destination and added there.
+fn simulate_rs(c: &mut Cluster, p: &Problem) -> f64 {
+    let n = p.n_tp;
+    let chunk_rows = p.m / n;
+    let chunk_bytes = chunk_rows as f64 * p.n as f64 * BF16;
+    let chunk_shape = GemmShape::new(chunk_rows, p.n, p.k / n);
+    let (_, tiles) = tile_grid(&c.spec.arch, &chunk_shape);
+
+    // Add kernel: 2 reads + 1 write of the chunk, memory bound.
+    let add_bytes = 3.0 * chunk_bytes;
+    let add_ns = c.spec.arch.launch_us * 1e3
+        + add_bytes / c.spec.arch.hbm_gbps;
+
+    let mut overall: f64 = 0.0;
+    for r in 0..n {
+        // Serialized chunk GEMMs (dependence chain through the adds).
+        let mut gemm_end = 0.0f64;
+        let mut pipe_end = 0.0f64; // transfer+add pipeline tail
+        for s in 0..n {
+            // Chunk for destination rank (r + 1 + s) % n, farthest first.
+            let dest = (r + 1 + s) % n;
+            let t = c.devices[r].launch_uniform(
+                gemm_end,
+                tiles.len(),
+                tiles[0].dur_ns,
+            );
+            gemm_end = t.end;
+            if dest != r {
+                let (_, arr) =
+                    c.net.transfer(r, dest, chunk_bytes, gemm_end);
+                // The destination's add kernel (we charge it to the
+                // pipeline tail; adds on different ranks overlap).
+                pipe_end = pipe_end.max(arr) + add_ns;
+            }
+        }
+        overall = overall.max(gemm_end.max(pipe_end));
+    }
+    overall
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, H800_NVLINK};
+    use crate::overlap::baseline;
+
+    /// GPT-3 shapes from §5.1.
+    fn ag(m: usize) -> Problem {
+        Problem::ag(m, 49152, 12288, 8)
+    }
+    fn rs(m: usize) -> Problem {
+        Problem::rs(m, 12288, 49152, 8)
+    }
+
+    #[test]
+    fn te_beats_baseline_at_large_m_ag() {
+        // Fig. 4: AG at large m is where TE helps.
+        let p = ag(8192);
+        let te = simulate(&H800_NVLINK, &p, 1);
+        let base = baseline::simulate(&H800_NVLINK, &p);
+        assert!(
+            te.overall_ns < base.overall_ns,
+            "te {} base {}",
+            te.overall_ns,
+            base.overall_ns
+        );
+    }
+
+    #[test]
+    fn te_loses_to_baseline_at_small_m() {
+        // Fig. 4 / Fig. 14: splitting a small GEMM is catastrophic.
+        let p = ag(64);
+        let te = simulate(&A100_NVLINK, &p, 1);
+        let base = baseline::simulate(&A100_NVLINK, &p);
+        assert!(
+            te.overall_ns > base.overall_ns,
+            "te {} base {}",
+            te.overall_ns,
+            base.overall_ns
+        );
+    }
+
+    #[test]
+    fn rs_overlaps_worse_than_ag() {
+        // Fig. 4: the add-dependence chain hurts RS more than AG.
+        let pa = ag(4096);
+        let pr = rs(4096);
+        let te_ag = simulate(&H800_NVLINK, &pa, 1);
+        let te_rs = simulate(&H800_NVLINK, &pr, 1);
+        let b_ag = baseline::simulate(&H800_NVLINK, &pa);
+        let b_rs = baseline::simulate(&H800_NVLINK, &pr);
+        let eff_ag = te_ag.overlap_efficiency(&b_ag);
+        let eff_rs = te_rs.overlap_efficiency(&b_rs);
+        assert!(eff_ag > eff_rs, "AG eff {eff_ag} vs RS eff {eff_rs}");
+    }
+
+    #[test]
+    fn split_gemm_cost_exceeds_nonsplit() {
+        // Even with perfect comm overlap the chunked GEMMs cost more than
+        // the monolithic GEMM (Fig. 5's T_m > T_g).
+        let p = ag(1024);
+        let te = simulate(&A100_NVLINK, &p, 3);
+        assert!(te.overall_ns > te.gemm_nonsplit_ns);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = rs(2048);
+        let a = simulate(&A100_NVLINK, &p, 9).overall_ns;
+        let b = simulate(&A100_NVLINK, &p, 9).overall_ns;
+        assert_eq!(a, b);
+        let c = simulate(&A100_NVLINK, &p, 10).overall_ns;
+        assert_ne!(a, c, "jitter should differ across seeds");
+    }
+}

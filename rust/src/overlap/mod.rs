@@ -1,0 +1,157 @@
+//! The three communication-overlap strategies, as timed schedules on the
+//! cluster simulator:
+//!
+//! * [`baseline`] — non-overlapping PyTorch-style: fastest monolithic
+//!   GEMM + NCCL ring collective, strictly serialized.
+//! * [`medium`] — the prior medium-grained decomposition
+//!   (TransformerEngine UserBuffer): N_TP chunk GEMM kernels on streams
+//!   with chunked P2P, §2.2.
+//! * [`flux`] — the paper's fine-grained fused kernel: tile-level
+//!   decomposition, signals, swizzling, pull/push, tunable comm tiles.
+//!
+//! Plus [`numeric`], the correctness twin that executes the same
+//! decompositions over real host buffers (and PJRT artifacts at the
+//! op level) and checks them against each other.
+
+pub mod baseline;
+pub mod flux;
+pub mod medium;
+pub mod numeric;
+pub mod signals;
+pub mod tiles;
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::gemm::{gemm_time_ns, GemmShape};
+
+pub const BF16: f64 = 2.0;
+
+/// Which fused pattern (paper Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// AllGather(x) then GEMM with column-sharded weight.
+    AgGemm,
+    /// GEMM with row-sharded weight then ReduceScatter.
+    GemmRs,
+}
+
+impl Op {
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::AgGemm => "AllGather+GEMM",
+            Op::GemmRs => "GEMM+ReduceScatter",
+        }
+    }
+}
+
+/// A tensor-parallel GEMM problem in *global* (pre-partition) shape,
+/// matching the paper's notation (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Problem {
+    pub op: Op,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub n_tp: usize,
+}
+
+impl Problem {
+    pub fn ag(m: usize, n: usize, k: usize, n_tp: usize) -> Problem {
+        Problem { op: Op::AgGemm, m, n, k, n_tp }
+    }
+
+    pub fn rs(m: usize, n: usize, k: usize, n_tp: usize) -> Problem {
+        Problem { op: Op::GemmRs, m, n, k, n_tp }
+    }
+
+    /// The local (per-rank) GEMM each strategy must compute.
+    pub fn local_gemm(&self) -> GemmShape {
+        match self.op {
+            Op::AgGemm => GemmShape::new(self.m, self.n / self.n_tp, self.k),
+            Op::GemmRs => GemmShape::new(self.m, self.n, self.k / self.n_tp),
+        }
+    }
+
+    /// Bytes moved by the collective (bf16).
+    pub fn comm_bytes(&self) -> f64 {
+        match self.op {
+            // AllGather of x: [m, k] gathered.
+            Op::AgGemm => self.m as f64 * self.k as f64 * BF16,
+            // ReduceScatter of the [m, n] partial outputs.
+            Op::GemmRs => self.m as f64 * self.n as f64 * BF16,
+        }
+    }
+
+    /// Eq. 1's `GEMM_non-split`: the fastest monolithic local GEMM.
+    pub fn gemm_nonsplit_ns(&self, cluster: &ClusterSpec) -> f64 {
+        gemm_time_ns(&cluster.arch, &self.local_gemm())
+    }
+}
+
+/// Result of simulating one strategy on one problem.
+#[derive(Clone, Copy, Debug)]
+pub struct OpTiming {
+    /// End-to-end time for the slowest rank, ns.
+    pub overall_ns: f64,
+    /// Eq. 1 baseline GEMM time, ns (identical across strategies).
+    pub gemm_nonsplit_ns: f64,
+}
+
+impl OpTiming {
+    /// Eq. 1: Effective Communication Time.
+    pub fn ect_ns(&self) -> f64 {
+        self.overall_ns - self.gemm_nonsplit_ns
+    }
+
+    /// Eq. 2: overlap efficiency against a non-overlapping baseline.
+    pub fn overlap_efficiency(&self, baseline: &OpTiming) -> f64 {
+        1.0 - self.ect_ns() / baseline.ect_ns()
+    }
+
+    pub fn speedup_over(&self, other: &OpTiming) -> f64 {
+        other.overall_ns / self.overall_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::A100_NVLINK;
+
+    #[test]
+    fn local_shapes_follow_fig2() {
+        let ag = Problem::ag(4096, 49152, 12288, 8);
+        assert_eq!(ag.local_gemm(), GemmShape::new(4096, 6144, 12288));
+        let rs = Problem::rs(4096, 12288, 49152, 8);
+        assert_eq!(rs.local_gemm(), GemmShape::new(4096, 12288, 6144));
+    }
+
+    #[test]
+    fn comm_bytes() {
+        let ag = Problem::ag(1024, 49152, 12288, 8);
+        assert_eq!(ag.comm_bytes(), 1024.0 * 12288.0 * 2.0);
+        let rs = Problem::rs(1024, 12288, 49152, 8);
+        assert_eq!(rs.comm_bytes(), 1024.0 * 12288.0 * 2.0);
+    }
+
+    #[test]
+    fn metrics_identities() {
+        let base = OpTiming { overall_ns: 150.0, gemm_nonsplit_ns: 100.0 };
+        let perfect = OpTiming { overall_ns: 100.0, gemm_nonsplit_ns: 100.0 };
+        assert_eq!(base.ect_ns(), 50.0);
+        // Perfect overlap: zero ECT, 100% efficiency (§2.3).
+        assert_eq!(perfect.ect_ns(), 0.0);
+        assert_eq!(perfect.overlap_efficiency(&base), 1.0);
+        // Non-overlap baseline has efficiency 0 against itself.
+        assert_eq!(base.overlap_efficiency(&base), 0.0);
+        // Slower than baseline → negative efficiency.
+        let bad = OpTiming { overall_ns: 220.0, gemm_nonsplit_ns: 100.0 };
+        assert!(bad.overlap_efficiency(&base) < 0.0);
+    }
+
+    #[test]
+    fn gemm_nonsplit_uses_local_shape() {
+        let p = Problem::ag(1024, 49152, 12288, 8);
+        let t = p.gemm_nonsplit_ns(&A100_NVLINK);
+        assert!(t > 0.0);
+    }
+}

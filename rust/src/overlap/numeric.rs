@@ -1,0 +1,286 @@
+//! Numeric twin of the fused kernels: executes the FLUX tile
+//! decomposition over host buffers, with the real signal protocol, in
+//! *arbitrary* interleavings — and must produce results identical to the
+//! monolithic computation. This is the correctness core of the Rust
+//! coordinator: if routing/swizzling/scheduling had an index bug, it
+//! would show up here (and in the cross-check against the Pallas
+//! kernels' PJRT artifacts in rust/tests/).
+
+use anyhow::{ensure, Result};
+
+use crate::collectives::host::{all_to_all, local_reduce, matmul, Mat};
+use crate::overlap::signals::SignalSet;
+use crate::overlap::tiles::{comm_schedule, swizzle_order, tile_dest};
+
+/// Tile-decomposed GEMM+ReduceScatter for one rank (Alg. 1 numeric twin).
+///
+/// a: [M, K_local], b: [K_local, N]. Returns the scattered output
+/// [N_TP][M/N_TP, N]: slot d holds the tiles destined for rank d — what
+/// the fused CUDA epilogue would have P2P-stored into rank d's memory.
+/// `bm` is the row-tile height; traversal follows the §4.1 swizzle.
+pub fn gemm_rs_scattered(
+    a: &Mat,
+    b: &Mat,
+    rank: usize,
+    n_tp: usize,
+    bm: usize,
+    swizzle: bool,
+) -> Result<Vec<Mat>> {
+    let m = a.rows;
+    ensure!(m % (n_tp * bm) == 0, "M={m} must tile into n_tp x bm");
+    let tiles_m = m / bm;
+    let per = tiles_m / n_tp;
+    let order: Vec<usize> = if swizzle {
+        swizzle_order(tiles_m, rank, n_tp)
+    } else {
+        (0..tiles_m).collect()
+    };
+    let mut out: Vec<Mat> =
+        (0..n_tp).map(|_| Mat::zeros(m / n_tp, b.cols)).collect();
+    for &ti in &order {
+        // One thread-block row-tile: compute rows [ti*bm, (ti+1)*bm).
+        let a_tile = a.row_slice(ti * bm, (ti + 1) * bm);
+        let c_tile = matmul(&a_tile, b);
+        // Epilogue: route to the destination rank (TileCoord+GetOutput).
+        let dest = tile_dest(ti, tiles_m, n_tp);
+        let local_i = ti % per;
+        for i in 0..bm {
+            for j in 0..b.cols {
+                *out[dest].at_mut(local_i * bm + i, j) = c_tile.at(i, j);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Full GEMM+ReduceScatter across ranks: per-rank fused kernels, then the
+/// AlltoAll transport + local reduction (§3.1 decoupling).
+pub fn gemm_rs_fused(
+    a_shards: &[Mat],
+    b_shards: &[Mat],
+    bm: usize,
+    swizzle: bool,
+) -> Result<Vec<Mat>> {
+    let n = a_shards.len();
+    ensure!(n == b_shards.len());
+    let scattered: Vec<Vec<Mat>> = a_shards
+        .iter()
+        .zip(b_shards)
+        .enumerate()
+        .map(|(r, (a, b))| gemm_rs_scattered(a, b, r, n, bm, swizzle))
+        .collect::<Result<_>>()?;
+    let received = all_to_all(&scattered)?;
+    Ok(received.iter().map(|rx| local_reduce(rx)).collect())
+}
+
+/// Reference: monolithic GEMMs + direct ReduceScatter.
+pub fn gemm_rs_reference(
+    a_shards: &[Mat],
+    b_shards: &[Mat],
+) -> Result<Vec<Mat>> {
+    let partials: Vec<Mat> = a_shards
+        .iter()
+        .zip(b_shards)
+        .map(|(a, b)| matmul(a, b))
+        .collect();
+    crate::collectives::host::reduce_scatter(&partials)
+}
+
+/// The AllGather+GEMM numeric twin for one rank (Alg. 2+3): the host
+/// loop transfers communication tiles in `transfer_order` (a permutation
+/// of the schedule — tests randomize it to prove order-independence of
+/// the *values*), sets signals; the kernel waits each row-tile's signal
+/// before computing it.
+///
+/// x_shards: all ranks' [M/N, K] shards (rank r may only read its own
+/// rows except through the scheduled transfers — enforced by building
+/// a_agg strictly from transfers). w: [K, N_local].
+pub fn ag_gemm_rank(
+    x_shards: &[Mat],
+    w: &Mat,
+    rank: usize,
+    comm_rows: usize,
+    bm: usize,
+    transfer_order: &[usize],
+) -> Result<Mat> {
+    let n_tp = x_shards.len();
+    let shard_rows = x_shards[0].rows;
+    let m = shard_rows * n_tp;
+    let k = x_shards[0].cols;
+    ensure!(m % bm == 0, "m {m} % bm {bm}");
+    let sched = comm_schedule(m, rank, n_tp, comm_rows, true);
+    // A shorter order = dropped transfers (failure injection): the kernel
+    // must then deadlock on an unset signal rather than compute garbage.
+    ensure!(transfer_order.len() <= sched.len(), "order too long");
+
+    let tiles_per_rank = shard_rows / comm_rows;
+    let mut signals = SignalSet::new(n_tp * tiles_per_rank);
+    // Local tiles' signals preset (§3.2).
+    for t in 0..tiles_per_rank {
+        signals.preset(rank * tiles_per_rank + t);
+    }
+
+    // Aggregated buffer, filled only by transfers (+ local copy).
+    let mut a_agg = Mat::zeros(m, k);
+    for i in 0..shard_rows {
+        for j in 0..k {
+            *a_agg.at_mut(rank * shard_rows + i, j) =
+                x_shards[rank].at(i, j);
+        }
+    }
+    // Host loop in the given order: DataTransfer then SetSignal.
+    for &oi in transfer_order {
+        let t = sched[oi];
+        let src_local0 = t.row0 - t.src * shard_rows;
+        for i in 0..t.rows {
+            for j in 0..k {
+                *a_agg.at_mut(t.row0 + i, j) =
+                    x_shards[t.src].at(src_local0 + i, j);
+            }
+        }
+        signals.set(t.signal)?;
+    }
+
+    // Fused kernel: per row-tile, WaitSignal on every comm tile covering
+    // its rows, then the plain tiled matmul.
+    let mut out = Mat::zeros(m, w.cols);
+    for ti in 0..m / bm {
+        let row0 = ti * bm;
+        let row1 = row0 + bm;
+        let mut row = row0;
+        while row < row1 {
+            let sig = row / comm_rows.min(shard_rows);
+            // Signal index: peer-major over comm tiles.
+            let peer = row / shard_rows;
+            let within = (row - peer * shard_rows) / comm_rows;
+            let _ = sig;
+            signals.wait(peer * tiles_per_rank + within)?;
+            row += comm_rows;
+        }
+        let a_tile = a_agg.row_slice(row0, row1);
+        let c_tile = matmul(&a_tile, w);
+        for i in 0..bm {
+            for j in 0..w.cols {
+                *out.at_mut(row0 + i, j) = c_tile.at(i, j);
+            }
+        }
+    }
+    signals.reset()?;
+    Ok(out)
+}
+
+/// Reference: gather then monolithic GEMM.
+pub fn ag_gemm_reference(x_shards: &[Mat], w: &Mat) -> Result<Mat> {
+    let full = crate::collectives::host::all_gather(x_shards)?;
+    Ok(matmul(&full[0], w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::prng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[test]
+    fn gemm_rs_matches_reference_swizzled_or_not() {
+        forall(24, 0x6E, |rng| {
+            let n = [2usize, 4][rng.below(2) as usize];
+            let bm = 4;
+            let m = n * bm * rng.range(1, 3) as usize;
+            let kl = rng.range(1, 5) as usize * 2;
+            let cols = rng.range(1, 5) as usize * 2;
+            let a: Vec<Mat> = (0..n).map(|_| rand_mat(rng, m, kl)).collect();
+            let b: Vec<Mat> =
+                (0..n).map(|_| rand_mat(rng, kl, cols)).collect();
+            let swizzle = rng.below(2) == 0;
+            let fused = gemm_rs_fused(&a, &b, bm, swizzle).unwrap();
+            let want = gemm_rs_reference(&a, &b).unwrap();
+            for (f, w) in fused.iter().zip(&want) {
+                assert!(f.max_abs_diff(w) < 1e-3, "mismatch");
+            }
+        });
+    }
+
+    #[test]
+    fn scattered_layout_is_the_alltoall_preimage() {
+        let mut rng = Rng::new(3);
+        let (n, bm, m, kl, cols) = (4usize, 2usize, 16usize, 4usize, 6usize);
+        let a = rand_mat(&mut rng, m, kl);
+        let b = rand_mat(&mut rng, kl, cols);
+        let scattered = gemm_rs_scattered(&a, &b, 1, n, bm, true).unwrap();
+        let full = matmul(&a, &b);
+        let per = m / n;
+        for (d, s) in scattered.iter().enumerate() {
+            let want = full.row_slice(d * per, (d + 1) * per);
+            assert!(s.max_abs_diff(&want) < 1e-4, "dest {d}");
+        }
+    }
+
+    #[test]
+    fn ag_gemm_value_is_transfer_order_independent() {
+        // The paper's schedule optimizations (§4.1/4.3) reorder
+        // communication freely; values must be invariant. Randomized
+        // interleavings all agree with the reference.
+        forall(24, 0xA6, |rng| {
+            let n = [2usize, 4][rng.below(2) as usize];
+            let comm_rows = 2usize;
+            let shard_rows = comm_rows * rng.range(1, 4) as usize;
+            let m = shard_rows * n;
+            let bm = if m % 4 == 0 { 4 } else { 2 };
+            let k = rng.range(1, 5) as usize * 2;
+            let cols = rng.range(1, 4) as usize * 2;
+            let x: Vec<Mat> =
+                (0..n).map(|_| rand_mat(rng, shard_rows, k)).collect();
+            let rank = rng.below(n as u64) as usize;
+            let w = rand_mat(rng, k, cols);
+            let sched_len =
+                comm_schedule(m, rank, n, comm_rows, true).len();
+            let mut order: Vec<usize> = (0..sched_len).collect();
+            rng.shuffle(&mut order);
+            let got =
+                ag_gemm_rank(&x, &w, rank, comm_rows, bm, &order).unwrap();
+            let want = ag_gemm_reference(&x, &w).unwrap();
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn ag_gemm_detects_missing_transfer_as_deadlock() {
+        // Failure injection: drop one transfer — the kernel must deadlock
+        // (wait on unset signal), not silently compute garbage.
+        let mut rng = Rng::new(9);
+        let n = 2;
+        let x: Vec<Mat> = (0..n).map(|_| rand_mat(&mut rng, 4, 4)).collect();
+        let w = rand_mat(&mut rng, 4, 2);
+        let sched_len = comm_schedule(8, 0, n, 2, true).len();
+        let order: Vec<usize> = (0..sched_len - 1).collect(); // drop last
+        let err = ag_gemm_rank(&x, &w, 0, 2, 2, &order);
+        assert!(err.is_err(), "must fail: {err:?}");
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("deadlock") || msg.contains("never set"),
+                "got: {msg}");
+    }
+
+    #[test]
+    fn all_ranks_agree_on_ag_gemm_rows() {
+        // Every rank computes x_full @ w_r; the gathered input must be
+        // identical across ranks regardless of their different ring
+        // orders.
+        let mut rng = Rng::new(11);
+        let n = 4;
+        let x: Vec<Mat> = (0..n).map(|_| rand_mat(&mut rng, 4, 6)).collect();
+        let w = rand_mat(&mut rng, 6, 4);
+        let sched_len = comm_schedule(16, 0, n, 2, true).len();
+        let order: Vec<usize> = (0..sched_len).collect();
+        let outs: Vec<Mat> = (0..n)
+            .map(|r| ag_gemm_rank(&x, &w, r, 2, 4, &order).unwrap())
+            .collect();
+        for o in &outs[1..] {
+            assert!(o.max_abs_diff(&outs[0]) < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Signal protocol (§4.3 "Signals"): 32-bit flags set by the host
+//! transfer loop (cuStreamWriteValue) and spun on by kernel tiles.
+//!
+//! The numeric twin executes sequentially, so `wait` must *observe* a
+//! set signal — a wait on an unset signal is the deadlock the real
+//! kernel would hit. This module enforces the protocol's safety
+//! invariants (preset locals, set-before-wait, no double-set, reset
+//! between uses) and records the observed ordering for tests.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct SignalSet {
+    /// Logical step at which each signal was set (None = unset).
+    set_at: Vec<Option<u64>>,
+    /// Number of waits observed per signal.
+    waits: Vec<u64>,
+    step: u64,
+}
+
+impl SignalSet {
+    /// All signals allocated contiguously and unset (the paper allocates
+    /// them contiguously for easy preset/reset).
+    pub fn new(n: usize) -> SignalSet {
+        SignalSet { set_at: vec![None; n], waits: vec![0; n], step: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.set_at.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set_at.is_empty()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.step += 1;
+        self.step
+    }
+
+    /// Preset (local tiles' signals are always true, §3.2).
+    pub fn preset(&mut self, i: usize) {
+        let s = self.tick();
+        self.set_at[i] = Some(s);
+    }
+
+    /// Host-side SetSignal after a DataTransfer completes.
+    pub fn set(&mut self, i: usize) -> Result<()> {
+        if self.set_at[i].is_some() {
+            bail!("signal {i} set twice without reset");
+        }
+        let s = self.tick();
+        self.set_at[i] = Some(s);
+        Ok(())
+    }
+
+    /// Kernel-side WaitSignal: in the sequential twin the signal must
+    /// already be set, otherwise the fused kernel would deadlock.
+    pub fn wait(&mut self, i: usize) -> Result<()> {
+        match self.set_at[i] {
+            Some(_) => {
+                self.waits[i] += 1;
+                Ok(())
+            }
+            None => bail!(
+                "deadlock: tile waited on signal {i} before its transfer \
+                 was issued"
+            ),
+        }
+    }
+
+    /// Reset after the GEMM completes (§4.3: reset with a stream+event to
+    /// avoid racing the next iteration). Fails if any signal was never
+    /// consumed *and* never set — that would mean the schedule under-
+    /// covered the input.
+    pub fn reset(&mut self) -> Result<()> {
+        for (i, s) in self.set_at.iter().enumerate() {
+            if s.is_none() {
+                bail!("signal {i} never set before reset");
+            }
+        }
+        self.set_at.iter_mut().for_each(|s| *s = None);
+        self.waits.iter_mut().for_each(|w| *w = 0);
+        Ok(())
+    }
+
+    pub fn wait_count(&self, i: usize) -> u64 {
+        self.waits[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path() {
+        let mut s = SignalSet::new(4);
+        s.preset(0);
+        s.set(1).unwrap();
+        s.set(2).unwrap();
+        s.set(3).unwrap();
+        for i in 0..4 {
+            s.wait(i).unwrap();
+        }
+        s.reset().unwrap();
+        // Reusable after reset.
+        s.set(1).unwrap();
+    }
+
+    #[test]
+    fn wait_before_set_is_deadlock() {
+        let mut s = SignalSet::new(2);
+        assert!(s.wait(1).is_err());
+    }
+
+    #[test]
+    fn double_set_rejected() {
+        let mut s = SignalSet::new(1);
+        s.set(0).unwrap();
+        assert!(s.set(0).is_err());
+    }
+
+    #[test]
+    fn reset_requires_full_coverage() {
+        let mut s = SignalSet::new(2);
+        s.set(0).unwrap();
+        assert!(s.reset().is_err(), "signal 1 never set");
+    }
+
+    #[test]
+    fn wait_counts() {
+        let mut s = SignalSet::new(1);
+        s.preset(0);
+        s.wait(0).unwrap();
+        s.wait(0).unwrap();
+        assert_eq!(s.wait_count(0), 2);
+    }
+}

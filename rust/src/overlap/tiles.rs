@@ -1,0 +1,206 @@
+//! Tile bookkeeping: swizzling, destination routing, communication
+//! schedules. Rust twin of `python/compile/kernels` (ref.swizzle_order,
+//! ref.ring_comm_order, ref.tile_dest, flux_ag_gemm.comm_tile_schedule);
+//! cross-checked against `artifacts/golden_swizzle.json` in
+//! rust/tests/golden.rs.
+
+/// FLUX tile-coordinate swizzling (§4.1): rank r starts its traversal at
+/// peer (r+1)'s block, so at any instant the N ranks write to N distinct
+/// destination devices (Fig. 7).
+pub fn swizzle_order(num_tiles: usize, rank: usize, n_tp: usize) -> Vec<usize> {
+    assert!(num_tiles % n_tp == 0, "tiles {num_tiles} % n_tp {n_tp} != 0");
+    let per = num_tiles / n_tp;
+    let start = ((rank + 1) % n_tp) * per;
+    (0..num_tiles).map(|i| (start + i) % num_tiles).collect()
+}
+
+/// AG-side traversal: local rank's tiles first (their signals are
+/// preset), then peers in ring-arrival order. Twin of
+/// `_swizzle_m_local_first` in flux_ag_gemm.py.
+pub fn swizzle_order_local_first(
+    num_tiles: usize,
+    rank: usize,
+    n_tp: usize,
+) -> Vec<usize> {
+    assert!(num_tiles % n_tp == 0);
+    let per = num_tiles / n_tp;
+    let start = rank * per;
+    (0..num_tiles).map(|i| (start + i) % num_tiles).collect()
+}
+
+/// Host-side communication order on NVLink (§4.3): ring starting after
+/// the local rank; e.g. rank 5 of 8 → [6, 7, 0, 1, 2, 3, 4].
+pub fn ring_comm_order(rank: usize, n_tp: usize) -> Vec<usize> {
+    (0..n_tp - 1).map(|i| (rank + 1 + i) % n_tp).collect()
+}
+
+/// Destination rank of an output row-tile in GEMM+ReduceScatter.
+pub fn tile_dest(tile_m: usize, tiles_m: usize, n_tp: usize) -> usize {
+    debug_assert!(tiles_m % n_tp == 0);
+    tile_m / (tiles_m / n_tp)
+}
+
+/// One host-side tile transfer of the AllGather (Alg. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommTile {
+    pub src: usize,
+    pub dst: usize,
+    /// First row of the aggregated A buffer this tile covers.
+    pub row0: usize,
+    pub rows: usize,
+    /// Signal index guarding this tile (peer-major, tile-minor).
+    pub signal: usize,
+}
+
+/// The host transfer schedule for one rank's AllGather (Alg. 3), ring
+/// order after the local rank, `rows` rows per communication tile.
+/// Twin of flux_ag_gemm.comm_tile_schedule (pull orientation; the push
+/// variant swaps src/dst at the caller).
+pub fn comm_schedule(
+    m: usize,
+    rank: usize,
+    n_tp: usize,
+    rows: usize,
+    pull: bool,
+) -> Vec<CommTile> {
+    assert!(m % n_tp == 0, "m {m} % n_tp {n_tp} != 0");
+    let rows_per_rank = m / n_tp;
+    assert!(
+        rows_per_rank % rows == 0,
+        "rows/rank {rows_per_rank} not divisible by comm tile {rows}"
+    );
+    let tiles_per_rank = rows_per_rank / rows;
+    let mut out = Vec::with_capacity((n_tp - 1) * tiles_per_rank);
+    for peer in ring_comm_order(rank, n_tp) {
+        for t in 0..tiles_per_rank {
+            out.push(CommTile {
+                src: if pull { peer } else { rank },
+                dst: if pull { rank } else { peer },
+                row0: peer * rows_per_rank + t * rows,
+                rows,
+                signal: peer * tiles_per_rank + t,
+            });
+        }
+    }
+    out
+}
+
+/// Candidate communication-tile row counts for auto-tuning (§4.3
+/// Fig. 10): start at the medium-grained chunk size (m / N_TP) and halve
+/// down to the GEMM tile's bm.
+pub fn comm_tile_candidates(m: usize, n_tp: usize, bm: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut rows = m / n_tp;
+    while rows >= bm && rows >= 1 {
+        out.push(rows);
+        if rows % 2 != 0 {
+            break;
+        }
+        rows /= 2;
+    }
+    if out.is_empty() {
+        out.push(m / n_tp);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn swizzle_is_permutation() {
+        forall(64, 0xA11CE, |rng| {
+            let n_tp = [2usize, 4, 8][rng.below(3) as usize];
+            let per = rng.range(1, 9) as usize;
+            let rank = rng.below(n_tp as u64) as usize;
+            let order = swizzle_order(n_tp * per, rank, n_tp);
+            let mut s = order.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..n_tp * per).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn swizzle_ranks_never_collide() {
+        // The Fig.-7 invariant: at each step, the N ranks' current tiles
+        // map to N distinct destination ranks.
+        forall(64, 0xBEE, |rng| {
+            let n_tp = [2usize, 4, 8][rng.below(3) as usize];
+            let per = rng.range(1, 9) as usize;
+            let num = n_tp * per;
+            let orders: Vec<Vec<usize>> =
+                (0..n_tp).map(|r| swizzle_order(num, r, n_tp)).collect();
+            for step in 0..num {
+                let mut dests: Vec<usize> = (0..n_tp)
+                    .map(|r| tile_dest(orders[r][step], num, n_tp))
+                    .collect();
+                dests.sort_unstable();
+                dests.dedup();
+                assert_eq!(dests.len(), n_tp, "collision at step {step}");
+            }
+        });
+    }
+
+    #[test]
+    fn local_first_starts_at_own_block() {
+        let order = swizzle_order_local_first(16, 2, 4);
+        assert_eq!(order[0], 8); // rank 2's first tile (per = 4)
+        assert_eq!(tile_dest(order[0], 16, 4), 2);
+    }
+
+    #[test]
+    fn ring_order_paper_example() {
+        assert_eq!(ring_comm_order(5, 8), vec![6, 7, 0, 1, 2, 3, 4]);
+        assert_eq!(ring_comm_order(0, 2), vec![1]);
+    }
+
+    #[test]
+    fn comm_schedule_covers_remote_rows_exactly() {
+        forall(64, 0xC0FFEE, |rng| {
+            let n_tp = [2usize, 4, 8][rng.below(3) as usize];
+            let tiles_per_rank = [1usize, 2, 4][rng.below(3) as usize];
+            let rows = 16usize;
+            let rank = rng.below(n_tp as u64) as usize;
+            let m = n_tp * tiles_per_rank * rows;
+            let pull = rng.below(2) == 0;
+            let sched = comm_schedule(m, rank, n_tp, rows, pull);
+            let mut covered = vec![false; m];
+            for t in &sched {
+                let peer = if pull { t.src } else { t.dst };
+                assert_ne!(peer, rank, "no transfer of local rows");
+                for r in t.row0..t.row0 + t.rows {
+                    assert_eq!(r / (m / n_tp), peer);
+                    assert!(!covered[r], "row {r} transferred twice");
+                    covered[r] = true;
+                }
+            }
+            let rpr = m / n_tp;
+            for (r, c) in covered.iter().enumerate() {
+                let local = r / rpr == rank;
+                assert_eq!(*c, !local, "row {r} coverage");
+            }
+        });
+    }
+
+    #[test]
+    fn comm_schedule_signals_unique() {
+        let sched = comm_schedule(256, 3, 8, 16, true);
+        let mut sigs: Vec<usize> = sched.iter().map(|t| t.signal).collect();
+        sigs.sort_unstable();
+        sigs.dedup();
+        assert_eq!(sigs.len(), sched.len());
+    }
+
+    #[test]
+    fn comm_tile_candidates_halve_down_to_bm() {
+        // m=8192, N=8: chunk 1024 → 512 → 256 → 128 (bm).
+        assert_eq!(
+            comm_tile_candidates(8192, 8, 128),
+            vec![1024, 512, 256, 128]
+        );
+        // Tiny m: single candidate.
+        assert_eq!(comm_tile_candidates(64, 8, 8), vec![8]);
+    }
+}

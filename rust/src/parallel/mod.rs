@@ -1,0 +1,219 @@
+//! Training orchestrator: DP x PP x TP composition with a 1F1B pipeline
+//! schedule — the Megatron-LM-shaped substrate for the Fig. 16 training
+//! rows (128 GPUs: 2-way data, 8-way pipeline, 8-way tensor parallel).
+//!
+//! Only the TP-op execution differs between the compared systems
+//! (Megatron-LM = non-overlap, TransformerEngine = medium, Flux = fused);
+//! pipeline and data parallel costs are common structure.
+
+pub mod schedule;
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::comm::internode_exchange_ns;
+use crate::cost::gemm::gemm_time_ns;
+use crate::model::analysis::{
+    layer_attention_extra_ns, layer_bwd_ops, layer_fwd_ops,
+};
+use crate::model::configs::TransformerConfig;
+use crate::overlap::flux::{simulate as flux_sim, FluxConfig};
+use crate::overlap::{baseline, medium, Problem};
+
+/// Which overlap system executes the TP ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Megatron-LM / vLLM: fastest GEMM + NCCL, no overlap.
+    NonOverlap,
+    /// TransformerEngine UserBuffer: medium-grained chunk overlap.
+    Medium,
+    /// FLUX fused fine-grained overlap (auto-tuned per shape).
+    Flux,
+}
+
+impl Method {
+    pub const ALL: [Method; 3] =
+        [Method::NonOverlap, Method::Medium, Method::Flux];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::NonOverlap => "non-overlap",
+            Method::Medium => "TE-medium",
+            Method::Flux => "Flux",
+        }
+    }
+
+    /// Simulated time of one TP op under this method.
+    pub fn op_ns(self, cluster: &ClusterSpec, p: &Problem, seed: u64) -> f64 {
+        match self {
+            Method::NonOverlap => baseline::simulate(cluster, p).overall_ns,
+            Method::Medium => medium::simulate(cluster, p, seed).overall_ns,
+            Method::Flux => {
+                // The tuned direction per interconnect; full tuning is
+                // tuner::tune (used by the benches); the training loop
+                // uses the converged config for speed.
+                let cfg = FluxConfig::for_cluster(cluster);
+                flux_sim(cluster, p, &cfg, seed).overall_ns
+            }
+        }
+    }
+}
+
+/// The 128-GPU layout of §5.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+impl Layout {
+    pub const PAPER_TRAINING: Layout = Layout { dp: 2, pp: 8, tp: 8 };
+
+    pub fn gpus(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+}
+
+/// Per-microbatch stage times.
+#[derive(Clone, Copy, Debug)]
+pub struct StageTimes {
+    pub fwd_ns: f64,
+    pub bwd_ns: f64,
+}
+
+/// Time of one pipeline stage's forward/backward for one microbatch.
+pub fn stage_times(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    layout: &Layout,
+    micro_tokens: usize,
+    seq: usize,
+    method: Method,
+    seed: u64,
+) -> StageTimes {
+    let layers = model.n_layers / layout.pp;
+    let m = micro_tokens;
+    let mut fwd = 0.0;
+    for p in layer_fwd_ops(model, m, layout.tp) {
+        fwd += method.op_ns(cluster, &p, seed);
+    }
+    fwd += layer_attention_extra_ns(cluster, model, m, seq, layout.tp);
+    // Backward: TP'd dgrad ops (collectives interchanged) + local wgrad
+    // GEMMs (no TP collective) + attention backward (~2x fwd attn).
+    let mut bwd = 0.0;
+    for p in layer_bwd_ops(model, m, layout.tp) {
+        bwd += method.op_ns(cluster, &p, seed);
+        bwd += gemm_time_ns(&cluster.arch, &p.local_gemm()); // wgrad
+    }
+    bwd += 2.0 * layer_attention_extra_ns(cluster, model, m, seq, layout.tp);
+    StageTimes {
+        fwd_ns: fwd * layers as f64,
+        bwd_ns: bwd * layers as f64,
+    }
+}
+
+/// One full training step (Fig. 16 training): 1F1B pipeline over
+/// `microbatches`, plus inter-stage activation sends, the DP gradient
+/// all-reduce and the optimizer step.
+pub fn train_step_ns(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    layout: &Layout,
+    microbatches: usize,
+    micro_tokens: usize,
+    seq: usize,
+    method: Method,
+    seed: u64,
+) -> f64 {
+    let st = stage_times(
+        cluster, model, layout, micro_tokens, seq, method, seed,
+    );
+    // Inter-stage activation transfer per microbatch boundary (PP ranks
+    // live on different nodes at this scale: NIC path).
+    let act_bytes = micro_tokens as f64 * model.d_model as f64 * 2.0;
+    let hop = internode_exchange_ns(cluster, act_bytes);
+    let pipe = schedule::one_f1b_ns(
+        layout.pp,
+        microbatches,
+        st.fwd_ns,
+        st.bwd_ns,
+        hop,
+    );
+    // DP gradient ring all-reduce of this GPU's parameter shard, bf16.
+    // Megatron buckets gradients and overlaps the all-reduce with the
+    // remaining backward passes; only the tail past the backward work
+    // is exposed.
+    let params_per_gpu =
+        model.params() / (layout.pp * layout.tp) as f64;
+    let grad_bytes = params_per_gpu * 2.0;
+    let dp_ar = if layout.dp > 1 {
+        let wire = 2.0 * (layout.dp - 1) as f64 / layout.dp as f64
+            * grad_bytes
+            / cluster.nic_gbps_per_gpu;
+        let bwd_window = 0.8 * microbatches as f64 * st.bwd_ns;
+        (wire - bwd_window).max(0.05 * wire) // tail bucket stays exposed
+    } else {
+        0.0
+    };
+    // Optimizer: Adam over the shard, memory-bound (~6 passes over
+    // params in fp32 master copies).
+    let opt = 6.0 * params_per_gpu * 4.0 / cluster.arch.hbm_gbps;
+    pipe + dp_ar + opt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+    use crate::model::configs::GPT3_175B;
+
+    const LAYOUT: Layout = Layout::PAPER_TRAINING;
+
+    fn step(cluster: &ClusterSpec, method: Method) -> f64 {
+        train_step_ns(
+            cluster, &GPT3_175B, &LAYOUT, 16, 2048, 2048, method, 3,
+        )
+    }
+
+    #[test]
+    fn layout_is_128_gpus() {
+        assert_eq!(LAYOUT.gpus(), 128);
+    }
+
+    #[test]
+    fn flux_speedup_tracks_comm_portion() {
+        // Fig. 16 training: ~1.24x on PCIe, ~1.04-1.05x on A100 NVLink,
+        // ~1.10x on H800 over Megatron-LM. Shape check: the PCIe speedup
+        // must dominate, NVLink stays modest.
+        let sp = |c: &ClusterSpec| {
+            step(c, Method::NonOverlap) / step(c, Method::Flux)
+        };
+        let pcie = sp(&A100_PCIE);
+        let nvl = sp(&A100_NVLINK);
+        let h800 = sp(&H800_NVLINK);
+        assert!(pcie > 1.10 && pcie < 1.60, "pcie speedup {pcie}");
+        assert!(nvl > 1.00 && nvl < 1.20, "nvlink speedup {nvl}");
+        // H800 overshoots the paper's 1.10x here (see EXPERIMENTS.md:
+        // the simulator exposes all baseline TP comm, the production
+        // Megatron hides some behind PP/DP traffic).
+        assert!(h800 > 1.00 && h800 < 1.45, "h800 speedup {h800}");
+        assert!(pcie > nvl && h800 > nvl);
+    }
+
+    #[test]
+    fn flux_beats_te_in_training() {
+        for c in [&A100_PCIE, &A100_NVLINK, &H800_NVLINK] {
+            assert!(
+                step(c, Method::Flux) < step(c, Method::Medium),
+                "{}", c.name
+            );
+        }
+    }
+
+    #[test]
+    fn step_time_plausible_absolute() {
+        // GPT-3 175B, 16 microbatches of 2048 tokens on 128 A100s:
+        // hundreds of ms to a few seconds per step.
+        let t = step(&A100_NVLINK, Method::NonOverlap);
+        assert!(t > 0.2e9 && t < 20.0e9, "step {t} ns");
+    }
+}

@@ -1,0 +1,53 @@
+//! 1F1B (one-forward-one-backward) pipeline schedule timing.
+//!
+//! The standard non-interleaved 1F1B of PipeDream-Flush / Megatron-LM:
+//! warmup of (p - stage) forwards, steady-state alternation, cooldown.
+//! We time the critical path of the whole pipeline: with per-microbatch
+//! forward f, backward b and inter-stage hop h,
+//!
+//!   T = (p - 1) * (f + h)            // pipeline fill
+//!     + m * (f + b)                  // steady state on the last stage
+//!     + (p - 1) * (b + h)            // drain
+//!
+//! which is the familiar (m + p - 1) * (f + b) minus the overlap saved in
+//! steady state, expressed directly.
+
+/// Total 1F1B pipeline time for `m` microbatches over `p` stages.
+pub fn one_f1b_ns(p: usize, m: usize, f: f64, b: f64, hop: f64) -> f64 {
+    assert!(p >= 1 && m >= 1);
+    let fill = (p - 1) as f64 * (f + hop);
+    let steady = m as f64 * (f + b);
+    let drain = (p - 1) as f64 * (b + hop);
+    fill + steady + drain
+}
+
+/// Pipeline bubble fraction: wasted time / total.
+pub fn bubble_fraction(p: usize, m: usize) -> f64 {
+    (p - 1) as f64 / (m + p - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let t = one_f1b_ns(1, 4, 10.0, 20.0, 5.0);
+        assert_eq!(t, 4.0 * 30.0);
+        assert_eq!(bubble_fraction(1, 4), 0.0);
+    }
+
+    #[test]
+    fn fill_and_drain_grow_with_stages() {
+        let t2 = one_f1b_ns(2, 8, 10.0, 20.0, 1.0);
+        let t8 = one_f1b_ns(8, 8, 10.0, 20.0, 1.0);
+        assert!(t8 > t2);
+        // 8 stages, 8 microbatches: t = 7*11 + 8*30 + 7*21 = 464.
+        assert_eq!(t8, 7.0 * 11.0 + 240.0 + 7.0 * 21.0);
+    }
+
+    #[test]
+    fn more_microbatches_amortize_the_bubble() {
+        assert!(bubble_fraction(8, 64) < bubble_fraction(8, 8));
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them from the Rust hot path.
+//!
+//! This is the only place Python's output crosses into Rust: HLO *text*
+//! (not serialized protos — see python/compile/aot.py and
+//! /opt/xla-example/README.md) is parsed by the XLA text parser, compiled
+//! once per artifact on the PJRT CPU client, and cached. Weights are raw
+//! f32 little-endian `.bin` files indexed by `manifest.json`.
+
+pub mod registry;
+
+pub use registry::{Manifest, Runtime};
+
+use anyhow::{anyhow, Result};
+
+/// Build an f32 literal of the given shape from host data.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(
+        n == data.len(),
+        "shape {dims:?} wants {n} elements, got {}",
+        data.len()
+    );
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape from host data.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/element mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Extract a literal's f32 contents.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec<f32>: {e:?}"))
+}

@@ -1,0 +1,192 @@
+//! Artifact registry: manifest parsing, lazy compilation, execution.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Model config (tiny transformer served end-to-end).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_tp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub smax: usize,
+    pub hd_local: usize,
+    pub ff_local: usize,
+    /// Op-level kernel shapes.
+    pub op_n_tp: usize,
+    pub op_m: usize,
+    pub op_k: usize,
+    pub op_n: usize,
+    /// artifact name -> hlo file (relative to artifacts dir).
+    pub artifacts: BTreeMap<String, String>,
+    /// weight name -> (bin file, shape).
+    pub weights: BTreeMap<String, (String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let j = Json::parse(&text)?;
+        let cfg = j.get("config")?;
+        let get = |k: &str| -> Result<usize> { cfg.get(k)?.as_usize() };
+        let op = j.get("op_level")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts
+                .insert(name.clone(), a.get("file")?.as_str()?.to_string());
+        }
+        let mut weights = BTreeMap::new();
+        for (name, w) in j.get("weights")?.as_obj()? {
+            weights.insert(
+                name.clone(),
+                (
+                    w.get("file")?.as_str()?.to_string(),
+                    w.get("shape")?.usize_vec()?,
+                ),
+            );
+        }
+        Ok(Manifest {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            n_layers: get("n_layers")?,
+            d_ff: get("d_ff")?,
+            n_tp: get("n_tp")?,
+            batch: get("batch")?,
+            seq: get("seq")?,
+            smax: get("smax")?,
+            hd_local: get("hd_local")?,
+            ff_local: get("ff_local")?,
+            op_n_tp: op.get("n_tp")?.as_usize()?,
+            op_m: op.get("m")?.as_usize()?,
+            op_k: op.get("k")?.as_usize()?,
+            op_n: op.get("n")?.as_usize()?,
+            artifacts,
+            weights,
+        })
+    }
+}
+
+/// The runtime: PJRT CPU client + compiled-executable cache + weights.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Compilation accounting (perf reporting).
+    pub compile_ns: u128,
+    pub execute_calls: u64,
+}
+
+impl Runtime {
+    /// Default artifacts location: `$FLUX_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("FLUX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&Self::artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            manifest,
+            client,
+            executables: BTreeMap::new(),
+            compile_ns: 0,
+            execute_calls: 0,
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let file = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.compile_ns += t0.elapsed().as_nanos();
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are borrowed literals (weights stay
+    /// resident across calls — no per-call clones on the hot path); the
+    /// (always tuple-shaped, `return_tuple=True`) output is decomposed.
+    pub fn run(
+        &mut self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self.executables.get(name).unwrap();
+        self.execute_calls += 1;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name} to_literal: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow!("{name} tuple decompose: {e:?}"))
+    }
+
+    /// Load a weight tensor (f32 LE bin) as a Literal.
+    pub fn weight(&self, name: &str) -> Result<xla::Literal> {
+        let (file, shape) = self
+            .manifest
+            .weights
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown weight {name:?}"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{file}: length not a multiple of 4");
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        super::literal_f32(shape, &data)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+}

@@ -1,0 +1,280 @@
+//! Continuous batcher: the request-level scheduler of the serving
+//! coordinator (vLLM-style iteration-level scheduling).
+//!
+//! Policy: prefill-priority continuous batching. Each scheduler tick
+//! produces either one PREFILL batch (queued requests, up to
+//! `max_prefill_batch`, admitted only if the KV manager has blocks) or
+//! one DECODE step over all running sequences (up to `max_decode_batch`;
+//! beyond that, round-robin chunks). This is exactly the shape of the
+//! paper's inference evaluation: prefill batches of 8 x 2048 tokens,
+//! decode batches of 64/512 (Fig. 16/17).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::serving::kvcache::KvCacheManager;
+use crate::serving::request::{Request, RequestState};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_prefill_batch: usize,
+    pub max_decode_batch: usize,
+    /// Cap on prompt length (artifact static shape at the tiny scale).
+    pub max_prompt: usize,
+    /// Cap on total sequence length.
+    pub max_seq: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_prefill_batch: 4,
+            max_decode_batch: 4,
+            max_prompt: 64,
+            max_seq: 128,
+        }
+    }
+}
+
+/// What the engine should run next.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Work {
+    /// Prefill these request ids together.
+    Prefill(Vec<u64>),
+    /// One decode step for these request ids.
+    Decode(Vec<u64>),
+    /// Nothing runnable (queue empty / all finished).
+    Idle,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<u64>,
+    running: Vec<u64>,
+    pub requests: Vec<Request>,
+    /// Scheduling decisions made (reporting).
+    pub prefill_batches: u64,
+    pub decode_steps: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            requests: Vec::new(),
+            prefill_batches: 0,
+            decode_steps: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) -> u64 {
+        assert!(
+            req.prompt.len() <= self.cfg.max_prompt,
+            "prompt {} exceeds max {}",
+            req.prompt.len(),
+            self.cfg.max_prompt
+        );
+        let id = req.id;
+        debug_assert!(self.requests.iter().all(|r| r.id != id));
+        self.requests.push(req);
+        self.queue.push_back(id);
+        id
+    }
+
+    pub fn get(&self, id: u64) -> &Request {
+        self.requests.iter().find(|r| r.id == id).unwrap()
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> &mut Request {
+        self.requests.iter_mut().find(|r| r.id == id).unwrap()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+
+    /// Pick the next work item. Prefill-priority: drain the admission
+    /// queue whenever KV blocks allow; otherwise decode.
+    pub fn next_work(&mut self, kv: &mut KvCacheManager) -> Result<Work> {
+        // Admit as many queued requests as fit (up to the batch cap).
+        let mut batch = Vec::new();
+        while batch.len() < self.cfg.max_prefill_batch {
+            let Some(&id) = self.queue.front() else { break };
+            let len = self.get(id).prompt.len();
+            if !kv.can_admit(len) {
+                break; // backpressure: wait for blocks to free
+            }
+            kv.admit(id, len)?;
+            self.queue.pop_front();
+            batch.push(id);
+        }
+        if !batch.is_empty() {
+            for &id in &batch {
+                self.get_mut(id).state = RequestState::Decoding;
+                self.running.push(id);
+            }
+            self.prefill_batches += 1;
+            return Ok(Work::Prefill(batch));
+        }
+        if !self.running.is_empty() {
+            let step: Vec<u64> = self
+                .running
+                .iter()
+                .copied()
+                .take(self.cfg.max_decode_batch)
+                .collect();
+            self.decode_steps += 1;
+            return Ok(Work::Decode(step));
+        }
+        Ok(Work::Idle)
+    }
+
+    /// Record one generated token for each id; retire finished requests
+    /// (freeing KV) at `now`.
+    pub fn complete_decode(
+        &mut self,
+        ids: &[u64],
+        tokens: &[i32],
+        kv: &mut KvCacheManager,
+        now: f64,
+    ) -> Result<Vec<u64>> {
+        assert_eq!(ids.len(), tokens.len());
+        let mut finished = Vec::new();
+        for (&id, &tok) in ids.iter().zip(tokens) {
+            kv.append_token(id)?;
+            let cfg_max_seq = self.cfg.max_seq;
+            let r = self.get_mut(id);
+            r.generated.push(tok);
+            if r.is_done() || r.total_len() >= cfg_max_seq {
+                r.state = RequestState::Finished;
+                r.finished_ns = Some(now);
+                finished.push(id);
+            }
+        }
+        for id in &finished {
+            kv.release(*id)?;
+            self.running.retain(|x| x != id);
+        }
+        // Fairness: rotate so decode chunks round-robin over running.
+        if self.running.len() > self.cfg.max_decode_batch {
+            let n = self.cfg.max_decode_batch.min(self.running.len());
+            self.running.rotate_left(n);
+        }
+        Ok(finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize, new: usize) -> Request {
+        Request::new(id, 0.0, vec![1; prompt_len], new)
+    }
+
+    fn setup() -> (Batcher, KvCacheManager) {
+        (Batcher::new(BatcherConfig::default()),
+         KvCacheManager::new(32, 16))
+    }
+
+    #[test]
+    fn prefill_has_priority_then_decode() {
+        let (mut b, mut kv) = setup();
+        b.submit(req(0, 10, 2));
+        b.submit(req(1, 10, 2));
+        assert_eq!(
+            b.next_work(&mut kv).unwrap(),
+            Work::Prefill(vec![0, 1])
+        );
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Decode(vec![0, 1]));
+    }
+
+    #[test]
+    fn prefill_batch_caps_at_config() {
+        let (mut b, mut kv) = setup();
+        for i in 0..6 {
+            b.submit(req(i, 4, 1));
+        }
+        match b.next_work(&mut kv).unwrap() {
+            Work::Prefill(ids) => assert_eq!(ids.len(), 4),
+            w => panic!("expected prefill, got {w:?}"),
+        }
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn kv_backpressure_blocks_admission() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let mut kv = KvCacheManager::new(3, 16); // tiny pool
+        b.submit(req(0, 40, 1)); // needs all 3 blocks
+        b.submit(req(1, 16, 1));
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![0]));
+        // Request 1 cannot be admitted: decode instead.
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Decode(vec![0]));
+        // Finish 0 -> blocks free -> 1 admits.
+        let fin = b
+            .complete_decode(&[0], &[9], &mut kv, 1.0)
+            .unwrap();
+        assert_eq!(fin, vec![0]);
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![1]));
+    }
+
+    #[test]
+    fn finished_requests_free_blocks_and_leave_running() {
+        let (mut b, mut kv) = setup();
+        b.submit(req(0, 8, 1));
+        b.next_work(&mut kv).unwrap();
+        let fin = b.complete_decode(&[0], &[5], &mut kv, 2.0).unwrap();
+        assert_eq!(fin, vec![0]);
+        assert_eq!(b.running(), 0);
+        assert!(b.all_done());
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(b.get(0).generated, vec![5]);
+        assert_eq!(b.get(0).finished_ns, Some(2.0));
+    }
+
+    #[test]
+    fn decode_round_robins_past_the_cap() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_prefill_batch: 8,
+            max_decode_batch: 2,
+            ..Default::default()
+        });
+        let mut kv = KvCacheManager::new(64, 16);
+        for i in 0..4 {
+            b.submit(req(i, 4, 10));
+        }
+        b.next_work(&mut kv).unwrap(); // prefill all 4
+        let w1 = b.next_work(&mut kv).unwrap();
+        assert_eq!(w1, Work::Decode(vec![0, 1]));
+        b.complete_decode(&[0, 1], &[1, 1], &mut kv, 1.0).unwrap();
+        let w2 = b.next_work(&mut kv).unwrap();
+        assert_eq!(w2, Work::Decode(vec![2, 3]), "round robin");
+    }
+
+    #[test]
+    fn max_seq_terminates_long_generations() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_seq: 6,
+            ..Default::default()
+        });
+        let mut kv = KvCacheManager::new(8, 4);
+        b.submit(req(0, 4, 100));
+        b.next_work(&mut kv).unwrap();
+        b.complete_decode(&[0], &[1], &mut kv, 1.0).unwrap();
+        let fin = b.complete_decode(&[0], &[1], &mut kv, 2.0).unwrap();
+        assert_eq!(fin, vec![0], "terminated at max_seq");
+    }
+}

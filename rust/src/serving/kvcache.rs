@@ -1,0 +1,205 @@
+//! KV-cache block manager (paged, vLLM-style).
+//!
+//! Tracks block allocation for every live sequence: the serving
+//! coordinator admits a request only when enough blocks exist for its
+//! prompt plus headroom, and frees them on completion. The real engine
+//! additionally stores the per-(layer, rank) cache *contents* for the
+//! tiny model; at paper scale only the accounting matters.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct KvCacheManager {
+    pub block_tokens: usize,
+    pub total_blocks: usize,
+    free: Vec<usize>,
+    /// seq id -> allocated block ids (in order).
+    owned: BTreeMap<u64, Vec<usize>>,
+    /// seq id -> current token count.
+    lens: BTreeMap<u64, usize>,
+    /// High-water mark for reports.
+    pub peak_used: usize,
+}
+
+impl KvCacheManager {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0 && total_blocks > 0);
+        KvCacheManager {
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            owned: BTreeMap::new(),
+            lens: BTreeMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a sequence of `tokens` be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks for a new sequence of `tokens` length.
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        if self.owned.contains_key(&seq) {
+            bail!("sequence {seq} already admitted");
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free.len() {
+            bail!(
+                "OOM: need {need} blocks, {} free (seq {seq})",
+                self.free.len()
+            );
+        }
+        let blocks: Vec<usize> =
+            (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.owned.insert(seq, blocks);
+        self.lens.insert(seq, tokens);
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
+    }
+
+    /// Grow a sequence by one token (decode step); may allocate a block.
+    pub fn append_token(&mut self, seq: u64) -> Result<()> {
+        let len = match self.lens.get(&seq) {
+            Some(&l) => l + 1,
+            None => bail!("unknown sequence {seq}"),
+        };
+        self.lens.insert(seq, len);
+        let need = self.blocks_for(len);
+        let owned = self.owned.get_mut(&seq).unwrap();
+        if need > owned.len() {
+            match self.free.pop() {
+                Some(b) => owned.push(b),
+                None => {
+                    *self.lens.get_mut(&seq).unwrap() -= 1;
+                    bail!("OOM growing sequence {seq}");
+                }
+            }
+        }
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(())
+    }
+
+    /// Release a finished sequence's blocks.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        let blocks = match self.owned.remove(&seq) {
+            Some(b) => b,
+            None => bail!("unknown sequence {seq}"),
+        };
+        self.lens.remove(&seq);
+        self.free.extend(blocks);
+        Ok(())
+    }
+
+    /// Invariant: every block is either free or owned by exactly one seq.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            if seen[b] {
+                bail!("block {b} duplicated in free list");
+            }
+            seen[b] = true;
+        }
+        for (seq, blocks) in &self.owned {
+            for &b in blocks {
+                if seen[b] {
+                    bail!("block {b} of seq {seq} double-owned");
+                }
+                seen[b] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            bail!("leaked blocks");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn admit_grow_release() {
+        let mut kv = KvCacheManager::new(10, 16);
+        kv.admit(1, 40).unwrap(); // 3 blocks
+        assert_eq!(kv.used_blocks(), 3);
+        // Grow within the block: no new allocation.
+        for _ in 0..8 {
+            kv.append_token(1).unwrap();
+        }
+        assert_eq!(kv.used_blocks(), 3);
+        // Crossing 48 tokens allocates block 4.
+        kv.append_token(1).unwrap();
+        assert_eq!(kv.used_blocks(), 4);
+        kv.release(1).unwrap();
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_is_reported_not_silent() {
+        let mut kv = KvCacheManager::new(2, 16);
+        kv.admit(1, 32).unwrap();
+        assert!(!kv.can_admit(1));
+        assert!(kv.admit(2, 1).is_err());
+        assert!(kv.append_token(1).is_err(), "growth past capacity");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut kv = KvCacheManager::new(4, 16);
+        kv.admit(7, 16).unwrap();
+        assert!(kv.admit(7, 16).is_err());
+    }
+
+    #[test]
+    fn random_workload_preserves_invariants() {
+        forall(32, 0x5E0u64, |rng| {
+            let mut kv = KvCacheManager::new(16, 8);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        let toks = rng.range(1, 40) as usize;
+                        if kv.can_admit(toks) {
+                            kv.admit(next_id, toks).unwrap();
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let _ = kv.append_token(live[i]);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            kv.release(live.swap_remove(i)).unwrap();
+                        }
+                    }
+                }
+                kv.check_invariants().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Serving runtime: the vLLM-shaped substrate FLUX plugs into for the
+//! inference half of the evaluation (Fig. 16 prefill, Fig. 17 decoding).
+//!
+//! Two execution paths share the router/batcher/KV-cache machinery:
+//! * [`engine`] — REAL numerics: the tiny TP transformer exported by
+//!   aot.py, executed per-rank on the PJRT CPU client with host
+//!   collectives between partials (examples/serve_e2e.rs).
+//! * [`simulate`] — paper-scale timing: per-phase step times from the
+//!   overlap strategies on the cluster simulator.
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod request;
+pub mod simulate;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use request::{Request, RequestState};

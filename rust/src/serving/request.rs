@@ -1,0 +1,89 @@
+//! Request model for the serving coordinator.
+
+/// Lifecycle of a generation request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// In the admission queue, not yet prefetched.
+    Queued,
+    /// Prompt processed, KV cache resident, decoding.
+    Decoding,
+    /// Hit max_new_tokens (or a stop condition).
+    Finished,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (ns in simulation time or wall-clock ns).
+    pub arrival_ns: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    pub generated: Vec<i32>,
+    /// Timestamps for latency accounting.
+    pub prefill_done_ns: Option<f64>,
+    pub finished_ns: Option<f64>,
+}
+
+impl Request {
+    pub fn new(id: u64, arrival_ns: f64, prompt: Vec<i32>,
+               max_new_tokens: usize) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(max_new_tokens > 0);
+        Request {
+            id,
+            arrival_ns,
+            prompt,
+            max_new_tokens,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            prefill_done_ns: None,
+            finished_ns: None,
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated.len() >= self.max_new_tokens
+    }
+
+    /// Time to first token, if prefill completed.
+    pub fn ttft_ns(&self) -> Option<f64> {
+        self.prefill_done_ns.map(|t| t - self.arrival_ns)
+    }
+
+    /// End-to-end latency, if finished.
+    pub fn latency_ns(&self) -> Option<f64> {
+        self.finished_ns.map(|t| t - self.arrival_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accounting() {
+        let mut r = Request::new(1, 100.0, vec![1, 2, 3], 2);
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.total_len(), 3);
+        r.prefill_done_ns = Some(400.0);
+        assert_eq!(r.ttft_ns(), Some(300.0));
+        r.generated.push(7);
+        assert!(!r.is_done());
+        r.generated.push(8);
+        assert!(r.is_done());
+        r.finished_ns = Some(900.0);
+        assert_eq!(r.latency_ns(), Some(800.0));
+        assert_eq!(r.total_len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_prompt() {
+        Request::new(1, 0.0, vec![], 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! Paper-scale serving timing (Fig. 16 prefill, Fig. 17 decoding) and a
+//! DES-driven continuous-batching serving simulation for throughput /
+//! latency reports.
+
+use crate::cost::arch::ClusterSpec;
+use crate::model::analysis::{layer_attention_extra_ns, layer_fwd_ops};
+use crate::model::configs::TransformerConfig;
+use crate::parallel::Method;
+use crate::sim::engine::EventQueue;
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+
+/// Prefill step time: batch x seq tokens through every layer, TP ops
+/// executed by `method` (Fig. 16 inference: batch 8, seq 2048).
+pub fn prefill_ns(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    batch: usize,
+    seq: usize,
+    n_tp: usize,
+    method: Method,
+    seed: u64,
+) -> f64 {
+    let m = batch * seq;
+    let mut t = 0.0;
+    for p in layer_fwd_ops(model, m, n_tp) {
+        t += method.op_ns(cluster, &p, seed);
+    }
+    t += layer_attention_extra_ns(cluster, model, m, seq, n_tp);
+    t * model.n_layers as f64
+}
+
+/// One decode step for `batch` sequences (m = batch tokens). The
+/// attention-over-cache cost is memory-bound reading the KV cache.
+pub fn decode_step_ns(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    batch: usize,
+    cache_len: usize,
+    n_tp: usize,
+    method: Method,
+    seed: u64,
+) -> f64 {
+    let m = batch;
+    let mut t = 0.0;
+    for p in layer_fwd_ops(model, m, n_tp) {
+        t += method.op_ns(cluster, &p, seed);
+    }
+    // KV-cache read per layer per rank: batch * cache_len * 2 (K and V)
+    // * d/N * bf16 — bandwidth bound.
+    let kv_bytes = batch as f64
+        * cache_len as f64
+        * 2.0
+        * (model.d_model / n_tp) as f64
+        * 2.0;
+    t += kv_bytes / cluster.arch.hbm_gbps;
+    t * model.n_layers as f64
+}
+
+/// Serving report from the DES loop.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub makespan_ns: f64,
+    pub tokens_generated: usize,
+    pub ttft: Summary,
+    pub latency: Summary,
+    /// Generated tokens per second.
+    pub throughput: f64,
+}
+
+/// Open-loop serving simulation: Poisson arrivals, prefill-priority
+/// continuous batching at paper scale, timed by the chosen method.
+/// This is the end-to-end workload of examples/train_cluster &
+/// the fig16_17 bench's latency rows.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_serving(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    n_tp: usize,
+    method: Method,
+    n_requests: usize,
+    arrival_mean_ns: f64,
+    prompt_len: usize,
+    gen_len: usize,
+    max_batch: usize,
+    seed: u64,
+) -> ServeReport {
+    #[derive(Debug)]
+    enum Ev {
+        Arrive(usize),
+        StepDone,
+    }
+    let mut rng = Rng::new(seed);
+    let mut q = EventQueue::new();
+    let mut t_arr = 0.0;
+    for i in 0..n_requests {
+        t_arr += rng.exponential(arrival_mean_ns);
+        q.schedule(t_arr, Ev::Arrive(i));
+    }
+    let mut queued: Vec<usize> = Vec::new();
+    let mut running: Vec<(usize, usize)> = Vec::new(); // (id, generated)
+    let mut busy = false;
+    let mut arrivals = vec![0.0f64; n_requests];
+    let mut ttft = vec![f64::NAN; n_requests];
+    let mut done = vec![f64::NAN; n_requests];
+    let mut completed = 0usize;
+    let mut tokens = 0usize;
+    // Pending prefill batch being processed (ids), empty if decode step.
+    let mut in_flight: Vec<usize> = Vec::new();
+    let mut in_flight_is_prefill = false;
+
+    macro_rules! maybe_start {
+        ($q:expr, $now:expr) => {
+            if !busy {
+                if !queued.is_empty() && running.len() < max_batch {
+                    let take = (max_batch - running.len())
+                        .min(queued.len())
+                        .min(8);
+                    in_flight = queued.drain(..take).collect();
+                    in_flight_is_prefill = true;
+                    let t = prefill_ns(
+                        cluster, model, in_flight.len(), prompt_len,
+                        n_tp, method, seed,
+                    );
+                    busy = true;
+                    $q.schedule($now + t, Ev::StepDone);
+                } else if !running.is_empty() {
+                    let b = running.len().min(max_batch);
+                    in_flight = running.iter().take(b).map(|x| x.0).collect();
+                    in_flight_is_prefill = false;
+                    let avg_len = prompt_len + gen_len / 2;
+                    let t = decode_step_ns(
+                        cluster, model, b, avg_len, n_tp, method, seed,
+                    );
+                    busy = true;
+                    $q.schedule($now + t, Ev::StepDone);
+                }
+            }
+        };
+    }
+
+    while let Some((now, ev)) = q.next() {
+        match ev {
+            Ev::Arrive(i) => {
+                arrivals[i] = now;
+                queued.push(i);
+                maybe_start!(q, now);
+            }
+            Ev::StepDone => {
+                busy = false;
+                if in_flight_is_prefill {
+                    for &id in &in_flight {
+                        ttft[id] = now - arrivals[id];
+                        running.push((id, 0));
+                    }
+                } else {
+                    let step_ids: Vec<usize> = in_flight.clone();
+                    for id in step_ids {
+                        if let Some(e) =
+                            running.iter_mut().find(|e| e.0 == id)
+                        {
+                            e.1 += 1;
+                            tokens += 1;
+                            if e.1 >= gen_len {
+                                done[id] = now;
+                                completed += 1;
+                            }
+                        }
+                    }
+                    running.retain(|e| e.1 < gen_len);
+                    // Round-robin fairness.
+                    if running.len() > max_batch {
+                        let n = max_batch.min(running.len());
+                        running.rotate_left(n);
+                    }
+                }
+                in_flight.clear();
+                maybe_start!(q, now);
+            }
+        }
+        if completed == n_requests && q.is_empty() {
+            break;
+        }
+    }
+    let makespan = done
+        .iter()
+        .chain(arrivals.iter())
+        .cloned()
+        .filter(|x| x.is_finite())
+        .fold(0.0, f64::max);
+    let lat: Vec<f64> = done
+        .iter()
+        .zip(&arrivals)
+        .filter(|(d, _)| d.is_finite())
+        .map(|(d, a)| d - a)
+        .collect();
+    let ttfts: Vec<f64> =
+        ttft.iter().cloned().filter(|x| x.is_finite()).collect();
+    ServeReport {
+        completed,
+        makespan_ns: makespan,
+        tokens_generated: tokens,
+        ttft: Summary::of(if ttfts.is_empty() { &[0.0] } else { &ttfts }),
+        latency: Summary::of(if lat.is_empty() { &[0.0] } else { &lat }),
+        throughput: tokens as f64 / (makespan * 1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+    use crate::model::configs::{GPT3_175B, LLAMA2_70B};
+
+    #[test]
+    fn fig16_prefill_speedups_shape() {
+        // Fig. 16 prefill: Flux over vLLM ~1.46x (PCIe), ~1.45x (A100
+        // NVLink), ~1.66x (H800). Loose shape bands.
+        for (cl, lo, hi) in [
+            (&A100_PCIE, 1.10, 1.9),
+            (&A100_NVLINK, 1.02, 1.7),
+            (&H800_NVLINK, 1.05, 2.0),
+        ] {
+            let base = prefill_ns(cl, &GPT3_175B, 8, 2048, 8,
+                                  Method::NonOverlap, 3);
+            let fx = prefill_ns(cl, &GPT3_175B, 8, 2048, 8,
+                                Method::Flux, 3);
+            let sp = base / fx;
+            assert!(sp > lo && sp < hi, "{}: prefill speedup {sp}", cl.name);
+        }
+    }
+
+    #[test]
+    fn decode_batch512_beats_batch64_on_efficiency() {
+        // §6: batch 512 amortizes better than 64.
+        let per_tok = |b: usize| {
+            decode_step_ns(&A100_NVLINK, &LLAMA2_70B, b, 1024, 8,
+                           Method::Flux, 3) / b as f64
+        };
+        assert!(per_tok(512) < per_tok(64));
+    }
+
+    #[test]
+    fn flux_decode_never_catastrophic() {
+        // Fig. 17: Flux ≥ TE everywhere in decode.
+        for cl in [&A100_PCIE, &A100_NVLINK, &H800_NVLINK] {
+            for b in [64usize, 512] {
+                let te = decode_step_ns(cl, &GPT3_175B, b, 1024, 8,
+                                        Method::Medium, 3);
+                let fx = decode_step_ns(cl, &GPT3_175B, b, 1024, 8,
+                                        Method::Flux, 3);
+                assert!(fx < te, "{} b={b}: flux {fx} te {te}", cl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn serving_des_completes_all_requests() {
+        let r = simulate_serving(
+            &A100_NVLINK, &LLAMA2_70B, 8, Method::Flux,
+            20, 5.0e6, 512, 16, 8, 42,
+        );
+        assert_eq!(r.completed, 20);
+        assert_eq!(r.tokens_generated, 20 * 16);
+        assert!(r.throughput > 0.0);
+        assert!(r.ttft.p50 > 0.0);
+        assert!(r.latency.p50 >= r.ttft.p50);
+    }
+
+    #[test]
+    fn serving_des_flux_beats_baseline_throughput() {
+        let run = |m: Method| {
+            simulate_serving(
+                &A100_PCIE, &GPT3_175B, 8, m, 12, 1.0e6, 2048, 8, 8, 7,
+            )
+            .makespan_ns
+        };
+        assert!(run(Method::Flux) < run(Method::NonOverlap));
+    }
+}

@@ -1,0 +1,66 @@
+//! A simulated TP group: N devices + the interconnect between them.
+
+use crate::cost::arch::ClusterSpec;
+use crate::sim::device::Device;
+use crate::sim::topology::Net;
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    pub devices: Vec<Device>,
+    pub net: Net,
+}
+
+impl Cluster {
+    pub fn new(spec: &ClusterSpec, n: usize, seed: u64) -> Cluster {
+        Cluster {
+            spec: *spec,
+            devices: (0..n)
+                .map(|r| Device::new(&spec.arch, r, seed))
+                .collect(),
+            net: Net::new(spec, n),
+        }
+    }
+
+    /// Enable stream-timing jitter (production-environment mode, §2.2).
+    pub fn with_jitter(mut self, sigma: f64) -> Cluster {
+        for d in &mut self.devices {
+            d.jitter_sigma = sigma;
+        }
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn reset(&mut self) {
+        for d in &mut self.devices {
+            d.reset();
+        }
+        self.net.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::A100_NVLINK;
+
+    #[test]
+    fn builds_and_resets() {
+        let mut c = Cluster::new(&A100_NVLINK, 8, 42);
+        assert_eq!(c.n(), 8);
+        c.devices[0].launch_uniform(0.0, 10, 100.0);
+        c.net.transfer(0, 1, 1e6, 0.0);
+        c.reset();
+        assert_eq!(c.devices[0].sm.makespan(), 0.0);
+        assert_eq!(c.net.ingress_free(1), 0.0);
+    }
+
+    #[test]
+    fn jitter_flag_propagates() {
+        let c = Cluster::new(&A100_NVLINK, 4, 1).with_jitter(0.25);
+        assert!(c.devices.iter().all(|d| d.jitter_sigma == 0.25));
+    }
+}

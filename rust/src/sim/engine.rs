@@ -1,0 +1,146 @@
+//! Classic event-queue DES engine.
+//!
+//! The kernel/link layers use the forward-scheduling resource calculus
+//! (resources.rs); this engine sits above them for *open-loop* workloads
+//! where future events depend on simulation state: request arrivals in
+//! the serving simulation (Fig. 16/17 decode) and the training-step loop.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::sim::resources::Time;
+
+/// An event: fires at `at`, carrying a payload `E`.
+struct Scheduled<E> {
+    at: Time,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time (then lower seq for FIFO ties) first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event queue: ties break in insertion order.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: Time,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: Time, payload: E) {
+        debug_assert!(
+            at >= self.now - 1e-9,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        self.heap.push(Scheduled { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` `delay` after now.
+    pub fn schedule_in(&mut self, delay: Time, payload: E) {
+        let at = self.now + delay;
+        self.schedule(at, payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(Time, E)> {
+        self.heap.pop().map(|s| {
+            self.now = s.at;
+            (s.at, s.payload)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30.0, "c");
+        q.schedule(10.0, "a");
+        q.schedule(20.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.next())
+            .map(|(_, e)| e)
+            .collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, 1);
+        q.schedule(5.0, 2);
+        q.schedule(5.0, 3);
+        let order: Vec<i32> =
+            std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut q = EventQueue::new();
+        q.schedule(7.5, ());
+        assert_eq!(q.now(), 0.0);
+        q.next();
+        assert_eq!(q.now(), 7.5);
+        q.schedule_in(2.5, ());
+        let (t, _) = q.next().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn rejects_past_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(10.0, ());
+        q.next();
+        q.schedule(5.0, ());
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event cluster simulator: devices (SM pools, streams,
+//! launch jitter), interconnect topologies (NVLink / PCIe+NUMA / NICs)
+//! and the resource calculus they share.
+//!
+//! This is the substrate standing in for the paper's 8–128 GPU testbeds
+//! (DESIGN.md §2): every timing phenomenon the evaluation measures —
+//! wave quantization, stream jitter, P2P write contention, signal-wait
+//! exposure — is a scheduling/queueing effect reproduced here.
+
+pub mod cluster;
+pub mod device;
+pub mod engine;
+pub mod resources;
+pub mod topology;
+
+pub use resources::Time;

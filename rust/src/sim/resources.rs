@@ -1,0 +1,259 @@
+//! Resource primitives for the discrete-event cluster simulator.
+//!
+//! The simulator is a *list-scheduling* DES: work items arrive with ready
+//! times, resources serialize or pool them, and completion times propagate
+//! forward. Three primitives cover every device-side phenomenon the paper
+//! depends on:
+//!
+//! * [`Serial`] — a FIFO resource (a link direction, a memory-controller
+//!   write port, a CUDA stream): one item at a time.
+//! * [`Pool`] — a k-server resource (the SM array): k items concurrently,
+//!   each new item takes the earliest-free slot. This is exactly the GPU
+//!   thread-block scheduler's behaviour for persistent-occupancy kernels,
+//!   and is what produces *wave quantization* — the split-GEMM efficiency
+//!   cliff of §2.2/Fig. 5.
+//! * [`Rate`] — a fluid-approximation bandwidth resource for links shared
+//!   by many concurrent transfers.
+
+pub type Time = f64; // nanoseconds
+
+/// FIFO serial resource.
+#[derive(Clone, Debug, Default)]
+pub struct Serial {
+    free_at: Time,
+    busy: Time,
+}
+
+impl Serial {
+    pub fn new() -> Self {
+        Serial { free_at: 0.0, busy: 0.0 }
+    }
+
+    /// Schedule an item that becomes ready at `ready` and holds the
+    /// resource for `dur`. Returns (start, end).
+    pub fn acquire(&mut self, ready: Time, dur: Time) -> (Time, Time) {
+        let start = ready.max(self.free_at);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy += dur;
+        (start, end)
+    }
+
+    pub fn free_at(&self) -> Time {
+        self.free_at
+    }
+
+    /// Total busy time — utilization accounting for reports.
+    pub fn busy_time(&self) -> Time {
+        self.busy
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0.0;
+        self.busy = 0.0;
+    }
+}
+
+/// k-server pool: models the SM array (or any array of identical
+/// execution slots). `acquire` assigns the earliest-free slot.
+///
+/// Implementation: a min-heap of slot free-times — O(log k) per acquire
+/// (the original linear scan was the top entry in the §Perf profile;
+/// see EXPERIMENTS.md §Perf L3-1).
+#[derive(Clone, Debug)]
+pub struct Pool {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<OrdTime>>,
+    k: usize,
+    busy: Time,
+}
+
+/// Total-ordered f64 wrapper for the heap (simulation times are never
+/// NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdTime(Time);
+impl Eq for OrdTime {}
+impl PartialOrd for OrdTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl Pool {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "pool must have at least one slot");
+        let mut heap = std::collections::BinaryHeap::with_capacity(k);
+        for _ in 0..k {
+            heap.push(std::cmp::Reverse(OrdTime(0.0)));
+        }
+        Pool { heap, k, busy: 0.0 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Earliest-free-slot assignment. The item occupies the slot from
+    /// max(ready, slot_free) until that + dur. Returns (start, end).
+    ///
+    /// NOTE: this models *non-preemptive* residency — a thread block that
+    /// spins on a signal (Alg. 2's WaitSignal) still occupies its slot.
+    /// Latency hiding across blocks comes from k > #SMs (multiple blocks
+    /// resident per SM), exactly as on hardware.
+    pub fn acquire(&mut self, ready: Time, dur: Time) -> (Time, Time) {
+        let slot = self.heap.pop().unwrap().0 .0;
+        let start = ready.max(slot);
+        let end = start + dur;
+        self.heap.push(std::cmp::Reverse(OrdTime(end)));
+        self.busy += dur;
+        (start, end)
+    }
+
+    /// Like `acquire`, but the slot is *held* starting from the earlier
+    /// of (ready, slot availability): this is how a blocked-on-signal tile
+    /// occupies residency while spinning. Returns (start_of_work, end).
+    pub fn acquire_spinning(
+        &mut self,
+        issue: Time,
+        signal: Time,
+        dur: Time,
+    ) -> (Time, Time) {
+        let slot = self.heap.pop().unwrap().0 .0;
+        // The block is placed on the slot as soon as both the slot and the
+        // launch allow; it then spins until `signal`.
+        let placed = issue.max(slot);
+        let start = placed.max(signal);
+        let end = start + dur;
+        self.heap.push(std::cmp::Reverse(OrdTime(end)));
+        self.busy += dur + (start - placed); // spin time counts as busy
+        (start, end)
+    }
+
+    /// When will the whole pool drain?
+    pub fn makespan(&self) -> Time {
+        self.heap
+            .iter()
+            .map(|r| r.0 .0)
+            .fold(0.0, Time::max)
+    }
+
+    pub fn busy_time(&self) -> Time {
+        self.busy
+    }
+
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        for _ in 0..self.k {
+            self.heap.push(std::cmp::Reverse(OrdTime(0.0)));
+        }
+        self.busy = 0.0;
+    }
+}
+
+/// Fluid bandwidth resource: transfers queue FIFO, each occupying the
+/// pipe for bytes/bw. Equivalent to `Serial` but parameterized in bytes.
+#[derive(Clone, Debug)]
+pub struct Rate {
+    pub bytes_per_ns: f64,
+    pub latency_ns: f64,
+    serial: Serial,
+}
+
+impl Rate {
+    pub fn new(gigabytes_per_s: f64, latency_us: f64) -> Self {
+        Rate {
+            bytes_per_ns: gigabytes_per_s * 1e9 / 1e9, // GB/s == bytes/ns
+            latency_ns: latency_us * 1e3,
+            serial: Serial::new(),
+        }
+    }
+
+    /// Queue a transfer of `bytes` ready at `ready`; returns (start, end)
+    /// where end includes the propagation latency.
+    pub fn transfer(&mut self, ready: Time, bytes: f64) -> (Time, Time) {
+        let dur = bytes / self.bytes_per_ns;
+        let (start, end) = self.serial.acquire(ready, dur);
+        (start, end + self.latency_ns)
+    }
+
+    pub fn free_at(&self) -> Time {
+        self.serial.free_at()
+    }
+
+    pub fn busy_time(&self) -> Time {
+        self.serial.busy_time()
+    }
+
+    pub fn reset(&mut self) {
+        self.serial.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_fifo_order() {
+        let mut r = Serial::new();
+        let (s1, e1) = r.acquire(0.0, 10.0);
+        let (s2, e2) = r.acquire(0.0, 10.0);
+        assert_eq!((s1, e1), (0.0, 10.0));
+        assert_eq!((s2, e2), (10.0, 20.0));
+        // Item ready later than free time starts at its ready time.
+        let (s3, _) = r.acquire(100.0, 5.0);
+        assert_eq!(s3, 100.0);
+    }
+
+    #[test]
+    fn pool_runs_k_concurrently() {
+        let mut p = Pool::new(4);
+        let ends: Vec<Time> =
+            (0..8).map(|_| p.acquire(0.0, 10.0).1).collect();
+        // First 4 finish at 10, next 4 at 20 — two waves.
+        assert_eq!(ends[..4], [10.0, 10.0, 10.0, 10.0]);
+        assert_eq!(ends[4..], [20.0, 20.0, 20.0, 20.0]);
+        assert_eq!(p.makespan(), 20.0);
+    }
+
+    #[test]
+    fn pool_wave_quantization() {
+        // 5 tiles on 4 slots takes 2 waves even though work is 1.25 waves:
+        // the signature inefficiency that splitting GEMMs multiplies.
+        let mut p = Pool::new(4);
+        let end = (0..5).map(|_| p.acquire(0.0, 10.0).1).fold(0.0, f64::max);
+        assert_eq!(end, 20.0);
+    }
+
+    #[test]
+    fn spinning_occupies_slot() {
+        let mut p = Pool::new(1);
+        // Block placed at t=0 but its signal arrives at t=50.
+        let (s, e) = p.acquire_spinning(0.0, 50.0, 10.0);
+        assert_eq!((s, e), (50.0, 60.0));
+        // Next block cannot be placed until the spinner's slot frees.
+        let (s2, _) = p.acquire_spinning(0.0, 0.0, 10.0);
+        assert_eq!(s2, 60.0);
+    }
+
+    #[test]
+    fn rate_transfer_time() {
+        let mut r = Rate::new(100.0, 1.0); // 100 GB/s, 1us latency
+        let (s, e) = r.transfer(0.0, 100e9 * 1e-3); // 100MB
+        assert_eq!(s, 0.0);
+        // 100MB at 100GB/s = 1ms + 1us latency.
+        assert!((e - (1e6 + 1e3)).abs() < 1e-6, "e={e}");
+    }
+
+    #[test]
+    fn busy_accounting() {
+        let mut p = Pool::new(2);
+        p.acquire(0.0, 5.0);
+        p.acquire(0.0, 7.0);
+        assert_eq!(p.busy_time(), 12.0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Interconnect topology: link resources for one TP group.
+//!
+//! Builds the link graph for the three §5 clusters (and multi-node
+//! extensions), then schedules point-to-point transfers over it.
+//! A transfer holds every link on its path for `bytes / bottleneck_bw`
+//! (cut-through approximation); contention is FIFO queueing on the shared
+//! links, which is precisely what makes communication *order* matter
+//! (§4.1 Fig. 7, §4.3 ring order, NUMA-aware PCIe scheduling).
+//!
+//! The destination's ingress resource doubles as its memory-controller
+//! write port: N ranks P2P-writing the same device at the same instant
+//! queue behind each other — the contention the naive (unswizzled) tile
+//! mapping suffers.
+
+use crate::cost::arch::{ClusterSpec, Intra};
+use crate::sim::resources::{Serial, Time};
+
+/// Index of a link resource inside `Net::res`.
+type ResId = usize;
+
+/// Tiny fixed-capacity path builder (max 6 hops in any topology here).
+struct PathBuf6 {
+    ids: [ResId; 6],
+    len: usize,
+}
+
+impl PathBuf6 {
+    fn new() -> Self {
+        PathBuf6 { ids: [0; 6], len: 0 }
+    }
+    #[inline]
+    fn push(&mut self, id: ResId) {
+        self.ids[self.len] = id;
+        self.len += 1;
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Link {
+    res: Serial,
+    gbps: f64,
+}
+
+/// The link graph for `n` TP ranks laid out over one or more nodes.
+#[derive(Clone, Debug)]
+pub struct Net {
+    pub spec: ClusterSpec,
+    pub n: usize,
+    res: Vec<Link>,
+    /// Per-rank egress / ingress port (NVLink fabric port or PCIe link).
+    egress: Vec<ResId>,
+    ingress: Vec<ResId>,
+    /// PCIe only: shared switch uplink per NUMA domain, [up, down]
+    /// (PCIe is full duplex). Index [node][domain][direction].
+    numa_up: Vec<Vec<[ResId; 2]>>,
+    /// PCIe only: inter-socket link per node, one resource per
+    /// direction (UPI/QPI is full duplex). Index [node][direction].
+    numa_x: Vec<[ResId; 2]>,
+    /// Per-rank NIC share for inter-node traffic, [tx, rx] (full duplex).
+    nic: Vec<[ResId; 2]>,
+}
+
+impl Net {
+    pub fn new(spec: &ClusterSpec, n: usize) -> Net {
+        assert!(n >= 1);
+        let mut net = Net {
+            spec: *spec,
+            n,
+            res: Vec::new(),
+            egress: Vec::new(),
+            ingress: Vec::new(),
+            numa_up: Vec::new(),
+            numa_x: Vec::new(),
+            nic: Vec::new(),
+        };
+        let nodes = n.div_ceil(spec.gpus_per_node);
+        let p2p = spec.p2p_gbps();
+        for _ in 0..n {
+            let e = net.alloc(p2p);
+            net.egress.push(e);
+            let i = net.alloc(p2p);
+            net.ingress.push(i);
+            let tx = net.alloc(spec.nic_gbps_per_gpu);
+            let rx = net.alloc(spec.nic_gbps_per_gpu);
+            net.nic.push([tx, rx]);
+        }
+        if let Intra::Pcie { per_dir_gbps, gpus_per_numa, numa_link_gbps } =
+            spec.intra
+        {
+            for _node in 0..nodes {
+                let domains = spec.gpus_per_node.div_ceil(gpus_per_numa);
+                let ups: Vec<[ResId; 2]> = (0..domains)
+                    .map(|_| {
+                        let up = net.alloc(per_dir_gbps);
+                        let down = net.alloc(per_dir_gbps);
+                        [up, down]
+                    })
+                    .collect();
+                net.numa_up.push(ups);
+                let fwd = net.alloc(numa_link_gbps);
+                let rev = net.alloc(numa_link_gbps);
+                net.numa_x.push([fwd, rev]);
+            }
+        }
+        net
+    }
+
+    fn alloc(&mut self, gbps: f64) -> ResId {
+        self.res.push(Link { res: Serial::new(), gbps });
+        self.res.len() - 1
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.spec.gpus_per_node
+    }
+
+    pub fn numa_of(&self, rank: usize) -> usize {
+        match self.spec.intra {
+            Intra::Pcie { gpus_per_numa, .. } => {
+                (rank % self.spec.gpus_per_node) / gpus_per_numa
+            }
+            Intra::NvLink { .. } => 0,
+        }
+    }
+
+    /// Is src→dst a cross-NUMA (but intra-node) path on a PCIe box?
+    pub fn crosses_numa(&self, src: usize, dst: usize) -> bool {
+        self.node_of(src) == self.node_of(dst)
+            && self.numa_of(src) != self.numa_of(dst)
+    }
+
+    /// Stack-allocated path (≤ 6 hops) — no heap allocation on the
+    /// per-tile store hot path (§Perf L3-2).
+    fn path(&self, src: usize, dst: usize) -> ([ResId; 6], usize) {
+        assert!(src < self.n && dst < self.n && src != dst);
+        let same_node = self.node_of(src) == self.node_of(dst);
+        let mut p = PathBuf6::new();
+        p.push(self.egress[src]);
+        if same_node {
+            match self.spec.intra {
+                Intra::NvLink { .. } => {}
+                Intra::Pcie { .. } => {
+                    // Same-switch (same NUMA) P2P stays under the PCIe
+                    // switch; only cross-NUMA traffic climbs the uplinks
+                    // and the inter-socket link.
+                    if self.crosses_numa(src, dst) {
+                        let node = self.node_of(src);
+                        let dir = usize::from(
+                            self.numa_of(src) > self.numa_of(dst));
+                        p.push(self.numa_up[node][self.numa_of(src)][0]);
+                        p.push(self.numa_x[node][dir]);
+                        p.push(self.numa_up[node][self.numa_of(dst)][1]);
+                    }
+                }
+            }
+        } else {
+            p.push(self.nic[src][0]); // tx at the source
+            p.push(self.nic[dst][1]); // rx at the destination
+            // The NIC hangs off the same PCIe switch as its 4 GPUs
+            // (§4.3: "4 GPUs and 1 NIC connect to one CPU core"), so
+            // GPU->NIC traffic stays under the switch: no uplink hop.
+        }
+        p.push(self.ingress[dst]);
+        (p.ids, p.len)
+    }
+
+    /// Schedule a P2P transfer (or P2P store stream).
+    ///
+    /// Fluid virtual-cut-through model: each link on the path carries the
+    /// transfer's bytes independently (FIFO per link, duration
+    /// bytes/link_bw) as soon after `ready` as it is free; the transfer
+    /// completes when the *slowest/busiest* link has carried it. This
+    /// keeps per-link utilization exact while avoiding the convoy
+    /// artifacts of whole-path reservation (an idle path costs
+    /// bytes/bottleneck_bw + latency, matching the closed forms in
+    /// cost::comm). Returns (start, end), latency included in end.
+    pub fn transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        ready: Time,
+    ) -> (Time, Time) {
+        let (path, plen) = self.path(src, dst);
+        let mut start = f64::INFINITY;
+        let mut end: Time = ready;
+        for &id in &path[..plen] {
+            let dur = bytes / self.res[id].gbps;
+            let (s, e) = self.res[id].res.acquire(ready, dur);
+            start = start.min(s);
+            end = end.max(e);
+        }
+        let latency = if self.node_of(src) == self.node_of(dst) {
+            self.spec.p2p_latency_us * 1e3
+        } else {
+            10.0e3 // NIC latency
+        };
+        (start, end + latency)
+    }
+
+    /// Direct write of `bytes` from src's kernel into dst's memory (the
+    /// fused epilogue's P2P store). Identical path semantics; split out
+    /// for readability at call sites.
+    pub fn p2p_store(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        ready: Time,
+    ) -> (Time, Time) {
+        if src == dst {
+            // Local store: HBM write, effectively free at this granularity.
+            return (ready, ready);
+        }
+        self.transfer(src, dst, bytes, ready)
+    }
+
+    /// When does rank's ingress port go idle? (= all writes to it landed)
+    pub fn ingress_free(&self, rank: usize) -> Time {
+        self.res[self.ingress[rank]].res.free_at()
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.res {
+            l.res.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE, H800_NVLINK};
+
+    const MB: f64 = 1e6;
+
+    #[test]
+    fn nvlink_pairs_are_independent() {
+        let mut net = Net::new(&A100_NVLINK, 8);
+        // 0->1 and 2->3 share nothing: same start/end.
+        let (_, e1) = net.transfer(0, 1, 30.0 * MB, 0.0);
+        let (_, e2) = net.transfer(2, 3, 30.0 * MB, 0.0);
+        assert!((e1 - e2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_destination_contends() {
+        // Both writes target rank 1: ingress queues them (§4.1 Fig. 7).
+        let mut net = Net::new(&A100_NVLINK, 8);
+        let (_, e1) = net.transfer(0, 1, 30.0 * MB, 0.0);
+        let (_, e2) = net.transfer(2, 1, 30.0 * MB, 0.0);
+        assert!(e2 > e1 * 1.9, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn same_source_contends_on_egress() {
+        let mut net = Net::new(&H800_NVLINK, 8);
+        let (_, e1) = net.transfer(0, 1, 30.0 * MB, 0.0);
+        let (_, e2) = net.transfer(0, 2, 30.0 * MB, 0.0);
+        assert!(e2 > e1 * 1.9);
+    }
+
+    #[test]
+    fn pcie_same_switch_pairs_are_parallel() {
+        let mut net = Net::new(&A100_PCIE, 8);
+        // Disjoint same-NUMA pairs stay under the switch: no contention.
+        let (_, e1) = net.transfer(0, 1, 30.0 * MB, 0.0);
+        let (_, e2) = net.transfer(2, 3, 30.0 * MB, 0.0);
+        assert!((e1 - e2).abs() < 1e-6, "same-switch P2P is independent");
+    }
+
+    #[test]
+    fn pcie_cross_numa_shares_the_socket_link() {
+        let mut net = Net::new(&A100_PCIE, 8);
+        let (_, a) = net.transfer(0, 4, 30.0 * MB, 0.0);
+        let (_, b) = net.transfer(1, 5, 30.0 * MB, 0.0);
+        assert!(b > a * 1.5, "cross-NUMA transfers serialize on numa_x");
+    }
+
+    #[test]
+    fn numa_mapping() {
+        let net = Net::new(&A100_PCIE, 8);
+        assert_eq!(net.numa_of(0), 0);
+        assert_eq!(net.numa_of(3), 0);
+        assert_eq!(net.numa_of(4), 1);
+        assert!(net.crosses_numa(0, 4));
+        assert!(!net.crosses_numa(0, 3));
+    }
+
+    #[test]
+    fn internode_uses_nic() {
+        let mut net = Net::new(&H800_NVLINK, 16);
+        assert_eq!(net.node_of(9), 1);
+        let (_, intra) = net.transfer(0, 1, 50.0 * MB, 0.0);
+        net.reset();
+        let (_, inter) = net.transfer(0, 9, 50.0 * MB, 0.0);
+        // 50GB/s NIC vs 200GB/s NVLink.
+        assert!(inter > 3.0 * intra, "inter={inter} intra={intra}");
+    }
+
+    #[test]
+    fn local_store_is_free() {
+        let mut net = Net::new(&A100_NVLINK, 8);
+        let (s, e) = net.p2p_store(3, 3, 100.0 * MB, 42.0);
+        assert_eq!((s, e), (42.0, 42.0));
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut net = Net::new(&A100_NVLINK, 4);
+        let (s, _) = net.transfer(0, 1, MB, 500.0);
+        assert_eq!(s, 500.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Auto-tuning (§4.4): exhaustive search over FLUX's tuning knobs per
+//! (cluster, op, shape), with a cache keyed the way a GEMM library keys
+//! its kernel selection — matrix shape, data type (bf16 fixed here), and
+//! architecture/interconnect.
+//!
+//! Knobs searched (all from §4): tile-coordinate swizzling on/off,
+//! pull vs push transfers, the communication tile size ladder
+//! (chunk size halving down to the GEMM tile), fused vs discrete
+//! reduction.
+
+use std::collections::BTreeMap;
+
+use crate::cost::arch::ClusterSpec;
+use crate::cost::gemm::pick_tile;
+use crate::overlap::flux::{simulate, FluxConfig, ReduceStrategy};
+use crate::overlap::tiles::comm_tile_candidates;
+use crate::overlap::{Op, OpTiming, Problem};
+
+/// A tuned result: the winning config and its simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct Tuned {
+    pub config: FluxConfig,
+    pub timing: OpTiming,
+    pub candidates_tried: usize,
+}
+
+/// The §4.4 search space for one problem.
+pub fn search_space(cluster: &ClusterSpec, p: &Problem) -> Vec<FluxConfig> {
+    let mut out = Vec::new();
+    let comm_sizes: Vec<usize> = match p.op {
+        Op::AgGemm => {
+            let bm = pick_tile(&p.local_gemm()).bm;
+            comm_tile_candidates(p.m, p.n_tp, bm)
+        }
+        // RS communication granularity IS the GEMM tile (epilogue
+        // stores); no independent knob.
+        Op::GemmRs => vec![0],
+    };
+    let _ = cluster;
+    let reduce_opts: &[(bool, ReduceStrategy)] = match p.op {
+        // Reduction knobs only affect RS; pin them for AG.
+        Op::AgGemm => &[(true, ReduceStrategy::WarpSpecialized)],
+        Op::GemmRs => &[
+            (true, ReduceStrategy::RedAtomic),
+            (true, ReduceStrategy::WarpSpecialized),
+            (false, ReduceStrategy::Discrete),
+        ],
+    };
+    for swizzle in [true, false] {
+        for pull in [true, false] {
+            for &comm_rows in &comm_sizes {
+                for &(fuse_reduction, reduce) in reduce_opts {
+                    out.push(FluxConfig {
+                        swizzle,
+                        pull,
+                        comm_rows,
+                        fuse_reduction,
+                        reduce,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Exhaustively tune one problem. Deterministic (fixed seed per
+/// candidate) so results are reproducible.
+pub fn tune(cluster: &ClusterSpec, p: &Problem, seed: u64) -> Tuned {
+    let space = search_space(cluster, p);
+    let mut best: Option<Tuned> = None;
+    for cfg in &space {
+        let timing = simulate(cluster, p, cfg, seed);
+        if best
+            .map(|b| timing.overall_ns < b.timing.overall_ns)
+            .unwrap_or(true)
+        {
+            best = Some(Tuned {
+                config: *cfg,
+                timing,
+                candidates_tried: space.len(),
+            });
+        }
+    }
+    best.expect("search space is never empty")
+}
+
+/// Cache key: problem identity on a given cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Key {
+    pub cluster: &'static str,
+    pub op_is_ag: bool,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub n_tp: usize,
+}
+
+/// Tuning cache: tune once per (cluster, problem), reuse thereafter —
+/// the same behaviour as a GEMM library's algorithm-selection cache.
+#[derive(Default)]
+pub struct TunerCache {
+    cache: BTreeMap<Key, Tuned>,
+    pub misses: usize,
+    pub hits: usize,
+}
+
+impl TunerCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(
+        &mut self,
+        cluster: &'static ClusterSpec,
+        p: &Problem,
+        seed: u64,
+    ) -> Tuned {
+        let key = Key {
+            cluster: cluster.name,
+            op_is_ag: p.op == Op::AgGemm,
+            m: p.m,
+            n: p.n,
+            k: p.k,
+            n_tp: p.n_tp,
+        };
+        if let Some(t) = self.cache.get(&key) {
+            self.hits += 1;
+            return *t;
+        }
+        self.misses += 1;
+        let t = tune(cluster, p, seed);
+        self.cache.insert(key, t);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE};
+
+    #[test]
+    fn tuned_never_loses_to_default() {
+        for p in [
+            Problem::ag(2048, 49152, 12288, 8),
+            Problem::rs(2048, 12288, 49152, 8),
+            Problem::ag(512, 49152, 12288, 8),
+        ] {
+            for cl in [&A100_PCIE, &A100_NVLINK] {
+                let tuned = tune(cl, &p, 7);
+                let default =
+                    simulate(cl, &p, &FluxConfig::default(), 7);
+                assert!(
+                    tuned.timing.overall_ns <= default.overall_ns + 1e-6,
+                    "{} {}: tuned {} default {}",
+                    cl.name, p.op.name(),
+                    tuned.timing.overall_ns, default.overall_ns
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuner_picks_push_on_pcie_pull_on_nvlink() {
+        // Fig. 9's conclusion, rediscovered by search.
+        let p = Problem::ag(4096, 49152, 12288, 8);
+        let pcie = tune(&A100_PCIE, &p, 7);
+        assert!(!pcie.config.pull, "PCIe should tune to push");
+        let nvl = tune(&A100_NVLINK, &p, 7);
+        assert!(nvl.config.pull, "NVLink should tune to pull");
+    }
+
+    #[test]
+    fn tuner_prefers_swizzle_at_scale() {
+        let p = Problem::rs(8192, 12288, 49152, 8);
+        let t = tune(&A100_NVLINK, &p, 7);
+        assert!(t.config.swizzle, "swizzle should win at m=8192");
+    }
+
+    #[test]
+    fn ag_space_includes_comm_tile_ladder() {
+        let p = Problem::ag(8192, 49152, 12288, 8);
+        let space = search_space(&A100_NVLINK, &p);
+        let sizes: std::collections::BTreeSet<usize> =
+            space.iter().map(|c| c.comm_rows).collect();
+        assert!(sizes.contains(&1024) && sizes.contains(&128),
+                "ladder missing: {sizes:?}");
+    }
+
+    #[test]
+    fn cache_hits_after_first_tune() {
+        let mut c = TunerCache::new();
+        let p = Problem::ag(1024, 49152, 12288, 8);
+        let a = c.get(&A100_NVLINK, &p, 7);
+        let b = c.get(&A100_NVLINK, &p, 7);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 1);
+        assert_eq!(a.config, b.config);
+        // A different shape misses.
+        c.get(&A100_NVLINK, &Problem::ag(2048, 49152, 12288, 8), 7);
+        assert_eq!(c.misses, 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Criterion-style micro-bench harness substrate.
+//!
+//! The vendored crate set has no `criterion`; `cargo bench` targets use
+//! this instead (they are `harness = false` binaries). It does warmup,
+//! adaptive iteration-count selection, and prints a stable one-line
+//! summary per benchmark plus any figure tables the bench emits.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_ns, Summary};
+
+pub struct Bench {
+    /// Target measurement time per benchmark.
+    pub budget: Duration,
+    /// Samples to collect within the budget.
+    pub samples: usize,
+    results: Vec<(String, Summary)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor the conventional quick-run env toggle.
+        let quick = std::env::var("FLUX_BENCH_QUICK").is_ok();
+        Bench {
+            budget: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which should return something the optimizer cannot
+    /// delete (use `std::hint::black_box` inside when in doubt).
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        // Warmup + calibration: how many iters fit in budget/samples?
+        let t0 = Instant::now();
+        let mut iters_per_sample = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let dt = t.elapsed();
+            if dt >= self.budget / (self.samples as u32)
+                || t0.elapsed() > self.budget
+            {
+                break;
+            }
+            iters_per_sample =
+                iters_per_sample.saturating_mul(2).min(1 << 24);
+        }
+
+        let mut obs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            obs.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let s = Summary::of(&obs);
+        println!(
+            "bench {name:<44} {:>10}/iter  (p50 {:>10}, p99 {:>10}, n={} x{})",
+            fmt_ns(s.mean),
+            fmt_ns(s.p50),
+            fmt_ns(s.p99),
+            self.samples,
+            iters_per_sample,
+        );
+        self.results.push((name.to_string(), s));
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+/// Render a paper-style table: a header plus aligned rows. Used by every
+/// fig* bench to print the series the paper reports.
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> =
+        header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(
+            &header.iter().map(|s| s.to_string()).collect::<Vec<_>>()
+        )
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("FLUX_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.budget = Duration::from_millis(20);
+        b.samples = 5;
+        b.run("noop-ish", || 1u64 + std::hint::black_box(2));
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].1.mean >= 0.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Property-testing substrate (proptest is not in the vendored set).
+//!
+//! `forall` runs a property over `cases` seeded random cases and reports
+//! the failing case's seed so it can be replayed deterministically:
+//!
+//! ```no_run
+//! use flux::util::check::forall;
+//! forall(64, 0xF00D, |rng| {
+//!     let n = rng.range(1, 100);
+//!     assert!(n < 100);
+//! });
+//! ```
+//!
+//! (`no_run`: doctest executables cannot locate libxla's bundled
+//! libstdc++ without the workspace rpath; the property itself is
+//! exercised by the unit tests below.)
+//!
+//! There is no shrinking; properties should draw *small* sizes so failing
+//! cases are already readable. `FLUX_CHECK_CASES` scales case counts up
+//! for soak runs.
+
+use crate::util::prng::Rng;
+
+/// Run `prop` over `cases` random cases derived from `seed`.
+pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Rng)) {
+    let cases = std::env::var("FLUX_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case}/{cases} \
+                 (replay seed: {case_seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(32, 1, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn surfaces_failures() {
+        forall(64, 2, |rng| {
+            assert!(rng.below(10) != 3, "should eventually draw 3");
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny CLI argument substrate (no `clap` offline).
+//!
+//! Supports `command --flag value --switch positional` shapes, which is
+//! all the `flux` binary and the examples need.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `switch_names` lists flags that
+    /// take no value; everything else starting with `--` consumes the
+    /// next token as its value.
+    pub fn parse(
+        raw: impl IntoIterator<Item = String>,
+        switch_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = it.next().ok_or_else(|| {
+                        anyhow!("flag --{name} expects a value")
+                    })?;
+                    if val.starts_with("--") {
+                        bail!("flag --{name} expects a value, got {val}");
+                    }
+                    out.flags.insert(name.to_string(), val);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), switch_names)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            v(&["serve", "--port", "8080", "--verbose", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("port", 0).unwrap(), 8080);
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(v(&["--port"]), &[]).is_err());
+        assert!(Args::parse(v(&["--port", "--x", "1"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates: PRNG, JSON, statistics, bench harness, property
+//! testing, CLI parsing. These exist in-tree because the offline build
+//! has no rand/serde/criterion/proptest/clap.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,77 @@
+//! Cross-language goldens: the Rust tile bookkeeping must agree exactly
+//! with the Python kernels' (artifacts/golden_swizzle.json, emitted by
+//! aot.py from the same functions the Pallas kernels use for their
+//! BlockSpec index maps).
+
+use flux::overlap::tiles;
+use flux::runtime::Runtime;
+use flux::util::json::Json;
+
+fn golden() -> Json {
+    let path = Runtime::artifacts_dir().join("golden_swizzle.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{}: {e}\nrun `make artifacts` before `cargo test`",
+            path.display()
+        )
+    });
+    Json::parse(&text).expect("golden json parses")
+}
+
+#[test]
+fn swizzle_order_matches_python() {
+    let g = golden();
+    let cases = g.get("swizzle").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for c in cases {
+        let num = c.get("num_tiles").unwrap().as_usize().unwrap();
+        let rank = c.get("rank").unwrap().as_usize().unwrap();
+        let n_tp = c.get("n_tp").unwrap().as_usize().unwrap();
+        let want = c.get("order").unwrap().usize_vec().unwrap();
+        assert_eq!(
+            tiles::swizzle_order(num, rank, n_tp),
+            want,
+            "swizzle({num}, {rank}, {n_tp})"
+        );
+    }
+}
+
+#[test]
+fn ring_order_matches_python() {
+    let g = golden();
+    for c in g.get("ring").unwrap().as_arr().unwrap() {
+        let rank = c.get("rank").unwrap().as_usize().unwrap();
+        let n_tp = c.get("n_tp").unwrap().as_usize().unwrap();
+        let want = c.get("order").unwrap().usize_vec().unwrap();
+        assert_eq!(tiles::ring_comm_order(rank, n_tp), want);
+    }
+}
+
+#[test]
+fn comm_schedule_matches_python() {
+    let g = golden();
+    let cases = g.get("comm_sched").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for c in cases {
+        let m = c.get("m").unwrap().as_usize().unwrap();
+        let rank = c.get("rank").unwrap().as_usize().unwrap();
+        let n_tp = c.get("n_tp").unwrap().as_usize().unwrap();
+        let rows = c.get("rows").unwrap().as_usize().unwrap();
+        let want = c.get("schedule").unwrap().as_arr().unwrap();
+        let got = tiles::comm_schedule(m, rank, n_tp, rows, true);
+        assert_eq!(got.len(), want.len());
+        for (g_t, w) in got.iter().zip(want) {
+            assert_eq!(g_t.src, w.get("src").unwrap().as_usize().unwrap());
+            assert_eq!(g_t.dst, w.get("dst").unwrap().as_usize().unwrap());
+            assert_eq!(
+                g_t.row0,
+                w.get("row0").unwrap().as_usize().unwrap()
+            );
+            assert_eq!(g_t.rows, w.get("rows").unwrap().as_usize().unwrap());
+            assert_eq!(
+                g_t.signal,
+                w.get("signal").unwrap().as_usize().unwrap()
+            );
+        }
+    }
+}

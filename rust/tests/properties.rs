@@ -1,0 +1,190 @@
+//! Cross-module property tests and failure injection: invariants that
+//! must hold across the whole search space, not just the figure points.
+
+use flux::cost::arch::{ALL_CLUSTERS, A100_NVLINK, A100_PCIE};
+use flux::cost::gemm::{gemm_time_ns, GemmShape};
+use flux::overlap::flux::{simulate as flux_sim, FluxConfig};
+use flux::overlap::{baseline, medium, Op, Problem};
+use flux::tuner;
+use flux::util::check::forall;
+
+fn random_problem(rng: &mut flux::util::prng::Rng) -> Problem {
+    let m = [64usize, 256, 1024, 4096][rng.below(4) as usize];
+    let n_tp = [2usize, 4, 8][rng.below(3) as usize];
+    if rng.below(2) == 0 {
+        Problem::ag(m, 49152, 12288, n_tp)
+    } else {
+        Problem::rs(m, 12288, 49152, n_tp)
+    }
+}
+
+#[test]
+fn overall_time_never_below_nonsplit_gemm() {
+    // No strategy can beat the bare (launch-inclusive) GEMM: overlap
+    // hides communication, it cannot create compute. (Flux can get
+    // within launch overhead of it; never below.)
+    forall(40, 0xF1, |rng| {
+        let p = random_problem(rng);
+        let cl = ALL_CLUSTERS[rng.below(3) as usize];
+        let seed = rng.next_u64();
+        let floor = p.gemm_nonsplit_ns(cl) * 0.999;
+        assert!(baseline::simulate(cl, &p).overall_ns >= floor);
+        assert!(medium::simulate(cl, &p, seed).overall_ns >= floor);
+        let cfg = FluxConfig::for_cluster(cl);
+        assert!(flux_sim(cl, &p, &cfg, seed).overall_ns >= floor);
+    });
+}
+
+#[test]
+fn baseline_ect_is_exactly_the_collective() {
+    // §2.3: non-overlap ECT == pure NCCL time, always positive.
+    forall(40, 0xF2, |rng| {
+        let p = random_problem(rng);
+        let cl = ALL_CLUSTERS[rng.below(3) as usize];
+        let ect = baseline::simulate(cl, &p).ect_ns();
+        assert!(ect > 0.0, "{p:?} on {}", cl.name);
+    });
+}
+
+#[test]
+fn gemm_time_is_monotone_in_every_dim() {
+    forall(60, 0xF3, |rng| {
+        let m = rng.range(8, 8192) as usize;
+        let n = rng.range(32, 49152) as usize;
+        let k = rng.range(32, 49152) as usize;
+        let arch = &ALL_CLUSTERS[rng.below(3) as usize].arch;
+        let t = gemm_time_ns(arch, &GemmShape::new(m, n, k));
+        let t_m = gemm_time_ns(arch, &GemmShape::new(m * 2, n, k));
+        let t_n = gemm_time_ns(arch, &GemmShape::new(m, n * 2, k));
+        let t_k = gemm_time_ns(arch, &GemmShape::new(m, n, k * 2));
+        assert!(t_m >= t && t_n >= t && t_k >= t * 1.2,
+                "m={m} n={n} k={k}: {t} {t_m} {t_n} {t_k}");
+    });
+}
+
+#[test]
+fn tuned_flux_never_loses_to_any_searched_config() {
+    forall(8, 0xF4, |rng| {
+        let p = random_problem(rng);
+        let cl = ALL_CLUSTERS[rng.below(3) as usize];
+        let best = tuner::tune(cl, &p, 7);
+        for cfg in tuner::search_space(cl, &p) {
+            let t = flux_sim(cl, &p, &cfg, 7);
+            assert!(
+                best.timing.overall_ns <= t.overall_ns + 1e-6,
+                "tuner missed: {cfg:?} beats {:?}", best.config
+            );
+        }
+    });
+}
+
+#[test]
+fn tp1_has_zero_communication() {
+    // Degenerate 1-way TP: the collective is free; every method reduces
+    // to the bare GEMM (+ launch effects).
+    for op in [Op::AgGemm, Op::GemmRs] {
+        let p = Problem { op, m: 1024, n: 12288, k: 12288, n_tp: 1 };
+        let base = baseline::simulate(&A100_NVLINK, &p);
+        assert!(base.ect_ns().abs() < 1e-6, "{op:?}: {}", base.ect_ns());
+    }
+}
+
+#[test]
+fn flux_scales_sanely_with_tp_degree() {
+    // More ranks => smaller local GEMM => shorter overall op.
+    let t = |n_tp: usize| {
+        let p = Problem::ag(4096, 49152, 12288, n_tp);
+        flux_sim(&A100_NVLINK, &p,
+                 &FluxConfig::for_cluster(&A100_NVLINK), 7)
+            .overall_ns
+    };
+    let (t2, t4, t8) = (t(2), t(4), t(8));
+    assert!(t2 > t4 && t4 > t8, "t2={t2} t4={t4} t8={t8}");
+}
+
+#[test]
+fn medium_jitter_bounded() {
+    // Stream jitter perturbs but must not explode the medium-grained
+    // time: across seeds the spread stays under 25%.
+    let p = Problem::ag(2048, 49152, 12288, 8);
+    let times: Vec<f64> = (0..12)
+        .map(|s| medium::simulate(&A100_NVLINK, &p, s).overall_ns)
+        .collect();
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    assert!(max / min < 1.25, "jitter spread {}", max / min);
+}
+
+#[test]
+fn comm_volume_conservation_in_flux_rs() {
+    // Every remote byte of the RS output must cross some ingress secure
+    // in the simulator: overall >= bytes/aggregate-bandwidth bound.
+    forall(20, 0xF5, |rng| {
+        let m = [1024usize, 4096][rng.below(2) as usize];
+        let p = Problem::rs(m, 12288, 49152, 8);
+        let cl = &A100_PCIE;
+        let t = flux_sim(cl, &p, &FluxConfig::for_cluster(cl), 7);
+        // (N-1)/N of output crosses links; per-rank ingress share:
+        let remote = p.comm_bytes() * 7.0 / 8.0 / 8.0;
+        let floor = remote / cl.p2p_gbps();
+        assert!(
+            t.overall_ns > floor,
+            "m={m}: overall {} < wire floor {floor}", t.overall_ns
+        );
+    });
+}
+
+#[test]
+fn fuse_reduction_ablation_helps_or_ties() {
+    // DESIGN.md ablation: the Alg.-1 Reduce branch (fused reduction)
+    // never hurts, and strictly helps somewhere.
+    let mut helped = false;
+    for m in [1024usize, 4096, 8192] {
+        let p = Problem::rs(m, 12288, 49152, 8);
+        for cl in ALL_CLUSTERS {
+            let fused = flux_sim(cl, &p,
+                &FluxConfig { fuse_reduction: true,
+                              ..FluxConfig::for_cluster(cl) }, 7);
+            let discrete = flux_sim(cl, &p,
+                &FluxConfig { fuse_reduction: false,
+                              ..FluxConfig::for_cluster(cl) }, 7);
+            assert!(fused.overall_ns <= discrete.overall_ns + 1e-6);
+            if fused.overall_ns < discrete.overall_ns * 0.999 {
+                helped = true;
+            }
+        }
+    }
+    assert!(helped, "fused reduction should matter somewhere");
+}
+
+#[test]
+fn overlap_efficiency_upper_bound() {
+    // Eq. 2: efficiency can approach but never exceed 100%.
+    forall(30, 0xF6, |rng| {
+        let p = random_problem(rng);
+        let cl = ALL_CLUSTERS[rng.below(3) as usize];
+        let base = baseline::simulate(cl, &p);
+        let fx = flux_sim(cl, &p, &FluxConfig::for_cluster(cl), 7);
+        let eff = fx.overlap_efficiency(&base);
+        assert!(eff <= 1.0 + 1e-9, "{p:?} on {}: eff {eff}", cl.name);
+    });
+}
+
+#[test]
+fn runtime_errors_are_reported_not_panicked() {
+    // Failure injection on the runtime: unknown artifacts and missing
+    // manifests produce errors, not panics.
+    let err = flux::runtime::Runtime::load(std::path::Path::new(
+        "/nonexistent/artifacts",
+    ));
+    assert!(err.is_err());
+    let mut rt = flux::runtime::Runtime::load_default().unwrap();
+    assert!(rt.run("no_such_artifact", &[]).is_err());
+    assert!(rt.weight("no_such_weight").is_err());
+}
+
+#[test]
+fn literal_shape_mismatch_rejected() {
+    assert!(flux::runtime::literal_f32(&[2, 3], &[0.0; 5]).is_err());
+    assert!(flux::runtime::literal_i32(&[4], &[1, 2, 3]).is_err());
+}
