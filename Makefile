@@ -1,0 +1,40 @@
+# FLUX build entry points.
+#
+# `make artifacts` resolves the cross-language artifacts two ways:
+#   * JAX available  -> python/compile/aot.py exports the full set (HLO
+#     text, weight shards, manifest.json, golden_swizzle.json with the
+#     prefill logits golden);
+#   * JAX missing    -> the hermetic Rust generator rewrites
+#     artifacts/golden_swizzle.json only (same bytes as the checked-in
+#     copy), which is everything `cargo test` needs.
+
+ARTIFACTS := artifacts
+
+.PHONY: artifacts test bench fmt lint clean
+
+artifacts:
+	@if python3 -c "import jax" >/dev/null 2>&1; then \
+		echo "JAX found: exporting the full AOT artifact set"; \
+		cd python && python3 -m compile.aot --out ../$(ARTIFACTS)/model.hlo.txt; \
+	else \
+		echo "JAX not found: writing hermetic goldens via the Rust generator"; \
+		cargo run --quiet --manifest-path rust/Cargo.toml --bin flux -- \
+			gen-goldens --out $(ARTIFACTS)/golden_swizzle.json; \
+	fi
+
+test:
+	cargo build --release
+	cargo test -q
+
+bench:
+	cargo run --release --manifest-path rust/Cargo.toml --bin flux -- bench --json
+
+fmt:
+	cargo fmt --all
+
+lint:
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean
+	rm -f BENCH_*.json

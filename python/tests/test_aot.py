@@ -83,7 +83,11 @@ def test_golden_prefill_matches_regenerated_model():
     import jax.numpy as jnp
     from compile import model as M
     with open(os.path.join(ART, "golden_swizzle.json")) as f:
-        g = json.load(f)["prefill"]
+        golden = json.load(f)
+    if "prefill" not in golden:
+        pytest.skip("hermetic (Rust-generated) golden has no prefill "
+                    "section; run `make artifacts` with JAX to add it")
+    g = golden["prefill"]
     cfg = M.ModelConfig.tiny()
     w = M.init_weights(cfg, seed=0)
     ids = np.asarray(g["ids"], np.int32)

@@ -11,9 +11,15 @@ use flux::tuner::{search_space, tune, TunerCache};
 use flux::util::bench::table;
 
 fn main() {
+    // FLUX_SMOKE=1: one shape per cluster, for the CI example-smoke run.
+    let ms: &[usize] = if std::env::var("FLUX_SMOKE").is_ok() {
+        &[512]
+    } else {
+        &[512, 2048, 8192]
+    };
     let mut rows = Vec::new();
     for cl in ALL_CLUSTERS {
-        for m in [512usize, 2048, 8192] {
+        for &m in ms {
             for (tag, p) in
                 [("AG", ag_problem(m, 8)), ("RS", rs_problem(m, 8))]
             {

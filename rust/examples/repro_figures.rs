@@ -1,0 +1,25 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run (the same generators back the per-figure benches).
+//!
+//! Run: `cargo run --release --example repro_figures`
+//!
+//! `FLUX_SMOKE=1` prints only the cheap closed-form/simulator figures —
+//! the CI example-smoke test uses it to bound debug-mode runtime.
+
+fn main() {
+    if std::env::var("FLUX_SMOKE").is_ok() {
+        for t in [
+            flux::figures::fig01(),
+            flux::figures::fig04(),
+            flux::figures::fig08(),
+            flux::figures::fig09(),
+        ] {
+            flux::figures::print_table(&t);
+        }
+        println!("\n(FLUX_SMOKE set: tuner-heavy figures skipped)");
+        return;
+    }
+    for t in flux::figures::all() {
+        flux::figures::print_table(&t);
+    }
+}

@@ -22,6 +22,15 @@ use flux::util::prng::Rng;
 use flux::util::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
+    if !Runtime::pjrt_available() {
+        println!(
+            "serve_e2e needs the AOT artifacts on a live PJRT backend; \
+             this build links the in-tree xla stub (no backend), so the \
+             end-to-end run is skipped. Swap in the real xla bindings \
+             and run `make artifacts` to enable it."
+        );
+        return Ok(());
+    }
     let rt = Runtime::load_default()?;
     let art_dir = rt.dir.clone();
     println!(

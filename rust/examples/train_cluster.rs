@@ -13,7 +13,11 @@ use flux::util::bench::table;
 
 fn main() {
     let layout = Layout::PAPER_TRAINING;
-    let (micro, tokens, seq) = (16usize, 2048usize, 2048usize);
+    // FLUX_SMOKE=1: fewer microbatches, for the CI example-smoke run
+    // (step-time *ratios* are unaffected; only fill/drain shares move).
+    let smoke = std::env::var("FLUX_SMOKE").is_ok();
+    let (micro, tokens, seq) =
+        (if smoke { 4usize } else { 16 }, 2048usize, 2048usize);
     println!(
         "training layout: DP{} x PP{} x TP{} = {} GPUs, {} microbatches \
          of {} tokens",

@@ -1,0 +1,174 @@
+//! Hermetic golden generator: `flux gen-goldens`.
+//!
+//! Emits `artifacts/golden_swizzle.json` from the *Rust* tile
+//! bookkeeping (overlap/tiles.rs), covering exactly the case grid
+//! `python/compile/aot.py::export_goldens` emits from the Python
+//! reference (`kernels/ref.py` + `flux_ag_gemm.comm_tile_schedule`).
+//!
+//! Two producers, one consumer: `rust/tests/golden.rs` parses the file
+//! and re-derives every case from the Rust functions, so
+//!
+//! * with JAX available, `make artifacts` writes the Python version and
+//!   the test is a true cross-language check;
+//! * without JAX (clean CI checkout), the checked-in copy of this
+//!   generator's output keeps the suite hermetic — and because this
+//!   generator shares no code path with the *test's* expectations
+//!   beyond the functions under test, it still guards the JSON plumbing
+//!   and the schedule shape.
+//!
+//! Output is deterministic byte-for-byte: `util::json` writes objects in
+//! BTreeMap (sorted-key) order and all golden values are integers.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::overlap::tiles;
+use crate::util::json::{obj, Json};
+
+/// The swizzle/ring case grid of aot.py: N_TP in {2, 4, 8}, every rank,
+/// 4 row-tiles per rank.
+const TP_DEGREES: [usize; 3] = [2, 4, 8];
+
+/// The comm-schedule case grid of aot.py: (m, n_tp, comm rows).
+const COMM_CASES: [(usize, usize, usize); 3] =
+    [(128, 4, 16), (256, 8, 32), (64, 2, 32)];
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::from(x)).collect())
+}
+
+/// Build the golden document.
+pub fn golden_doc() -> Json {
+    let mut swizzle = Vec::new();
+    let mut ring = Vec::new();
+    for n_tp in TP_DEGREES {
+        for rank in 0..n_tp {
+            let num_tiles = 4 * n_tp;
+            swizzle.push(obj(vec![
+                ("num_tiles", Json::from(num_tiles)),
+                ("rank", Json::from(rank)),
+                ("n_tp", Json::from(n_tp)),
+                (
+                    "order",
+                    usize_arr(&tiles::swizzle_order(num_tiles, rank, n_tp)),
+                ),
+            ]));
+            ring.push(obj(vec![
+                ("rank", Json::from(rank)),
+                ("n_tp", Json::from(n_tp)),
+                ("order", usize_arr(&tiles::ring_comm_order(rank, n_tp))),
+            ]));
+        }
+    }
+    let mut comm_sched = Vec::new();
+    for (m, n_tp, rows) in COMM_CASES {
+        for rank in 0..n_tp {
+            let schedule = tiles::comm_schedule(m, rank, n_tp, rows, true);
+            let sched: Vec<Json> = schedule
+                .into_iter()
+                .map(|t| {
+                    obj(vec![
+                        ("src", Json::from(t.src)),
+                        ("dst", Json::from(t.dst)),
+                        ("row0", Json::from(t.row0)),
+                        ("rows", Json::from(t.rows)),
+                        ("pull", Json::from(true)),
+                        ("signal", Json::from(t.signal)),
+                    ])
+                })
+                .collect();
+            comm_sched.push(obj(vec![
+                ("m", Json::from(m)),
+                ("rank", Json::from(rank)),
+                ("n_tp", Json::from(n_tp)),
+                ("rows", Json::from(rows)),
+                ("schedule", Json::Arr(sched)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("swizzle", Json::Arr(swizzle)),
+        ("ring", Json::Arr(ring)),
+        ("comm_sched", Json::Arr(comm_sched)),
+    ])
+}
+
+/// Write the golden document to `path`, creating parent directories.
+pub fn write_goldens(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, golden_doc().to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        assert_eq!(golden_doc().to_string(), golden_doc().to_string());
+    }
+
+    #[test]
+    fn document_round_trips_and_covers_all_sections() {
+        let doc = golden_doc();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, doc);
+        let n_ranks: usize = TP_DEGREES.iter().sum();
+        let section_len = |key: &str| {
+            parsed.get(key).unwrap().as_arr().unwrap().len()
+        };
+        assert_eq!(section_len("swizzle"), n_ranks);
+        assert_eq!(section_len("ring"), n_ranks);
+        let cs: usize = COMM_CASES.iter().map(|&(_, n, _)| n).sum();
+        assert_eq!(
+            parsed.get("comm_sched").unwrap().as_arr().unwrap().len(),
+            cs
+        );
+    }
+
+    #[test]
+    fn cases_agree_with_tile_functions() {
+        // The consumer-side decode of every case must re-derive exactly.
+        let doc = golden_doc();
+        for c in doc.get("swizzle").unwrap().as_arr().unwrap() {
+            let num = c.get("num_tiles").unwrap().as_usize().unwrap();
+            let rank = c.get("rank").unwrap().as_usize().unwrap();
+            let n_tp = c.get("n_tp").unwrap().as_usize().unwrap();
+            assert_eq!(
+                c.get("order").unwrap().usize_vec().unwrap(),
+                tiles::swizzle_order(num, rank, n_tp)
+            );
+        }
+        for c in doc.get("comm_sched").unwrap().as_arr().unwrap() {
+            let sched = c.get("schedule").unwrap().as_arr().unwrap();
+            assert!(!sched.is_empty());
+            // Signals are unique within a schedule (golden invariant).
+            let mut sigs: Vec<usize> = sched
+                .iter()
+                .map(|t| t.get("signal").unwrap().as_usize().unwrap())
+                .collect();
+            sigs.sort_unstable();
+            sigs.dedup();
+            assert_eq!(sigs.len(), sched.len());
+        }
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("flux_golden_test");
+        let path = dir.join("golden_swizzle.json");
+        write_goldens(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), golden_doc());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

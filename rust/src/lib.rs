@@ -18,8 +18,10 @@ pub mod cost {
 }
 
 pub mod collectives;
+pub mod goldens;
 pub mod overlap;
 pub mod figures;
+pub mod report;
 pub mod model;
 pub mod parallel;
 pub mod runtime;

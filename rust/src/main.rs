@@ -1,16 +1,20 @@
 //! `flux` — leader entrypoint / CLI.
 //!
 //! Subcommands:
-//!   figures   regenerate every paper table/figure (default)
-//!   simulate  one op-level comparison (--cluster, --op, --m, --tp)
-//!   tune      auto-tune one problem and print the winning config
-//!   train     model-level training step comparison
-//!   serve     run the REAL tiny TP transformer on PJRT via the batcher
+//!   figures      regenerate every paper table/figure (default)
+//!   simulate     one op-level comparison (--cluster, --op, --m, --tp)
+//!   tune         auto-tune one problem and print the winning config
+//!   train        model-level training step comparison
+//!   serve        run the REAL tiny TP transformer on PJRT via the batcher
+//!   gen-goldens  emit artifacts/golden_swizzle.json hermetically (no JAX)
+//!   bench        run the pinned-seed suite; --json writes BENCH_<n>.json
 //!
 //! Examples:
 //!   flux simulate --cluster "a100 nvlink" --op rs --m 4096
 //!   flux tune --cluster "a100 pcie" --op ag --m 8192
 //!   flux serve --requests 6 --gen 8
+//!   flux gen-goldens
+//!   flux bench --json --quick
 
 use anyhow::{bail, Result};
 
@@ -26,23 +30,102 @@ use flux::serving::{Batcher, BatcherConfig, Request};
 use flux::tuner;
 use flux::util::cli::Args;
 
+const USAGE: &str = "\
+flux — FLUX (fine-grained communication overlap) reproduction CLI
+
+USAGE:
+    flux [COMMAND] [FLAGS]
+
+COMMANDS:
+    figures      regenerate every paper table/figure (default)
+                   [--json <path>] also write the tables as JSON
+    simulate     one op-level comparison
+                   [--cluster <name>] [--op ag|rs] [--m <rows>]
+                   [--tp <degree>] [--seed <n>]
+    tune         auto-tune one problem, print the winning config
+                   (same flags as simulate)
+    train        model-level training-step comparison
+                   [--cluster <name>] [--model gpt3|llama2]
+                   [--microbatches <n>]
+    serve        run the real tiny TP transformer on PJRT
+                   [--requests <n>] [--gen <tokens>]
+                   (needs `make artifacts` + the real xla bindings)
+    gen-goldens  emit the cross-language golden file from the Rust tile
+                   bookkeeping [--out <path>] (default:
+                   <artifacts dir>/golden_swizzle.json)
+    bench        pinned-seed benchmark suite
+                   --json write BENCH_<n>.json (byte-stable) instead of
+                          printing; [--out <path>] [--quick] [--wall]
+
+Clusters: \"a100 pcie\" | \"a100 nvlink\" | \"h800 nvlink\"
+";
+
 fn main() -> Result<()> {
-    let args = Args::from_env(&["verbose"])?;
-    let cmd = args
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("figures");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let first = argv.first().map(|s| s.as_str()).unwrap_or("figures");
+    // `--help` anywhere wins (so `flux bench --help` works too).
+    if first == "help"
+        || argv.iter().any(|a| matches!(a.as_str(), "--help" | "-h"))
+    {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    // A leading flag means "no command named": keep the historical
+    // default of `figures` and hand it the whole argv (so e.g.
+    // `flux --json report.json` still writes the JSON report).
+    let (cmd, flag_args) = if first.starts_with("--") {
+        ("figures", &argv[..])
+    } else {
+        (first, &argv[1..])
+    };
+    // Commands take flags only; parse everything after the command name
+    // with the command's switch set (flags not listed consume a value).
+    let rest = || flag_args.iter().cloned();
     match cmd {
-        "figures" => cmd_figures(),
-        "simulate" => cmd_simulate(&args),
-        "tune" => cmd_tune(&args),
-        "train" => cmd_train(&args),
-        "serve" => cmd_serve(&args),
+        "figures" => cmd_figures(&Args::parse(rest(), &["verbose"])?),
+        "simulate" => cmd_simulate(&Args::parse(rest(), &["verbose"])?),
+        "tune" => cmd_tune(&Args::parse(rest(), &["verbose"])?),
+        "train" => cmd_train(&Args::parse(rest(), &["verbose"])?),
+        "serve" => cmd_serve(&Args::parse(rest(), &["verbose"])?),
+        "gen-goldens" => cmd_gen_goldens(&Args::parse(rest(), &[])?),
+        "bench" => {
+            cmd_bench(&Args::parse(rest(), &["json", "quick", "wall"])?)
+        }
         other => bail!(
-            "unknown command {other:?}; try figures|simulate|tune|train|serve"
+            "unknown command {other:?}; try figures|simulate|tune|train|\
+             serve|gen-goldens|bench (or --help)"
         ),
     }
+}
+
+fn cmd_gen_goldens(args: &Args) -> Result<()> {
+    let path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => Runtime::artifacts_dir().join("golden_swizzle.json"),
+    };
+    flux::goldens::write_goldens(&path)?;
+    println!("wrote goldens to {}", path.display());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let wall = args.has("wall");
+    // `--out` only makes sense for a file report: it implies `--json`.
+    let json = args.has("json") || args.get("out").is_some();
+    if json {
+        let out = args.get("out").map(std::path::Path::new);
+        let path = flux::report::write_bench(quick, wall, out)?;
+        println!("wrote bench report to {}", path.display());
+    } else {
+        flux::report::print_bench(&flux::report::bench_doc(quick))?;
+        if wall {
+            // Bench::run prints one line per hotpath as it measures.
+            println!("\nwall-clock hotpath timings (machine-local):");
+            let _ = flux::report::wall_doc();
+        }
+    }
+    Ok(())
 }
 
 fn cluster_of(args: &Args) -> Result<&'static ClusterSpec> {
@@ -64,8 +147,7 @@ fn problem_of(args: &Args) -> Result<Problem> {
     })
 }
 
-fn cmd_figures() -> Result<()> {
-    let args = Args::from_env(&["verbose"])?;
+fn cmd_figures(args: &Args) -> Result<()> {
     for t in figures::all() {
         figures::print_table(&t);
     }
@@ -151,6 +233,14 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 4)?;
     let gen = args.get_usize("gen", 8)?;
+    if !Runtime::pjrt_available() {
+        bail!(
+            "`flux serve` executes the AOT artifacts on PJRT, but this \
+             build links the in-tree xla API stub (no backend). Swap \
+             rust/Cargo.toml's `xla` path dependency for the real \
+             bindings and run `make artifacts` first."
+        );
+    }
     let rt = Runtime::load_default()?;
     println!(
         "loaded {} artifacts from {} (tiny TP{} transformer, d={})",

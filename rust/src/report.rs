@@ -1,0 +1,317 @@
+//! Perf-trajectory substrate: `flux bench --json` writes a
+//! schema-stable `BENCH_<n>.json` so every future PR has a baseline to
+//! beat.
+//!
+//! Two kinds of numbers, separated on purpose:
+//!
+//! * **Simulated** (default, always emitted): the hotpath op suite run
+//!   on the cluster simulator with pinned `util::prng` seeds. Fully
+//!   deterministic — two consecutive runs produce byte-identical files —
+//!   so CI can diff them and regressions in the *model* (op latency,
+//!   overlap efficiency, tiles/sec) are attributable to code changes,
+//!   never to noise.
+//! * **Wall-clock** (`--wall`, off by default): `util::bench` timings of
+//!   the simulator hot paths themselves. Machine-dependent by nature;
+//!   excluded from the byte-stability contract and from CI diffing, but
+//!   useful for eyeballing coordinator-side speedups on one box.
+//!
+//! Schema (`"schema": "flux-bench-v1"`): see [`bench_doc`]. Consumers
+//! must tolerate added keys; existing keys are stable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cost::arch::ALL_CLUSTERS;
+use crate::cost::gemm::tile_grid;
+use crate::figures::{ag_problem, rs_problem};
+use crate::overlap::{baseline, medium, Problem};
+use crate::tuner::TunerCache;
+use crate::util::json::{obj, Json};
+use crate::util::stats::{percentile, Summary};
+
+pub const SCHEMA: &str = "flux-bench-v1";
+
+/// Pinned seeds for the simulated suite (full / quick).
+const SEEDS_FULL: [u64; 5] = [7, 11, 13, 17, 23];
+const SEEDS_QUICK: [u64; 2] = [7, 11];
+
+/// GEMM m sweep (full / quick); GPT-3 op shapes, 8-way TP.
+const MS_FULL: [usize; 3] = [512, 2048, 8192];
+const MS_QUICK: [usize; 1] = [2048];
+
+fn p50_p95(xs: &[f64]) -> (f64, f64) {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    (percentile(&s, 0.50), percentile(&s, 0.95))
+}
+
+/// One suite entry: a (cluster, op, m) cell with per-method metrics.
+fn suite_entry(
+    cache: &mut TunerCache,
+    cluster: &'static crate::cost::arch::ClusterSpec,
+    p: &Problem,
+    seeds: &[u64],
+) -> Json {
+    let base = baseline::simulate(cluster, p);
+
+    let te_t: Vec<crate::overlap::OpTiming> = seeds
+        .iter()
+        .map(|&s| medium::simulate(cluster, p, s))
+        .collect();
+    let te: Vec<f64> = te_t.iter().map(|t| t.overall_ns).collect();
+    let te_eff: Vec<f64> =
+        te_t.iter().map(|t| t.overlap_efficiency(&base)).collect();
+
+    // Tuned config is picked once with the first pinned seed (the same
+    // cache a serving loop would hold), then timed across all seeds.
+    let tuned = cache.get(cluster, p, seeds[0]);
+    let fx_t: Vec<crate::overlap::OpTiming> = seeds
+        .iter()
+        .map(|&s| {
+            crate::overlap::flux::simulate(cluster, p, &tuned.config, s)
+        })
+        .collect();
+    let fx: Vec<f64> = fx_t.iter().map(|t| t.overall_ns).collect();
+    let fx_eff: Vec<f64> =
+        fx_t.iter().map(|t| t.overlap_efficiency(&base)).collect();
+
+    // Simulated tile throughput: GEMM tiles the whole TP group retires
+    // per second of simulated time (p50).
+    let (_, tasks) = tile_grid(&cluster.arch, &p.local_gemm());
+    let total_tiles = (tasks.len() * p.n_tp) as f64;
+
+    let method = |xs: &[f64], effs: &[f64]| -> Json {
+        let (p50, p95) = p50_p95(xs);
+        let (eff50, _) = p50_p95(effs);
+        obj(vec![
+            ("p50_ns", Json::from(p50)),
+            ("p95_ns", Json::from(p95)),
+            ("overlap_eff_pct", Json::from(eff50 * 100.0)),
+            ("tiles_per_sec", Json::from(total_tiles / (p50 * 1e-9))),
+        ])
+    };
+
+    obj(vec![
+        ("cluster", Json::from(cluster.name)),
+        ("op", Json::from(p.op.name())),
+        ("m", Json::from(p.m)),
+        ("n_tp", Json::from(p.n_tp)),
+        ("gemm_nonsplit_ns", Json::from(base.gemm_nonsplit_ns)),
+        (
+            "baseline",
+            obj(vec![
+                ("overall_ns", Json::from(base.overall_ns)),
+                ("ect_ns", Json::from(base.ect_ns())),
+            ]),
+        ),
+        ("te", method(&te, &te_eff)),
+        ("flux", method(&fx, &fx_eff)),
+        ("flux_config", Json::from(format!("{:?}", tuned.config))),
+    ])
+}
+
+/// Build the full bench document (deterministic for a given `quick`).
+pub fn bench_doc(quick: bool) -> Json {
+    let seeds: &[u64] = if quick { &SEEDS_QUICK } else { &SEEDS_FULL };
+    let ms: &[usize] = if quick { &MS_QUICK } else { &MS_FULL };
+    let mut cache = TunerCache::new();
+    let mut suite = Vec::new();
+    for cluster in ALL_CLUSTERS {
+        for &m in ms {
+            for p in [ag_problem(m, 8), rs_problem(m, 8)] {
+                suite.push(suite_entry(&mut cache, cluster, &p, seeds));
+            }
+        }
+    }
+    obj(vec![
+        ("schema", Json::from(SCHEMA)),
+        ("quick", Json::from(quick)),
+        (
+            "seeds",
+            Json::Arr(seeds.iter().map(|&s| Json::from(s as usize)).collect()),
+        ),
+        ("suite", Json::Arr(suite)),
+    ])
+}
+
+/// Wall-clock hotpath timings (NOT byte-stable; appended only on
+/// `--wall`).
+pub fn wall_doc() -> Json {
+    use crate::cost::arch::{A100_NVLINK, A100_PCIE};
+    use crate::overlap::flux::FluxConfig;
+    use crate::overlap::tiles;
+    use crate::util::bench::Bench;
+
+    let mut b = Bench::new();
+    b.run("swizzle_order_64", || tiles::swizzle_order(64, 3, 8));
+    b.run("comm_schedule_m8192_rows128", || {
+        tiles::comm_schedule(8192, 3, 8, 128, true)
+    });
+    let p_rs = rs_problem(4096, 8);
+    b.run("flux_rs_sim_m4096_nvlink", || {
+        crate::overlap::flux::simulate(
+            &A100_NVLINK,
+            &p_rs,
+            &FluxConfig::default(),
+            7,
+        )
+    });
+    let p_ag = ag_problem(4096, 8);
+    b.run("flux_ag_sim_m4096_pcie", || {
+        crate::overlap::flux::simulate(
+            &A100_PCIE,
+            &p_ag,
+            &FluxConfig::for_cluster(&A100_PCIE),
+            7,
+        )
+    });
+    let entries: Vec<(&str, Json)> = b
+        .results()
+        .iter()
+        .map(|(name, s)| (name.as_str(), summary_json(s)))
+        .collect();
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn summary_json(s: &Summary) -> Json {
+    obj(vec![
+        ("mean_ns", Json::from(s.mean)),
+        ("p50_ns", Json::from(s.p50)),
+        ("p95_ns", Json::from(s.p95)),
+        ("p99_ns", Json::from(s.p99)),
+        ("n", Json::from(s.n)),
+    ])
+}
+
+/// Smallest-unused `BENCH_<n>.json` in `dir` — the perf trajectory is an
+/// append-only sequence of these.
+pub fn next_bench_path(dir: &Path) -> PathBuf {
+    for n in 0..10_000usize {
+        let p = dir.join(format!("BENCH_{n}.json"));
+        if !p.exists() {
+            return p;
+        }
+    }
+    dir.join("BENCH_overflow.json")
+}
+
+/// Write the bench document; returns the path written.
+pub fn write_bench(
+    quick: bool,
+    wall: bool,
+    out: Option<&Path>,
+) -> Result<PathBuf> {
+    let mut doc = bench_doc(quick);
+    if wall {
+        if let Json::Obj(m) = &mut doc {
+            m.insert("wall".to_string(), wall_doc());
+        }
+    }
+    let path = match out {
+        Some(p) => p.to_path_buf(),
+        None => next_bench_path(Path::new(".")),
+    };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Human-readable rendering of a bench document (`flux bench` without
+/// `--json`).
+pub fn print_bench(doc: &Json) -> Result<()> {
+    fn ms_of(j: &Json, k: &str) -> Result<String> {
+        Ok(format!("{:.3}", j.get(k)?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("suite")?.as_arr()? {
+        let fx = e.get("flux")?;
+        let te = e.get("te")?;
+        rows.push(vec![
+            e.get("cluster")?.as_str()?.to_string(),
+            e.get("op")?.as_str()?.to_string(),
+            e.get("m")?.as_usize()?.to_string(),
+            ms_of(e.get("baseline")?, "overall_ns")?,
+            ms_of(te, "p50_ns")?,
+            ms_of(fx, "p50_ns")?,
+            ms_of(fx, "p95_ns")?,
+            format!("{:.1}%", fx.get("overlap_eff_pct")?.as_f64()?),
+            format!("{:.2e}", fx.get("tiles_per_sec")?.as_f64()?),
+        ]);
+    }
+    crate::util::bench::table(
+        "bench suite (simulated, pinned seeds)",
+        &[
+            "cluster", "op", "m", "torch ms", "TE p50 ms", "flux p50 ms",
+            "flux p95 ms", "flux eff", "tiles/s",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_doc_is_byte_stable() {
+        // The acceptance contract: consecutive runs are byte-identical.
+        let a = bench_doc(true).to_string();
+        let b = bench_doc(true).to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("flux-bench-v1"));
+    }
+
+    #[test]
+    fn quick_doc_parses_and_has_schema_fields() {
+        let doc = bench_doc(true);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), SCHEMA);
+        assert!(parsed.get("quick").unwrap().as_bool().unwrap());
+        let suite = parsed.get("suite").unwrap().as_arr().unwrap();
+        // 3 clusters x 1 m x 2 ops in quick mode.
+        assert_eq!(suite.len(), 6);
+        for e in suite {
+            for k in [
+                "cluster", "op", "m", "n_tp", "gemm_nonsplit_ns",
+                "baseline", "te", "flux", "flux_config",
+            ] {
+                assert!(e.opt(k).is_some(), "missing key {k}");
+            }
+            let fx = e.get("flux").unwrap();
+            assert!(fx.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+            assert!(
+                fx.get("p95_ns").unwrap().as_f64().unwrap()
+                    >= fx.get("p50_ns").unwrap().as_f64().unwrap()
+            );
+            assert!(fx.get("tiles_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn next_bench_path_skips_existing() {
+        let dir = std::env::temp_dir().join("flux_bench_path_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(next_bench_path(&dir).ends_with("BENCH_0.json"));
+        std::fs::write(dir.join("BENCH_0.json"), "{}").unwrap();
+        assert!(next_bench_path(&dir).ends_with("BENCH_1.json"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn print_bench_renders_without_error() {
+        print_bench(&bench_doc(true)).unwrap();
+    }
+}

@@ -13,6 +13,17 @@ pub use registry::{Manifest, Runtime};
 
 use anyhow::{anyhow, Result};
 
+impl Runtime {
+    /// Is a live PJRT backend linked into this build? `false` means the
+    /// in-tree `xla` API stub is in use: manifests, goldens, the
+    /// simulator and the bench pipeline all work, but nothing can
+    /// compile/execute HLO artifacts — callers should skip those paths
+    /// (the integration tests and examples do).
+    pub fn pjrt_available() -> bool {
+        xla::backend_available()
+    }
+}
+
 /// Build an f32 literal of the given shape from host data.
 pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();

@@ -95,11 +95,22 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Default artifacts location: `$FLUX_ARTIFACTS` or `./artifacts`.
+    /// Default artifacts location: `$FLUX_ARTIFACTS` (pinned to the
+    /// repo root by `.cargo/config.toml` for everything cargo launches),
+    /// else `./artifacts`, else `../artifacts` — the latter so a binary
+    /// invoked from `rust/` still finds the repo-root artifacts tree.
     pub fn artifacts_dir() -> PathBuf {
-        std::env::var("FLUX_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        if let Ok(dir) = std::env::var("FLUX_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let local = PathBuf::from("artifacts");
+        if !local.is_dir() {
+            let parent = PathBuf::from("../artifacts");
+            if parent.is_dir() {
+                return parent;
+            }
+        }
+        local
     }
 
     pub fn load_default() -> Result<Runtime> {

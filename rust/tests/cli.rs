@@ -1,0 +1,148 @@
+//! CLI smoke tests: the `flux` binary's subcommands and every example
+//! run to completion in debug mode. These guard the user-facing entry
+//! points the README quickstart advertises.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn flux_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_flux"))
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flux_cli_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_exits_zero_and_lists_subcommands() {
+    let out = flux_bin().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["figures", "simulate", "tune", "gen-goldens", "bench"] {
+        assert!(text.contains(cmd), "--help must mention {cmd}");
+    }
+    // `--help` after a subcommand also prints usage (not a parse error).
+    let out = flux_bin().args(["bench", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = flux_bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn gen_goldens_writes_the_golden_document() {
+    let dir = tmp_dir("goldens");
+    let path = dir.join("golden_swizzle.json");
+    let out = flux_bin()
+        .args(["gen-goldens", "--out", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).unwrap();
+    // Byte-exact match with the library generator (determinism), and a
+    // parseable document with all three sections.
+    assert_eq!(text, flux::goldens::golden_doc().to_string());
+    let doc = flux::util::json::Json::parse(&text).unwrap();
+    for key in ["swizzle", "ring", "comm_sched"] {
+        assert!(doc.opt(key).is_some(), "golden missing {key}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checked_in_golden_matches_the_rust_generator() {
+    // The hermetic fallback contract: a clean checkout's golden file is
+    // exactly what `flux gen-goldens` would emit — unless `make
+    // artifacts` ran with JAX, which adds a "prefill" section; then we
+    // only require the shared sections to parse (golden.rs checks their
+    // values case by case).
+    let path = flux::runtime::Runtime::artifacts_dir()
+        .join("golden_swizzle.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("{}: {e} — the golden file must be checked in", path.display())
+    });
+    let doc = flux::util::json::Json::parse(&text).unwrap();
+    if doc.opt("prefill").is_none() {
+        assert_eq!(text, flux::goldens::golden_doc().to_string());
+    }
+}
+
+#[test]
+fn bench_json_is_reproducible_byte_for_byte() {
+    // Acceptance: two consecutive runs produce byte-identical reports.
+    let dir = tmp_dir("bench");
+    let run = |name: &str| -> String {
+        let path = dir.join(name);
+        let out = flux_bin()
+            .args(["bench", "--json", "--quick", "--out"])
+            .arg(&path)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&path).unwrap()
+    };
+    let a = run("BENCH_a.json");
+    let b = run("BENCH_b.json");
+    assert_eq!(a, b, "bench --json must be deterministic");
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::SCHEMA
+    );
+    assert!(!doc.get("suite").unwrap().as_arr().unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulate_subcommand_prints_a_comparison() {
+    let out = flux_bin()
+        .args(["simulate", "--m", "512", "--tp", "4", "--op", "rs"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Flux (tuned)"), "got: {text}");
+}
+
+#[test]
+fn examples_run_to_completion_in_debug() {
+    // Each example must exit 0. FLUX_SMOKE trims the heavy sweeps; the
+    // PJRT-dependent examples (quickstart part 1, serve_e2e) detect the
+    // stub backend themselves and degrade gracefully. Examples run
+    // sequentially through one `cargo run` at a time to avoid build-dir
+    // lock contention.
+    let Some(cargo) = std::env::var_os("CARGO") else {
+        eprintln!("skipping: CARGO env var not set");
+        return;
+    };
+    for ex in [
+        "quickstart",
+        "autotune",
+        "repro_figures",
+        "serve_e2e",
+        "train_cluster",
+    ] {
+        let out = Command::new(&cargo)
+            .args(["run", "--quiet", "--example", ex])
+            .env("FLUX_SMOKE", "1")
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap_or_else(|e| panic!("spawning cargo for {ex}: {e}"));
+        assert!(
+            out.status.success(),
+            "example {ex} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}

@@ -11,7 +11,10 @@ fn golden() -> Json {
     let path = Runtime::artifacts_dir().join("golden_swizzle.json");
     let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
         panic!(
-            "{}: {e}\nrun `make artifacts` before `cargo test`",
+            "{}: {e}\nthe golden file ships with the repo; if it is \
+             missing, regenerate it with `make artifacts` (prefers the \
+             JAX exporter, falls back to the hermetic Rust generator) \
+             or directly with `cargo run --bin flux -- gen-goldens`",
             path.display()
         )
     });

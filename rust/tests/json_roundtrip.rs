@@ -1,0 +1,137 @@
+//! util::json round-trip coverage on the real document schemas this
+//! repo ships (the cross-language golden file and the bench report),
+//! plus escape/number edge cases. The writer/parser pair is the only
+//! JSON implementation in the tree — goldens, manifests and the perf
+//! trajectory all ride on it, so parse → write → parse must be lossless.
+
+use flux::util::json::Json;
+
+fn round_trip(doc: &Json) -> Json {
+    Json::parse(&doc.to_string()).unwrap()
+}
+
+#[test]
+fn golden_schema_round_trips() {
+    let doc = flux::goldens::golden_doc();
+    let rt = round_trip(&doc);
+    assert_eq!(rt, doc);
+    // And the writer is stable: writing the re-parsed doc is identical.
+    assert_eq!(rt.to_string(), doc.to_string());
+}
+
+#[test]
+fn checked_in_golden_file_round_trips() {
+    let path = flux::runtime::Runtime::artifacts_dir()
+        .join("golden_swizzle.json");
+    let text = std::fs::read_to_string(&path)
+        .expect("golden_swizzle.json ships with the repo");
+    let doc = Json::parse(&text).unwrap();
+    let rt = round_trip(&doc);
+    assert_eq!(rt, doc);
+}
+
+#[test]
+fn bench_schema_round_trips() {
+    let doc = flux::report::bench_doc(true);
+    let rt = round_trip(&doc);
+    assert_eq!(rt, doc);
+    assert_eq!(rt.to_string(), doc.to_string());
+}
+
+#[test]
+fn string_escape_edge_cases() {
+    for s in [
+        "plain",
+        "quote\"inside",
+        "back\\slash",
+        "new\nline and \t tab and \r cr",
+        "control\u{1}\u{1f}chars",
+        "null byte \u{0} embedded",
+        "unicode: héllo wörld — ≤96% ✓",
+        "emoji 🚀 (outside the BMP, raw UTF-8)",
+        "",
+    ] {
+        let doc = Json::Str(s.to_string());
+        let text = doc.to_string();
+        assert_eq!(
+            Json::parse(&text).unwrap(),
+            doc,
+            "string {s:?} via {text:?}"
+        );
+        // Escaped controls must not appear raw in the output.
+        assert!(!text.contains('\n') && !text.contains('\u{1}'));
+    }
+}
+
+#[test]
+fn unicode_escape_parsing() {
+    assert_eq!(
+        Json::parse(r#""\u0041\u00e9""#).unwrap(),
+        Json::Str("Aé".to_string())
+    );
+}
+
+#[test]
+fn number_edge_cases() {
+    for (text, want) in [
+        ("0", 0.0),
+        ("-0", 0.0),
+        ("9007199254740992", 9007199254740992.0), // 2^53
+        ("-12.5", -12.5),
+        ("1e300", 1e300),
+        ("2.5e-10", 2.5e-10),
+        ("0.1", 0.1),
+    ] {
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.as_f64().unwrap(), want, "parse {text}");
+        // Write → parse is exact for every representable f64.
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v2, v, "round trip {text}");
+    }
+    // Integer-valued floats print without a fractional part (schema
+    // stability for ids/counts), big magnitudes keep full precision.
+    assert_eq!(Json::Num(42.0).to_string(), "42");
+    assert_eq!(Json::Num(-3.0).to_string(), "-3");
+    let big = Json::Num(1.23456789e120);
+    assert_eq!(Json::parse(&big.to_string()).unwrap(), big);
+}
+
+#[test]
+fn nested_mixed_document_round_trips() {
+    use flux::util::json::obj;
+    let doc = obj(vec![
+        ("empty_arr", Json::Arr(vec![])),
+        ("empty_obj", Json::Obj(Default::default())),
+        ("null", Json::Null),
+        ("bools", Json::from(vec![true, false])),
+        (
+            "mixed",
+            Json::Arr(vec![
+                Json::from(1usize),
+                Json::from("two"),
+                Json::Null,
+                Json::from(3.5),
+            ]),
+        ),
+        ("weird key \" \\ \n", Json::from("value")),
+    ]);
+    assert_eq!(round_trip(&doc), doc);
+}
+
+#[test]
+fn rejects_malformed_documents() {
+    for s in [
+        "",
+        "{",
+        "[1,",
+        "{\"a\" 1}",
+        "tru",
+        "1 2",
+        "\"unterminated",
+        "{\"dup\": }",
+        "[01x]",
+        "\"bad escape \\q\"",
+    ] {
+        assert!(Json::parse(s).is_err(), "should reject {s:?}");
+    }
+}

@@ -178,9 +178,23 @@ fn runtime_errors_are_reported_not_panicked() {
         "/nonexistent/artifacts",
     ));
     assert!(err.is_err());
-    let mut rt = flux::runtime::Runtime::load_default().unwrap();
-    assert!(rt.run("no_such_artifact", &[]).is_err());
-    assert!(rt.weight("no_such_weight").is_err());
+    // The manifest half needs `make artifacts` (any backend); hermetic
+    // checkouts only carry the golden file. Skip ONLY when the manifest
+    // is genuinely absent — if it exists, a load failure is a real
+    // regression this test must surface.
+    let dir = flux::runtime::Runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = flux::runtime::Runtime::load_default()
+            .expect("manifest.json exists, so the runtime must load");
+        assert!(rt.run("no_such_artifact", &[]).is_err());
+        assert!(rt.weight("no_such_weight").is_err());
+    } else {
+        eprintln!(
+            "skipping manifest half: {} has no manifest.json \
+             (run `make artifacts` to cover it)",
+            dir.display()
+        );
+    }
 }
 
 #[test]

