@@ -92,6 +92,9 @@ pub struct ClusterSpec {
     pub nccl_bus_gbps: f64,
     /// P2P transfer latency inside a node, microseconds.
     pub p2p_latency_us: f64,
+    /// One-way latency of the inter-node NIC path (IB/RoCE verbs +
+    /// switch hops), microseconds.
+    pub nic_latency_us: f64,
     /// Signal set→visible latency (cuStreamWriteValue→spin loop), us.
     pub signal_latency_us: f64,
 }
@@ -110,6 +113,7 @@ pub const A100_PCIE: ClusterSpec = ClusterSpec {
     nic_gbps_per_gpu: 100.0 / 8.0 * 2.0 / 8.0, // 2x100Gb/s over 8 GPUs
     nccl_bus_gbps: 13.0, // PCIe Gen4-only ring: published NCCL reality
     p2p_latency_us: 6.0,
+    nic_latency_us: 10.0,
     signal_latency_us: 4.0,
 };
 
@@ -123,6 +127,7 @@ pub const A100_NVLINK: ClusterSpec = ClusterSpec {
     nic_gbps_per_gpu: 200.0 / 8.0 / 2.0, // Gb/s->GB/s and 2 GPUs per NIC
     nccl_bus_gbps: 230.0,
     p2p_latency_us: 2.0,
+    nic_latency_us: 10.0,
     signal_latency_us: 3.0,
 };
 
@@ -136,6 +141,7 @@ pub const H800_NVLINK: ClusterSpec = ClusterSpec {
     nic_gbps_per_gpu: 400.0 / 8.0,
     nccl_bus_gbps: 160.0,
     p2p_latency_us: 2.0,
+    nic_latency_us: 10.0,
     signal_latency_us: 3.0,
 };
 
@@ -162,6 +168,114 @@ impl ClusterSpec {
     /// Total resident thread blocks (SM slots) per device.
     pub fn sm_slots(&self) -> usize {
         self.arch.sms * self.arch.blocks_per_sm
+    }
+}
+
+/// A multi-node serving cluster: `dp` independent TP groups of degree
+/// `tp` laid out over `nodes` nodes of a base [`ClusterSpec`].
+///
+/// Layout follows Megatron-LM's serving convention: TP stays *within* a
+/// node (NVLink/PCIe intra-node), DP replicas tile across nodes
+/// (IB/RoCE inter-node, `nic_gbps_per_gpu` / `nic_latency_us`).
+/// Replicas serve disjoint request streams, so the inter-node fabric
+/// carries routing traffic only — the reason this layout is the one the
+/// paper's Fig. 16/17 inference numbers assume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleTopology {
+    pub name: &'static str,
+    pub cluster: &'static ClusterSpec,
+    pub nodes: usize,
+    /// TP degree of each replica (one TP group == one model instance).
+    pub tp: usize,
+    /// Number of data-parallel replicas.
+    pub dp: usize,
+}
+
+/// Single node, one TP8 group — the baseline Fig. 16/17 configuration.
+pub const SCALE_TP8: ScaleTopology = ScaleTopology {
+    name: "1-node tp8",
+    cluster: &A100_NVLINK,
+    nodes: 1,
+    tp: 8,
+    dp: 1,
+};
+
+/// Two NVLink nodes, one TP8 replica per node.
+pub const SCALE_TP8_DP2: ScaleTopology = ScaleTopology {
+    name: "2-node tp8 dp2",
+    cluster: &A100_NVLINK,
+    nodes: 2,
+    tp: 8,
+    dp: 2,
+};
+
+/// PCIe-only cluster, two nodes, one TP8 replica per node — the
+/// communication-dominated end of the sweep.
+pub const SCALE_PCIE_TP8_DP2: ScaleTopology = ScaleTopology {
+    name: "2-node pcie tp8 dp2",
+    cluster: &A100_PCIE,
+    nodes: 2,
+    tp: 8,
+    dp: 2,
+};
+
+/// Four H800 nodes — the high-communication-proportion arch at DP4.
+pub const SCALE_H800_TP8_DP4: ScaleTopology = ScaleTopology {
+    name: "4-node h800 tp8 dp4",
+    cluster: &H800_NVLINK,
+    nodes: 4,
+    tp: 8,
+    dp: 4,
+};
+
+pub const ALL_SCALE_TOPOLOGIES: [&ScaleTopology; 4] = [
+    &SCALE_TP8,
+    &SCALE_TP8_DP2,
+    &SCALE_PCIE_TP8_DP2,
+    &SCALE_H800_TP8_DP4,
+];
+
+impl ScaleTopology {
+    pub fn by_name(name: &str) -> Option<&'static ScaleTopology> {
+        // Topology names contain hyphens themselves ("2-node tp8 dp2"),
+        // so normalize both sides.
+        let norm =
+            |s: &str| s.to_ascii_lowercase().replace(['-', '_'], " ");
+        let key = norm(name);
+        ALL_SCALE_TOPOLOGIES.iter().copied().find(|t| norm(t.name) == key)
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.tp * self.dp
+    }
+
+    pub fn replicas_per_node(&self) -> usize {
+        self.dp.div_ceil(self.nodes)
+    }
+
+    /// Check the TP-within-node / DP-across-nodes layout invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tp >= 1 && self.dp >= 1 && self.nodes >= 1,
+            "{}: degenerate topology",
+            self.name
+        );
+        anyhow::ensure!(
+            self.tp <= self.cluster.gpus_per_node,
+            "{}: TP{} exceeds the {}-GPU node (TP must stay intra-node)",
+            self.name,
+            self.tp,
+            self.cluster.gpus_per_node
+        );
+        anyhow::ensure!(
+            self.replicas_per_node() * self.tp <= self.cluster.gpus_per_node,
+            "{}: {} replicas/node x TP{} exceeds {} GPUs/node",
+            self.name,
+            self.replicas_per_node(),
+            self.tp,
+            self.cluster.gpus_per_node
+        );
+        Ok(())
     }
 }
 
@@ -195,5 +309,41 @@ mod tests {
     fn sm_slots() {
         assert_eq!(A100_PCIE.sm_slots(), 216);
         assert_eq!(H800_NVLINK.sm_slots(), 264);
+    }
+
+    #[test]
+    fn scale_topologies_validate_and_tile_nodes() {
+        for t in ALL_SCALE_TOPOLOGIES {
+            t.validate().unwrap();
+            assert_eq!(t.gpus(), t.tp * t.dp);
+            // The DP replicas fit on the cluster's nodes.
+            assert!(
+                t.replicas_per_node() * t.nodes >= t.dp,
+                "{}",
+                t.name
+            );
+        }
+        assert_eq!(SCALE_TP8_DP2.replicas_per_node(), 1);
+    }
+
+    #[test]
+    fn scale_lookup_by_name() {
+        assert_eq!(
+            ScaleTopology::by_name("2-node_tp8_dp2"),
+            Some(&SCALE_TP8_DP2)
+        );
+        assert!(ScaleTopology::by_name("mystery").is_none());
+    }
+
+    #[test]
+    fn tp_spanning_nodes_is_rejected() {
+        let bad = ScaleTopology {
+            name: "tp16 spanning",
+            cluster: &A100_NVLINK,
+            nodes: 2,
+            tp: 16,
+            dp: 1,
+        };
+        assert!(bad.validate().is_err());
     }
 }

@@ -42,6 +42,13 @@ COMMANDS:
     simulate     one op-level comparison
                    [--cluster <name>] [--op ag|rs] [--m <rows>]
                    [--tp <degree>] [--seed <n>]
+                 --scale: multi-node TP x DP serving-at-scale sweep
+                   (Poisson arrivals, per-replica continuous batching,
+                   flux vs decoupled per topology); [--topo <name>]
+                   restricts to one topology, [--quick] trims the
+                   workload, [--json] writes the byte-stable
+                   flux-scale-v1 report ([--out <path>], default
+                   BENCH_<n>.json)
     tune         auto-tune one problem, print the winning config
                    (same flags as simulate)
     train        model-level training-step comparison
@@ -83,6 +90,15 @@ fn main() -> Result<()> {
     let rest = || flag_args.iter().cloned();
     match cmd {
         "figures" => cmd_figures(&Args::parse(rest(), &["verbose"])?),
+        // `--scale` selects a different flag set: json/quick become
+        // switches there, while the plain op-level form keeps rejecting
+        // them (they would be silently ignored otherwise).
+        "simulate" if flag_args.iter().any(|a| a == "--scale") => {
+            cmd_simulate_scale(&Args::parse(
+                rest(),
+                &["verbose", "scale", "json", "quick"],
+            )?)
+        }
         "simulate" => cmd_simulate(&Args::parse(rest(), &["verbose"])?),
         "tune" => cmd_tune(&Args::parse(rest(), &["verbose"])?),
         "train" => cmd_train(&Args::parse(rest(), &["verbose"])?),
@@ -159,6 +175,16 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    // Reject stray flags (e.g. `--topo` without `--scale`, or a typo)
+    // instead of silently simulating the defaults.
+    if let Some(k) = args.flags.keys().find(|k| {
+        !matches!(k.as_str(), "cluster" | "op" | "m" | "tp" | "seed")
+    }) {
+        bail!(
+            "--{k} is not an op-level simulate flag (cluster|op|m|tp|\
+             seed); the serving sweep flags need `simulate --scale`"
+        );
+    }
     let cl = cluster_of(args)?;
     let p = problem_of(args)?;
     let seed = args.get_usize("seed", 7)? as u64;
@@ -187,6 +213,49 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     println!("  tuned config: {:?}", fx.config);
+    Ok(())
+}
+
+/// `flux simulate --scale`: the multi-node TP x DP serving sweep over
+/// every `ScaleTopology` (or one, with `--topo`), flux vs decoupled.
+fn cmd_simulate_scale(args: &Args) -> Result<()> {
+    use flux::cost::arch::{ScaleTopology, ALL_SCALE_TOPOLOGIES};
+    // The sweep is pinned (fixed seeds per topology) so the report
+    // stays byte-stable: reject the op-level flags instead of silently
+    // ignoring them.
+    if let Some(k) = args
+        .flags
+        .keys()
+        .find(|k| !matches!(k.as_str(), "out" | "topo"))
+    {
+        bail!("--{k} is not supported with --scale (only --topo, \
+               --quick, --json, --out)");
+    }
+    let only = match args.get("topo") {
+        Some(name) => Some(ScaleTopology::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown topology {name:?}; one of: {}",
+                ALL_SCALE_TOPOLOGIES
+                    .iter()
+                    .map(|t| t.name)
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            )
+        })?),
+        None => None,
+    };
+    let quick = args.has("quick");
+    // `--out` implies a JSON file report, mirroring `flux bench`.
+    let json = args.has("json") || args.get("out").is_some();
+    if json {
+        let out = args.get("out").map(std::path::Path::new);
+        let path = flux::report::write_scale(quick, only, out)?;
+        println!("wrote scale report to {}", path.display());
+    } else {
+        flux::report::print_scale(&flux::report::scale_doc_for(
+            quick, only,
+        )?)?;
+    }
     Ok(())
 }
 

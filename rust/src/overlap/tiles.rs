@@ -35,8 +35,17 @@ pub fn ring_comm_order(rank: usize, n_tp: usize) -> Vec<usize> {
 }
 
 /// Destination rank of an output row-tile in GEMM+ReduceScatter.
+///
+/// Hard-asserts the divisibility precondition: with `tiles_m % n_tp !=
+/// 0` the integer division silently routes boundary tiles to the wrong
+/// rank, and release builds (the tier-1 path) used to sail right past
+/// the old `debug_assert!`.
 pub fn tile_dest(tile_m: usize, tiles_m: usize, n_tp: usize) -> usize {
-    debug_assert!(tiles_m % n_tp == 0);
+    assert!(
+        tiles_m % n_tp == 0,
+        "tile_dest: tiles_m {tiles_m} not divisible by n_tp {n_tp}"
+    );
+    assert!(tile_m < tiles_m, "tile_dest: tile {tile_m} >= grid {tiles_m}");
     tile_m / (tiles_m / n_tp)
 }
 

@@ -22,15 +22,18 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::cost::arch::ALL_CLUSTERS;
+use crate::cost::arch::{ALL_CLUSTERS, ALL_SCALE_TOPOLOGIES};
 use crate::cost::gemm::tile_grid;
 use crate::figures::{ag_problem, rs_problem};
 use crate::overlap::{baseline, medium, Problem};
+use crate::serving::scale::{compare_scale, ScaleReport, ScaleScenario};
 use crate::tuner::TunerCache;
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Summary};
 
 pub const SCHEMA: &str = "flux-bench-v1";
+/// Schema of the `flux simulate --scale --json` report.
+pub const SCALE_SCHEMA: &str = "flux-scale-v1";
 
 /// Pinned seeds for the simulated suite (full / quick).
 const SEEDS_FULL: [u64; 5] = [7, 11, 13, 17, 23];
@@ -133,6 +136,149 @@ pub fn bench_doc(quick: bool) -> Json {
         ),
         ("suite", Json::Arr(suite)),
     ])
+}
+
+fn latency_percentiles(s: &Summary) -> Json {
+    obj(vec![
+        ("p50_ns", Json::from(s.p50)),
+        ("p95_ns", Json::from(s.p95)),
+        ("p99_ns", Json::from(s.p99)),
+    ])
+}
+
+fn scale_method_json(r: &ScaleReport) -> Json {
+    obj(vec![
+        ("completed", Json::from(r.completed)),
+        ("tokens", Json::from(r.tokens)),
+        ("makespan_ns", Json::from(r.makespan_ns)),
+        ("tokens_per_sec", Json::from(r.tokens_per_sec)),
+        ("overlap_eff_pct", Json::from(r.overlap_eff * 100.0)),
+        ("ttft_ns", latency_percentiles(&r.ttft)),
+        ("per_token_ns", latency_percentiles(&r.per_token)),
+        ("latency_ns", latency_percentiles(&r.latency)),
+    ])
+}
+
+/// The serving-at-scale document (`flux simulate --scale --json`):
+/// every topology in `ALL_SCALE_TOPOLOGIES` under the decoupled and
+/// Flux executions. Deterministic for a given `quick` — byte-identical
+/// across reruns, same contract as [`bench_doc`].
+pub fn scale_doc(quick: bool) -> Result<Json> {
+    scale_doc_for(quick, None)
+}
+
+/// Like [`scale_doc`], restricted to one topology when `only` is set
+/// (`flux simulate --scale --topo <name>`).
+pub fn scale_doc_for(
+    quick: bool,
+    only: Option<&'static crate::cost::arch::ScaleTopology>,
+) -> Result<Json> {
+    let mut topologies = Vec::new();
+    for topo in ALL_SCALE_TOPOLOGIES {
+        if only.is_some_and(|o| o.name != topo.name) {
+            continue;
+        }
+        let sc = if quick {
+            ScaleScenario::quick(topo)
+        } else {
+            ScaleScenario::full(topo)
+        };
+        let cmp = compare_scale(&sc)?;
+        topologies.push(obj(vec![
+            ("topology", Json::from(topo.name)),
+            ("cluster", Json::from(topo.cluster.name)),
+            ("nodes", Json::from(topo.nodes)),
+            ("tp", Json::from(topo.tp)),
+            ("dp", Json::from(topo.dp)),
+            ("requests", Json::from(sc.n_requests)),
+            ("prompt", Json::from(sc.prompt_len)),
+            ("gen", Json::from(sc.gen_len)),
+            ("arrival_mean_ns", Json::from(sc.arrival_mean_ns)),
+            ("seed", Json::from(sc.seed as usize)),
+            ("decoupled", scale_method_json(&cmp.decoupled)),
+            ("flux", scale_method_json(&cmp.flux)),
+            ("speedup", Json::from(cmp.speedup())),
+            ("latency_speedup", Json::from(cmp.latency_speedup())),
+        ]));
+    }
+    let mut top = vec![
+        ("schema", Json::from(SCALE_SCHEMA)),
+        ("quick", Json::from(quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("topologies", Json::Arr(topologies)),
+    ];
+    if let Some(o) = only {
+        // A filtered doc must be distinguishable from a full sweep:
+        // the trajectory diffing contract compares like with like.
+        top.push(("topo_filter", Json::from(o.name)));
+    }
+    Ok(obj(top))
+}
+
+/// Write the scale document; returns the path written. Defaults to the
+/// next free `BENCH_<n>.json`, extending the same perf trajectory the
+/// op-level bench feeds.
+pub fn write_scale(
+    quick: bool,
+    only: Option<&'static crate::cost::arch::ScaleTopology>,
+    out: Option<&Path>,
+) -> Result<PathBuf> {
+    let doc = scale_doc_for(quick, only)?;
+    let path = match out {
+        Some(p) => p.to_path_buf(),
+        None => next_bench_path(Path::new(".")),
+    };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Human-readable rendering of the scale document.
+pub fn print_scale(doc: &Json) -> Result<()> {
+    fn ms(j: &Json, k: &str) -> Result<String> {
+        Ok(format!("{:.1}", j.get(k)?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        let fx = e.get("flux")?;
+        let de = e.get("decoupled")?;
+        rows.push(vec![
+            e.get("topology")?.as_str()?.to_string(),
+            format!(
+                "{}x{}",
+                e.get("tp")?.as_usize()?,
+                e.get("dp")?.as_usize()?
+            ),
+            ms(fx.get("ttft_ns")?, "p50_ns")?,
+            ms(fx.get("ttft_ns")?, "p99_ns")?,
+            ms(fx.get("per_token_ns")?, "p50_ns")?,
+            format!("{:.1}", fx.get("tokens_per_sec")?.as_f64()?),
+            format!("{:.1}", de.get("tokens_per_sec")?.as_f64()?),
+            format!("{:.1}%", fx.get("overlap_eff_pct")?.as_f64()?),
+            format!("{:.2}x", e.get("speedup")?.as_f64()?),
+        ]);
+    }
+    crate::util::bench::table(
+        "serving at scale (flux vs decoupled, pinned seeds)",
+        &[
+            "topology",
+            "tp x dp",
+            "ttft p50 ms",
+            "ttft p99 ms",
+            "tok p50 ms",
+            "flux tok/s",
+            "dec tok/s",
+            "flux eff",
+            "speedup",
+        ],
+        &rows,
+    );
+    Ok(())
 }
 
 /// Wall-clock hotpath timings (NOT byte-stable; appended only on
@@ -297,6 +443,42 @@ mod tests {
             );
             assert!(fx.get("tiles_per_sec").unwrap().as_f64().unwrap() > 0.0);
         }
+    }
+
+    #[test]
+    fn scale_doc_is_byte_stable_and_well_formed() {
+        let a = scale_doc(true).unwrap().to_string();
+        let b = scale_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "scale doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            SCALE_SCHEMA
+        );
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), ALL_SCALE_TOPOLOGIES.len());
+        for t in topos {
+            for k in [
+                "topology", "cluster", "nodes", "tp", "dp", "requests",
+                "decoupled", "flux", "speedup",
+            ] {
+                assert!(t.opt(k).is_some(), "missing key {k}");
+            }
+            let fx = t.get("flux").unwrap();
+            let ttft = fx.get("ttft_ns").unwrap();
+            assert!(
+                ttft.get("p99_ns").unwrap().as_f64().unwrap()
+                    >= ttft.get("p50_ns").unwrap().as_f64().unwrap()
+            );
+            assert!(
+                fx.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0
+            );
+        }
+    }
+
+    #[test]
+    fn print_scale_renders_without_error() {
+        print_scale(&scale_doc(true).unwrap()).unwrap();
     }
 
     #[test]

@@ -79,7 +79,12 @@ impl Batcher {
             self.cfg.max_prompt
         );
         let id = req.id;
-        debug_assert!(self.requests.iter().all(|r| r.id != id));
+        // Hard assert (release builds too): a duplicate id would later
+        // make the KV manager reject an admission mid-tick.
+        assert!(
+            self.requests.iter().all(|r| r.id != id),
+            "duplicate request id {id}"
+        );
         self.requests.push(req);
         self.queue.push_back(id);
         id
@@ -107,24 +112,52 @@ impl Batcher {
 
     /// Pick the next work item. Prefill-priority: drain the admission
     /// queue whenever KV blocks allow; otherwise decode.
+    ///
+    /// A KV-manager rejection mid-tick (after `can_admit` said yes — a
+    /// KV invariant violation, e.g. the id is already resident) rolls
+    /// the whole tick back before surfacing the error: every request
+    /// admitted earlier in the tick is released and returned to the
+    /// queue in its original position. No queue slot is lost, no block
+    /// leaks, and no request can reach decode without its prefill
+    /// having been returned as work.
     pub fn next_work(&mut self, kv: &mut KvCacheManager) -> Result<Work> {
         // Admit as many queued requests as fit (up to the batch cap).
+        // Admission reserves the request's whole generation budget
+        // (prompt + max_new_tokens, capped by max_seq): with no
+        // preemption path, reserving only the prompt would let admitted
+        // sequences jointly over-commit the pool and OOM mid-decode.
         let mut batch = Vec::new();
+        let mut admit_err = None;
         while batch.len() < self.cfg.max_prefill_batch {
             let Some(&id) = self.queue.front() else { break };
-            let len = self.get(id).prompt.len();
-            if !kv.can_admit(len) {
+            let req = self.get(id);
+            let len = req.prompt.len();
+            let budget =
+                (len + req.max_new_tokens).min(self.cfg.max_seq).max(len);
+            if !kv.can_admit(budget) {
                 break; // backpressure: wait for blocks to free
             }
-            kv.admit(id, len)?;
+            if let Err(e) = kv.admit_with_budget(id, len, budget) {
+                admit_err = Some(e.context(format!("admitting request {id}")));
+                break;
+            }
             self.queue.pop_front();
+            self.get_mut(id).state = RequestState::Decoding;
+            self.running.push(id);
             batch.push(id);
         }
-        if !batch.is_empty() {
-            for &id in &batch {
-                self.get_mut(id).state = RequestState::Decoding;
-                self.running.push(id);
+        if let Some(e) = admit_err {
+            // Roll back this tick's admissions (reverse order restores
+            // the original queue order in front of the failing id).
+            for &id in batch.iter().rev() {
+                kv.release(id)?;
+                self.get_mut(id).state = RequestState::Queued;
+                self.running.retain(|x| *x != id);
+                self.queue.push_front(id);
             }
+            return Err(e);
+        }
+        if !batch.is_empty() {
             self.prefill_batches += 1;
             return Ok(Work::Prefill(batch));
         }
@@ -262,6 +295,42 @@ mod tests {
         b.complete_decode(&[0, 1], &[1, 1], &mut kv, 1.0).unwrap();
         let w2 = b.next_work(&mut kv).unwrap();
         assert_eq!(w2, Work::Decode(vec![2, 3]), "round robin");
+    }
+
+    #[test]
+    fn admission_reserves_generation_budget() {
+        // 4 blocks of 16 tokens. Two requests, each prompt 16 + up to
+        // 48 new tokens => budget 64 tokens = 4 blocks. Reserving only
+        // the prompt (1 block) would admit both and OOM mid-decode with
+        // no preemption path; budget admission serializes them and both
+        // finish.
+        let mut b = Batcher::new(BatcherConfig {
+            max_prefill_batch: 4,
+            max_decode_batch: 4,
+            max_prompt: 64,
+            max_seq: 64,
+        });
+        let mut kv = KvCacheManager::new(4, 16);
+        b.submit(req(0, 16, 48));
+        b.submit(req(1, 16, 48));
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![0]));
+        let mut prefills = Vec::new();
+        let mut steps = 0;
+        loop {
+            match b.next_work(&mut kv).unwrap() {
+                Work::Decode(ids) => {
+                    let toks: Vec<i32> = ids.iter().map(|_| 1).collect();
+                    b.complete_decode(&ids, &toks, &mut kv, 0.0).unwrap();
+                }
+                Work::Prefill(ids) => prefills.push(ids),
+                Work::Idle => break,
+            }
+            steps += 1;
+            assert!(steps < 500, "did not converge");
+        }
+        assert_eq!(prefills, vec![vec![1]], "1 admits only after 0 frees");
+        assert!(b.all_done());
+        kv.check_invariants().unwrap();
     }
 
     #[test]

@@ -54,10 +54,25 @@ impl KvCacheManager {
 
     /// Allocate blocks for a new sequence of `tokens` length.
     pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        self.admit_with_budget(seq, tokens, tokens)
+    }
+
+    /// Allocate blocks for a new sequence of `tokens` length, reserving
+    /// capacity up front for growth to `budget_tokens`. A continuous
+    /// batcher with no preemption path MUST reserve the full generation
+    /// budget at admission: reserving only the prompt lets N admitted
+    /// sequences jointly over-commit the pool and deadlock mid-decode
+    /// when `append_token` finds no free block.
+    pub fn admit_with_budget(
+        &mut self,
+        seq: u64,
+        tokens: usize,
+        budget_tokens: usize,
+    ) -> Result<()> {
         if self.owned.contains_key(&seq) {
             bail!("sequence {seq} already admitted");
         }
-        let need = self.blocks_for(tokens);
+        let need = self.blocks_for(budget_tokens.max(tokens));
         if need > self.free.len() {
             bail!(
                 "OOM: need {need} blocks, {} free (seq {seq})",
@@ -159,6 +174,23 @@ mod tests {
         assert!(!kv.can_admit(1));
         assert!(kv.admit(2, 1).is_err());
         assert!(kv.append_token(1).is_err(), "growth past capacity");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn budget_reservation_prevents_growth_oom() {
+        let mut kv = KvCacheManager::new(4, 16);
+        // Reserve the full 64-token budget up front: 4 blocks.
+        kv.admit_with_budget(1, 16, 64).unwrap();
+        assert_eq!(kv.used_blocks(), 4);
+        // Another admission cannot over-commit the reserved pool.
+        assert!(!kv.can_admit(16));
+        // Growth up to the budget never needs a new block.
+        for _ in 0..48 {
+            kv.append_token(1).unwrap();
+        }
+        assert_eq!(kv.used_blocks(), 4);
+        kv.release(1).unwrap();
         kv.check_invariants().unwrap();
     }
 

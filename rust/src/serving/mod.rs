@@ -7,11 +7,16 @@
 //!   collectives between partials (examples/serve_e2e.rs).
 //! * [`simulate`] — paper-scale timing: per-phase step times from the
 //!   overlap strategies on the cluster simulator.
+//!
+//! [`scale`] stacks the DES on top of both: a multi-node TP×DP
+//! coordinator that drives one batcher per DP replica for the
+//! cluster-level Fig. 16/17 scenarios (`flux simulate --scale`).
 
 pub mod batcher;
 pub mod engine;
 pub mod kvcache;
 pub mod request;
+pub mod scale;
 pub mod simulate;
 
 pub use batcher::{Batcher, BatcherConfig};

@@ -1,0 +1,504 @@
+//! Multi-node TP×DP serving-at-scale coordinator.
+//!
+//! Scales the single-TP-group serving simulation up to a whole cluster:
+//! `topo.dp` independent TP groups (replicas, Megatron-style TP within a
+//! node / replicas across nodes) are driven through ONE shared DES event
+//! queue ([`crate::sim::engine::EventQueue`]). Open-loop Poisson
+//! arrivals hit a round-robin router; each replica runs its own
+//! prefill-priority continuous batcher ([`Batcher`]) against its own
+//! paged [`KvCacheManager`], and every scheduler step is timed by the
+//! chosen overlap strategy ([`Method`]): `Method::Flux` is the fused
+//! fine-grained kernel, `Method::NonOverlap` the decoupled
+//! GEMM-then-NCCL execution the paper compares against (vLLM /
+//! Megatron-LM serving).
+//!
+//! The router is deliberately round-robin rather than least-loaded: the
+//! request→replica assignment is then identical for every `Method`, so a
+//! Flux-vs-decoupled comparison measures execution speed, never routing
+//! luck. Replicas never share links (`ScaleTopology::validate` pins TP
+//! inside a node), so the only coupling between them is the shared
+//! arrival process — which is what makes tail latency (p99 TTFT) a
+//! cluster-level, not replica-level, quantity.
+//!
+//! Everything is seeded and deterministic: the same
+//! [`ScaleScenario`] produces byte-identical reports across reruns,
+//! which is what lets CI diff the `flux simulate --scale --json` output.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cost::arch::ScaleTopology;
+use crate::model::analysis::{layer_attention_extra_ns, layer_fwd_ops};
+use crate::model::configs::TransformerConfig;
+use crate::parallel::Method;
+use crate::serving::batcher::{Batcher, BatcherConfig, Work};
+use crate::serving::kvcache::KvCacheManager;
+use crate::serving::request::Request;
+use crate::serving::simulate::{
+    decode_cache_len, decode_step_ns, prefill_ns,
+};
+use crate::sim::engine::EventQueue;
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+
+/// One serving-at-scale experiment: a topology, a model and an open-loop
+/// workload.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleScenario {
+    pub topo: &'static ScaleTopology,
+    pub model: &'static TransformerConfig,
+    /// Total requests across the cluster (round-robined over replicas).
+    pub n_requests: usize,
+    /// Mean Poisson inter-arrival time for the whole cluster, ns.
+    pub arrival_mean_ns: f64,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub max_prefill_batch: usize,
+    pub max_decode_batch: usize,
+    /// KV pool per replica, in sequences' worth of blocks (the decode
+    /// concurrency cap).
+    pub kv_seqs: usize,
+    pub seed: u64,
+}
+
+impl ScaleScenario {
+    /// CI-sized scenario: small request count, short generations.
+    pub fn quick(topo: &'static ScaleTopology) -> ScaleScenario {
+        ScaleScenario {
+            topo,
+            model: &crate::model::configs::GPT3_175B,
+            n_requests: 8 * topo.dp,
+            // Saturating load: arrivals outpace one replica's service
+            // rate so queueing (and therefore the overlap speedup) is
+            // visible in the latency percentiles.
+            arrival_mean_ns: 20.0e6 / topo.dp as f64,
+            prompt_len: 512,
+            gen_len: 8,
+            max_prefill_batch: 4,
+            max_decode_batch: 8,
+            kv_seqs: 16,
+            seed: 17,
+        }
+    }
+
+    /// Paper-shaped scenario: more requests, longer generations.
+    pub fn full(topo: &'static ScaleTopology) -> ScaleScenario {
+        ScaleScenario {
+            n_requests: 24 * topo.dp,
+            gen_len: 16,
+            ..ScaleScenario::quick(topo)
+        }
+    }
+}
+
+/// Per-replica accounting for the report.
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub completed: usize,
+    pub tokens: usize,
+    pub prefill_batches: u64,
+    pub decode_steps: u64,
+    /// Time this replica spent executing steps, ns.
+    pub busy_ns: f64,
+}
+
+/// Cluster-level result of one (scenario, method) run.
+#[derive(Clone, Debug)]
+pub struct ScaleReport {
+    pub method: Method,
+    pub completed: usize,
+    pub tokens: usize,
+    pub makespan_ns: f64,
+    /// Time to first token (arrival → prefill done), per request.
+    pub ttft: Summary,
+    /// Mean inter-token decode latency, per request.
+    pub per_token: Summary,
+    /// End-to-end latency, per request.
+    pub latency: Summary,
+    pub tokens_per_sec: f64,
+    /// Step-level overlap efficiency of this method at the prefill
+    /// reference batch (Eq. 2 applied at the model level).
+    pub overlap_eff: f64,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+/// The communication-free lower bound of a prefill step: every TP op at
+/// its monolithic-GEMM time (Eq. 1's `GEMM_non-split`), attention
+/// included. Used as the denominator of the model-level Eq. 2.
+pub fn ideal_prefill_ns(
+    topo: &ScaleTopology,
+    model: &TransformerConfig,
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let m = batch * seq;
+    let mut t = 0.0;
+    for p in layer_fwd_ops(model, m, topo.tp) {
+        t += p.gemm_nonsplit_ns(topo.cluster);
+    }
+    t += layer_attention_extra_ns(topo.cluster, model, m, seq, topo.tp);
+    t * model.n_layers as f64
+}
+
+/// Model-level overlap efficiency (Eq. 2): what fraction of the
+/// decoupled execution's exposed communication time the method hides,
+/// measured at the scenario's reference prefill batch.
+pub fn scale_overlap_efficiency(sc: &ScaleScenario, method: Method) -> f64 {
+    let base = prefill_ns(
+        sc.topo.cluster,
+        sc.model,
+        sc.max_prefill_batch,
+        sc.prompt_len,
+        sc.topo.tp,
+        Method::NonOverlap,
+        sc.seed,
+    );
+    let ideal = ideal_prefill_ns(
+        sc.topo, sc.model, sc.max_prefill_batch, sc.prompt_len,
+    );
+    let t = prefill_ns(
+        sc.topo.cluster,
+        sc.model,
+        sc.max_prefill_batch,
+        sc.prompt_len,
+        sc.topo.tp,
+        method,
+        sc.seed,
+    );
+    let exposed = base - ideal;
+    if exposed <= 0.0 {
+        return 0.0;
+    }
+    (base - t) / exposed
+}
+
+/// One replica's runtime state inside the coordinator.
+struct Replica {
+    batcher: Batcher,
+    kv: KvCacheManager,
+    /// Ids of the batch currently executing (empty when idle).
+    in_flight: Vec<u64>,
+    in_flight_is_prefill: bool,
+    busy_ns: f64,
+}
+
+/// DES events. Arrivals carry the request index; step completions the
+/// replica index.
+enum Ev {
+    Arrive(usize),
+    StepDone(usize),
+}
+
+/// Run one (scenario, method) serving simulation to completion.
+pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
+    sc.topo.validate()?;
+    ensure!(sc.n_requests > 0, "empty workload");
+    ensure!(sc.gen_len >= 1, "gen_len must be >= 1");
+    let dp = sc.topo.dp;
+    let block_tokens = 64;
+    let blocks_per_seq =
+        (sc.prompt_len + sc.gen_len).div_ceil(block_tokens) + 1;
+
+    let mut replicas: Vec<Replica> = (0..dp)
+        .map(|_| Replica {
+            batcher: Batcher::new(BatcherConfig {
+                max_prefill_batch: sc.max_prefill_batch,
+                max_decode_batch: sc.max_decode_batch,
+                max_prompt: sc.prompt_len,
+                max_seq: sc.prompt_len + sc.gen_len + 1,
+            }),
+            kv: KvCacheManager::new(sc.kv_seqs * blocks_per_seq, block_tokens),
+            in_flight: Vec::new(),
+            in_flight_is_prefill: false,
+            busy_ns: 0.0,
+        })
+        .collect();
+
+    // Step-time cache: (replica-phase, batch) → ns. Identical across
+    // replicas (same spec/model/method/seed), so one cluster-wide map.
+    let mut step_cache: BTreeMap<(bool, usize), f64> = BTreeMap::new();
+    let avg_cache_len = decode_cache_len(sc.prompt_len, sc.gen_len);
+    let mut step_ns = |is_prefill: bool, batch: usize| -> f64 {
+        *step_cache.entry((is_prefill, batch)).or_insert_with(|| {
+            if is_prefill {
+                prefill_ns(
+                    sc.topo.cluster,
+                    sc.model,
+                    batch,
+                    sc.prompt_len,
+                    sc.topo.tp,
+                    method,
+                    sc.seed,
+                )
+            } else {
+                decode_step_ns(
+                    sc.topo.cluster,
+                    sc.model,
+                    batch,
+                    avg_cache_len,
+                    sc.topo.tp,
+                    method,
+                    sc.seed,
+                )
+            }
+        })
+    };
+
+    // Open-loop Poisson arrivals, drawn up front so the arrival process
+    // is identical for every method under the same seed.
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(sc.seed);
+    let mut t_arr = 0.0;
+    for i in 0..sc.n_requests {
+        t_arr += rng.exponential(sc.arrival_mean_ns);
+        q.schedule(t_arr, Ev::Arrive(i));
+    }
+
+    while let Some((now, ev)) = q.next() {
+        let r = match ev {
+            Ev::Arrive(i) => {
+                // Round-robin router: method-independent assignment.
+                let r = i % dp;
+                let rep = &mut replicas[r];
+                rep.batcher.submit(Request::new(
+                    i as u64,
+                    now,
+                    vec![1; sc.prompt_len],
+                    sc.gen_len,
+                ));
+                r
+            }
+            Ev::StepDone(r) => {
+                let rep = &mut replicas[r];
+                let ids = std::mem::take(&mut rep.in_flight);
+                if rep.in_flight_is_prefill {
+                    // Prefill emits each sequence's first token.
+                    for &id in &ids {
+                        rep.batcher.get_mut(id).prefill_done_ns = Some(now);
+                    }
+                }
+                let toks = vec![0i32; ids.len()];
+                rep.batcher
+                    .complete_decode(&ids, &toks, &mut rep.kv, now)
+                    .with_context(|| format!("replica {r} step at {now}"))?;
+                r
+            }
+        };
+        // Try to start the next step on the touched replica.
+        let rep = &mut replicas[r];
+        if rep.in_flight.is_empty() {
+            match rep.batcher.next_work(&mut rep.kv)? {
+                Work::Prefill(ids) => {
+                    let t = step_ns(true, ids.len());
+                    rep.in_flight = ids;
+                    rep.in_flight_is_prefill = true;
+                    rep.busy_ns += t;
+                    q.schedule(now + t, Ev::StepDone(r));
+                }
+                Work::Decode(ids) => {
+                    let t = step_ns(false, ids.len());
+                    rep.in_flight = ids;
+                    rep.in_flight_is_prefill = false;
+                    rep.busy_ns += t;
+                    q.schedule(now + t, Ev::StepDone(r));
+                }
+                Work::Idle => {}
+            }
+        }
+    }
+
+    // All arrivals were scheduled and every generation is finite, so a
+    // drained queue means a drained cluster.
+    for (r, rep) in replicas.iter().enumerate() {
+        ensure!(
+            rep.batcher.all_done(),
+            "replica {r} stalled with work left (KV pool too small?)"
+        );
+    }
+
+    let mut ttft = Vec::with_capacity(sc.n_requests);
+    let mut per_token = Vec::with_capacity(sc.n_requests);
+    let mut latency = Vec::with_capacity(sc.n_requests);
+    let mut makespan: f64 = 0.0;
+    for rep in &replicas {
+        for req in &rep.batcher.requests {
+            let t = req
+                .ttft_ns()
+                .context("request finished without a prefill timestamp")?;
+            let l = req.latency_ns().context("request not finished")?;
+            ttft.push(t);
+            latency.push(l);
+            // First token lands with prefill; the rest are decode steps.
+            let decode_tokens = (req.generated.len() - 1).max(1);
+            per_token.push((l - t) / decode_tokens as f64);
+            makespan = makespan.max(req.finished_ns.unwrap());
+        }
+    }
+
+    let replica_reports: Vec<ReplicaReport> = replicas
+        .iter()
+        .map(|rep| ReplicaReport {
+            completed: rep
+                .batcher
+                .requests
+                .iter()
+                .filter(|r| r.finished_ns.is_some())
+                .count(),
+            tokens: rep
+                .batcher
+                .requests
+                .iter()
+                .map(|r| r.generated.len())
+                .sum(),
+            prefill_batches: rep.batcher.prefill_batches,
+            decode_steps: rep.batcher.decode_steps,
+            busy_ns: rep.busy_ns,
+        })
+        .collect();
+
+    let tokens: usize = replica_reports.iter().map(|r| r.tokens).sum();
+    Ok(ScaleReport {
+        method,
+        completed: replica_reports.iter().map(|r| r.completed).sum(),
+        tokens,
+        makespan_ns: makespan,
+        ttft: Summary::of(&ttft),
+        per_token: Summary::of(&per_token),
+        latency: Summary::of(&latency),
+        tokens_per_sec: tokens as f64 / (makespan * 1e-9),
+        overlap_eff: scale_overlap_efficiency(sc, method),
+        replicas: replica_reports,
+    })
+}
+
+/// The Fig. 16/17-shaped comparison: the same scenario under the
+/// decoupled (vLLM-style) and Flux executions.
+pub struct ScaleComparison {
+    pub decoupled: ScaleReport,
+    pub flux: ScaleReport,
+}
+
+impl ScaleComparison {
+    /// Throughput speedup of Flux over the decoupled execution.
+    pub fn speedup(&self) -> f64 {
+        self.decoupled.makespan_ns / self.flux.makespan_ns
+    }
+
+    /// Mean end-to-end latency speedup.
+    pub fn latency_speedup(&self) -> f64 {
+        self.decoupled.latency.mean / self.flux.latency.mean
+    }
+}
+
+pub fn compare_scale(sc: &ScaleScenario) -> Result<ScaleComparison> {
+    Ok(ScaleComparison {
+        decoupled: run_scale(sc, Method::NonOverlap)?,
+        flux: run_scale(sc, Method::Flux)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{
+        ALL_SCALE_TOPOLOGIES, SCALE_PCIE_TP8_DP2, SCALE_TP8, SCALE_TP8_DP2,
+    };
+
+    #[test]
+    fn completes_every_request_on_every_topology() {
+        for topo in ALL_SCALE_TOPOLOGIES {
+            let sc = ScaleScenario::quick(topo);
+            let rep = run_scale(&sc, Method::Flux).unwrap();
+            assert_eq!(rep.completed, sc.n_requests, "{}", topo.name);
+            assert_eq!(rep.tokens, sc.n_requests * sc.gen_len);
+            assert!(rep.tokens_per_sec > 0.0);
+            assert!(rep.ttft.p50 > 0.0);
+            assert!(rep.latency.p50 >= rep.ttft.p50);
+            assert!(rep.per_token.p50 > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_reruns() {
+        let sc = ScaleScenario::quick(&SCALE_TP8_DP2);
+        let a = run_scale(&sc, Method::Flux).unwrap();
+        let b = run_scale(&sc, Method::Flux).unwrap();
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.ttft.p99, b.ttft.p99);
+        assert_eq!(a.per_token.mean, b.per_token.mean);
+    }
+
+    #[test]
+    fn round_robin_router_balances_replicas() {
+        let sc = ScaleScenario::quick(&SCALE_TP8_DP2);
+        let rep = run_scale(&sc, Method::Flux).unwrap();
+        assert_eq!(rep.replicas.len(), 2);
+        for r in &rep.replicas {
+            assert_eq!(r.completed, sc.n_requests / 2);
+            assert!(r.prefill_batches > 0);
+            assert!(r.decode_steps > 0);
+            assert!(r.busy_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn flux_never_slower_than_decoupled_on_nvlink() {
+        // The acceptance bar: on NVLink-intra topologies Flux must beat
+        // (or match) the decoupled execution end to end.
+        for topo in [&SCALE_TP8, &SCALE_TP8_DP2] {
+            let sc = ScaleScenario::quick(topo);
+            let cmp = compare_scale(&sc).unwrap();
+            assert!(
+                cmp.speedup() >= 1.0,
+                "{}: speedup {}",
+                topo.name,
+                cmp.speedup()
+            );
+            assert!(cmp.latency_speedup() >= 1.0, "{}", topo.name);
+        }
+    }
+
+    #[test]
+    fn pcie_speedup_exceeds_nvlink_speedup() {
+        // Fig. 16 shape: the communication-dominated PCIe cluster gains
+        // the most from overlap.
+        let nvl =
+            compare_scale(&ScaleScenario::quick(&SCALE_TP8_DP2)).unwrap();
+        let pcie =
+            compare_scale(&ScaleScenario::quick(&SCALE_PCIE_TP8_DP2))
+                .unwrap();
+        assert!(
+            pcie.speedup() > nvl.speedup(),
+            "pcie {} nvl {}",
+            pcie.speedup(),
+            nvl.speedup()
+        );
+    }
+
+    #[test]
+    fn overlap_efficiency_positive_for_flux_zero_for_decoupled() {
+        let sc = ScaleScenario::quick(&SCALE_TP8);
+        let fx = scale_overlap_efficiency(&sc, Method::Flux);
+        let base = scale_overlap_efficiency(&sc, Method::NonOverlap);
+        assert!(fx > 0.0 && fx <= 1.0, "flux eff {fx}");
+        assert_eq!(base, 0.0);
+    }
+
+    #[test]
+    fn dp2_outscales_dp1_in_throughput() {
+        // Two replicas under the same per-replica load finish the
+        // doubled workload at (near-)doubled throughput.
+        let one = run_scale(&ScaleScenario::quick(&SCALE_TP8), Method::Flux)
+            .unwrap();
+        let two =
+            run_scale(&ScaleScenario::quick(&SCALE_TP8_DP2), Method::Flux)
+                .unwrap();
+        assert!(
+            two.tokens_per_sec > 1.5 * one.tokens_per_sec,
+            "dp2 {} dp1 {}",
+            two.tokens_per_sec,
+            one.tokens_per_sec
+        );
+    }
+}

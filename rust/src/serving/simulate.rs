@@ -57,6 +57,16 @@ pub fn decode_step_ns(
     t * model.n_layers as f64
 }
 
+/// The KV-cache length a decode step is costed at when a whole serving
+/// run is summarized by one representative step: prompt plus half the
+/// generation (the cache grows linearly from `prompt` to
+/// `prompt + gen`, so the midpoint is the mean). Shared by this
+/// single-group loop and the multi-replica coordinator
+/// (`serving::scale`) so the two layers never drift.
+pub fn decode_cache_len(prompt_len: usize, gen_len: usize) -> usize {
+    prompt_len + gen_len / 2
+}
+
 /// Serving report from the DES loop.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -129,7 +139,7 @@ pub fn simulate_serving(
                     let b = running.len().min(max_batch);
                     in_flight = running.iter().take(b).map(|x| x.0).collect();
                     in_flight_is_prefill = false;
-                    let avg_len = prompt_len + gen_len / 2;
+                    let avg_len = decode_cache_len(prompt_len, gen_len);
                     let t = decode_step_ns(
                         cluster, model, b, avg_len, n_tp, method, seed,
                     );

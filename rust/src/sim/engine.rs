@@ -31,10 +31,13 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap: earlier time (then lower seq for FIFO ties) first.
+        // `total_cmp` keeps the ordering total for every float the heap
+        // can hold: non-finite times are rejected and -0.0 normalized at
+        // `schedule()`, so numerically-equal times always fall through
+        // to the FIFO `seq` tie-break.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -70,8 +73,26 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `payload` at absolute time `at` (>= now).
+    ///
+    /// Panics on non-finite `at`: a NaN or infinite event time is always
+    /// an upstream arithmetic bug (0/0 rates, uninitialized ready times),
+    /// and admitting one would corrupt both the time order and the FIFO
+    /// `seq` tie-break for every event behind it. Rejecting at the
+    /// boundary, in release builds too, keeps the corruption from
+    /// propagating silently through a long serving simulation.
     pub fn schedule(&mut self, at: Time, payload: E) {
-        debug_assert!(
+        assert!(
+            at.is_finite(),
+            "non-finite event time {at} scheduled at now={}",
+            self.now
+        );
+        // Normalize -0.0: `total_cmp` would order it before +0.0, which
+        // would let two numerically-equal times bypass the FIFO seq
+        // tie-break.
+        let at = if at == 0.0 { 0.0 } else { at };
+        // Hard assert (release too): a past event would rewind `now` on
+        // pop and silently corrupt every timestamp after it.
+        assert!(
             at >= self.now - 1e-9,
             "scheduling into the past: {at} < {}",
             self.now
@@ -135,12 +156,55 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    #[cfg(debug_assertions)]
+    #[should_panic(expected = "scheduling into the past")]
     fn rejects_past_scheduling() {
         let mut q = EventQueue::new();
         q.schedule(10.0, ());
         q.next();
         q.schedule(5.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_delay() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    fn adversarial_timestamps_stay_totally_ordered() {
+        // -0.0 == 0.0 must be a *tie* (FIFO by seq), subnormals and
+        // near-identical times must not perturb the order, and a dense
+        // run of exact ties must drain strictly in insertion order.
+        let mut q = EventQueue::new();
+        q.schedule(0.0, "a");
+        q.schedule(-0.0, "b");
+        q.schedule(f64::MIN_POSITIVE, "c");
+        q.schedule(0.0, "d");
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "d", "c"]);
+
+        let mut q = EventQueue::new();
+        for i in 0..100u32 {
+            q.schedule(5.0, i);
+        }
+        let order: Vec<u32> =
+            std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
     }
 }

@@ -193,7 +193,7 @@ impl Net {
         let latency = if self.node_of(src) == self.node_of(dst) {
             self.spec.p2p_latency_us * 1e3
         } else {
-            10.0e3 // NIC latency
+            self.spec.nic_latency_us * 1e3
         };
         (start, end + latency)
     }
@@ -310,5 +310,29 @@ mod tests {
         let mut net = Net::new(&A100_NVLINK, 4);
         let (s, _) = net.transfer(0, 1, MB, 500.0);
         assert_eq!(s, 500.0);
+    }
+
+    #[test]
+    fn internode_latency_comes_from_the_spec() {
+        // Tiny transfer: end time is dominated by the NIC latency term.
+        let mut net = Net::new(&H800_NVLINK, 16);
+        let (_, e) = net.transfer(0, 9, 1.0, 0.0);
+        assert!(e >= H800_NVLINK.nic_latency_us * 1e3, "e={e}");
+    }
+
+    #[test]
+    fn replica_nets_are_independent_tp_groups() {
+        // The scale coordinator gives each DP replica its own TP-degree
+        // Net (TP stays intra-node, ScaleTopology::validate): loading
+        // one replica's links must leave another's untouched.
+        use crate::cost::arch::SCALE_TP8_DP2;
+        let mut a = Net::new(SCALE_TP8_DP2.cluster, SCALE_TP8_DP2.tp);
+        let mut b = Net::new(SCALE_TP8_DP2.cluster, SCALE_TP8_DP2.tp);
+        assert_eq!(a.n, SCALE_TP8_DP2.tp);
+        let (_, e0) = a.transfer(0, 1, 30.0 * MB, 0.0);
+        let (_, e1) = b.transfer(0, 1, 30.0 * MB, 0.0);
+        assert!((e0 - e1).abs() < 1e-9);
+        let (_, e2) = b.transfer(0, 1, 30.0 * MB, 0.0);
+        assert!(e2 > e1, "second transfer on the same replica queues");
     }
 }

@@ -2,10 +2,18 @@
 //! reports and the serving metrics.
 
 /// Summary statistics over a sample of f64 observations.
+///
+/// Convention: `std` is the **population** standard deviation (divide by
+/// `n`, not `n - 1`). The samples summarized here — simulated latencies,
+/// bench repetitions — are the *whole* population of a deterministic
+/// run, not a draw from a larger one, so no Bessel correction is
+/// applied. Callers reporting `std` next to the percentiles get the
+/// same convention NumPy's default `np.std` uses.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
+    /// Population standard deviation (ddof = 0); see the struct docs.
     pub std: f64,
     pub min: f64,
     pub p50: f64,
@@ -15,14 +23,28 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a non-empty, all-finite sample.
+    ///
+    /// Panics with a message naming the offending index/value if any
+    /// sample is NaN or infinite: a non-finite observation is always an
+    /// upstream accounting bug, and the old behavior (an opaque
+    /// `partial_cmp().unwrap()` panic inside sort, or silently poisoned
+    /// mean/std) hid where it came from. Callers with legitimately
+    /// partial data (e.g. unfinished requests) must filter before
+    /// summarizing.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty sample");
+        if let Some((i, x)) =
+            xs.iter().enumerate().find(|(_, x)| !x.is_finite())
+        {
+            panic!("Summary::of: non-finite sample {x} at index {i}");
+        }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n as f64;
         let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
@@ -81,6 +103,27 @@ mod tests {
         assert_eq!(s.mean, 5.0);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p50, 5.0);
+    }
+
+    #[test]
+    fn std_is_population_not_sample() {
+        // [2, 4]: population std = 1.0; the sample (ddof=1) convention
+        // would give sqrt(2) ≈ 1.414. Pin the documented choice.
+        let s = Summary::of(&[2.0, 4.0]);
+        assert_eq!(s.std, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample NaN at index 1")]
+    fn rejects_nan_sample() {
+        // The message must name the offending value and index.
+        Summary::of(&[1.0, f64::NAN, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample")]
+    fn rejects_infinite_sample() {
+        Summary::of(&[1.0, f64::INFINITY]);
     }
 
     #[test]

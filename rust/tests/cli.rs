@@ -105,6 +105,95 @@ fn bench_json_is_reproducible_byte_for_byte() {
 }
 
 #[test]
+fn simulate_scale_json_is_reproducible_byte_for_byte() {
+    // Acceptance: the serving-at-scale report is deterministic, covers
+    // every topology, and Flux is never slower than the decoupled
+    // execution on the NVLink-intra configurations.
+    let dir = tmp_dir("scale");
+    let run = |name: &str| -> String {
+        let path = dir.join(name);
+        let out = flux_bin()
+            .args(["simulate", "--scale", "--json", "--quick", "--out"])
+            .arg(&path)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&path).unwrap()
+    };
+    let a = run("BENCH_scale_a.json");
+    let b = run("BENCH_scale_b.json");
+    assert_eq!(a, b, "simulate --scale --json must be deterministic");
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::SCALE_SCHEMA
+    );
+    let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+    assert!(topos.len() >= 3, "at least 3 topologies");
+    for t in topos {
+        let nvlink_intra = t
+            .get("cluster")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("NVLink");
+        let speedup = t.get("speedup").unwrap().as_f64().unwrap();
+        if nvlink_intra {
+            assert!(
+                speedup >= 1.0,
+                "{}: flux slower than decoupled ({speedup})",
+                t.get("topology").unwrap().as_str().unwrap()
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulate_scale_prints_a_table() {
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--quick"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serving at scale"), "got: {text}");
+    assert!(text.contains("speedup"), "got: {text}");
+}
+
+#[test]
+fn simulate_scale_topo_filter() {
+    // --topo restricts the sweep to one named topology; unknown names
+    // and op-level flags are rejected, not silently ignored.
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--quick", "--topo", "1-node-tp8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("1-node tp8"), "got: {text}");
+    assert!(!text.contains("pcie"), "filtered out: {text}");
+
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--topo", "warp-drive"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown topology"));
+
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--m", "512"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("not supported"));
+}
+
+#[test]
 fn simulate_subcommand_prints_a_comparison() {
     let out = flux_bin()
         .args(["simulate", "--m", "512", "--tp", "4", "--op", "rs"])

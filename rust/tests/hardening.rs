@@ -1,0 +1,143 @@
+//! DES-core hardening regressions (PR 2 satellites) that are NOT
+//! covered by the in-module unit tests: release-mode tile routing
+//! (tile_dest used to guard divisibility with `debug_assert!` only)
+//! and the batcher fairness / mid-tick-rollback contracts. The
+//! NaN-ordering, Summary-convention and backpressure cases live next
+//! to their code in `sim/engine.rs`, `util/stats.rs` and
+//! `serving/batcher.rs`.
+
+use flux::overlap::tiles::tile_dest;
+use flux::serving::batcher::{Batcher, BatcherConfig, Work};
+use flux::serving::kvcache::KvCacheManager;
+use flux::serving::Request;
+
+// -- overlap/tiles.rs: release-mode tile routing --------------------------
+
+#[test]
+fn tile_dest_routes_evenly_divided_grids() {
+    // 32 row-tiles over 8 ranks: 4 per rank, block layout.
+    for t in 0..32 {
+        assert_eq!(tile_dest(t, 32, 8), t / 4);
+    }
+}
+
+#[test]
+#[should_panic(expected = "not divisible")]
+fn tile_dest_rejects_indivisible_grids() {
+    // 10 tiles over 4 ranks used to silently mis-route tiles in release
+    // builds (debug_assert only); now it is a hard error everywhere.
+    tile_dest(9, 10, 4);
+}
+
+#[test]
+#[should_panic(expected = ">= grid")]
+fn tile_dest_rejects_out_of_range_tiles() {
+    tile_dest(32, 32, 8);
+}
+
+// -- serving/batcher.rs: fairness + mid-tick admission failure ------------
+
+fn req(id: u64, prompt_len: usize, new_tokens: usize) -> Request {
+    Request::new(id, 0.0, vec![1; prompt_len], new_tokens)
+}
+
+#[test]
+fn decode_round_robin_never_starves_past_the_cap() {
+    // 5 running requests, decode cap 2: every request must be served
+    // within a bounded number of steps of every other (spread <= 1
+    // among still-running requests at all times).
+    let mut b = Batcher::new(BatcherConfig {
+        max_prefill_batch: 8,
+        max_decode_batch: 2,
+        max_prompt: 64,
+        max_seq: 128,
+    });
+    let mut kv = KvCacheManager::new(64, 16);
+    let n = 5u64;
+    let gen = 6usize;
+    for i in 0..n {
+        b.submit(req(i, 4, gen));
+    }
+    match b.next_work(&mut kv).unwrap() {
+        Work::Prefill(ids) => assert_eq!(ids.len(), n as usize),
+        w => panic!("expected prefill, got {w:?}"),
+    }
+    let mut served = vec![0usize; n as usize];
+    let mut steps = 0;
+    loop {
+        match b.next_work(&mut kv).unwrap() {
+            Work::Decode(ids) => {
+                assert!(ids.len() <= 2, "cap respected");
+                for &id in &ids {
+                    served[id as usize] += 1;
+                }
+                let toks: Vec<i32> = ids.iter().map(|_| 1).collect();
+                b.complete_decode(&ids, &toks, &mut kv, steps as f64)
+                    .unwrap();
+                // Fairness invariant among still-running requests.
+                let live: Vec<usize> = (0..n as usize)
+                    .filter(|&i| served[i] < gen)
+                    .map(|i| served[i])
+                    .collect();
+                if let (Some(&mx), Some(&mn)) =
+                    (live.iter().max(), live.iter().min())
+                {
+                    assert!(
+                        mx - mn <= 1,
+                        "starvation: served={served:?} at step {steps}"
+                    );
+                }
+            }
+            Work::Idle => break,
+            w => panic!("unexpected work {w:?}"),
+        }
+        steps += 1;
+        assert!(steps < 1000, "did not converge");
+    }
+    assert!(b.all_done());
+    assert!(served.iter().all(|&s| s == gen), "served={served:?}");
+}
+
+#[test]
+fn mid_tick_admission_failure_leaks_nothing() {
+    // An out-of-band KV resident under a queued request's id makes
+    // `kv.admit` fail AFTER `can_admit` passed — mid-tick. The batcher
+    // must roll the whole tick back: the error is surfaced, every
+    // request admitted earlier in the tick returns to the queue in its
+    // original position, and no queue slot or KV block is stranded.
+    let mut b = Batcher::new(BatcherConfig::default());
+    let mut kv = KvCacheManager::new(32, 16);
+    b.submit(req(0, 16, 2));
+    b.submit(req(1, 16, 2));
+    b.submit(req(2, 16, 2));
+    // Simulate the foreign resident (e.g. a stale sequence never
+    // released by a crashed engine).
+    kv.admit(1, 16).unwrap();
+    let foreign_blocks = kv.used_blocks();
+
+    let err = b.next_work(&mut kv).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("admitting request 1"),
+        "error names the request: {err:#}"
+    );
+    // The tick rolled back: nothing running, all three still queued,
+    // only the foreign resident holds blocks.
+    assert_eq!(b.running(), 0);
+    assert_eq!(b.queued(), 3);
+    assert_eq!(kv.used_blocks(), foreign_blocks);
+    kv.check_invariants().unwrap();
+
+    // Recovery: drop the foreign resident; the next tick admits all
+    // three in order and the batcher drains normally — nothing lost.
+    kv.release(1).unwrap();
+    assert_eq!(
+        b.next_work(&mut kv).unwrap(),
+        Work::Prefill(vec![0, 1, 2])
+    );
+    assert_eq!(b.running(), 3);
+    let fin = b
+        .complete_decode(&[0, 1, 2], &[9, 9, 9], &mut kv, 1.0)
+        .unwrap();
+    assert!(fin.is_empty());
+    kv.check_invariants().unwrap();
+}
