@@ -235,6 +235,91 @@ pub const ALL_SCALE_TOPOLOGIES: [&ScaleTopology; 4] = [
     &SCALE_H800_TP8_DP4,
 ];
 
+/// A training cluster layout: DP x PP x TP over nodes of a base
+/// [`ClusterSpec`], Megatron-LM convention (§5.2): TP inside a node,
+/// one pipeline stage per node, DP replicas tile the remaining nodes.
+/// The PP hops and the DP gradient all-reduce both ride the inter-node
+/// NIC path (`nic_gbps_per_gpu` / `nic_latency_us`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainTopology {
+    pub name: &'static str,
+    pub cluster: &'static ClusterSpec,
+    pub dp: usize,
+    pub pp: usize,
+    /// TP degree of each pipeline stage (intra-node).
+    pub tp: usize,
+}
+
+/// The paper's 128-GPU training layout (Fig. 16: DP2 x PP8 x TP8) on
+/// each evaluation cluster.
+pub const TRAIN_PCIE_128: TrainTopology = TrainTopology {
+    name: "pcie dp2 pp8 tp8",
+    cluster: &A100_PCIE,
+    dp: 2,
+    pp: 8,
+    tp: 8,
+};
+
+pub const TRAIN_NVLINK_128: TrainTopology = TrainTopology {
+    name: "nvlink dp2 pp8 tp8",
+    cluster: &A100_NVLINK,
+    dp: 2,
+    pp: 8,
+    tp: 8,
+};
+
+pub const TRAIN_H800_128: TrainTopology = TrainTopology {
+    name: "h800 dp2 pp8 tp8",
+    cluster: &H800_NVLINK,
+    dp: 2,
+    pp: 8,
+    tp: 8,
+};
+
+pub const ALL_TRAIN_TOPOLOGIES: [&TrainTopology; 3] =
+    [&TRAIN_PCIE_128, &TRAIN_NVLINK_128, &TRAIN_H800_128];
+
+impl TrainTopology {
+    pub fn by_name(name: &str) -> Option<&'static TrainTopology> {
+        let norm =
+            |s: &str| s.to_ascii_lowercase().replace(['-', '_'], " ");
+        let key = norm(name);
+        ALL_TRAIN_TOPOLOGIES.iter().copied().find(|t| norm(t.name) == key)
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.dp * self.pp * self.tp
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.gpus().div_ceil(self.cluster.gpus_per_node)
+    }
+
+    /// Check the TP-within-node / stage-per-node layout invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dp >= 1 && self.pp >= 1 && self.tp >= 1,
+            "{}: degenerate topology",
+            self.name
+        );
+        anyhow::ensure!(
+            self.tp <= self.cluster.gpus_per_node,
+            "{}: TP{} exceeds the {}-GPU node (TP must stay intra-node)",
+            self.name,
+            self.tp,
+            self.cluster.gpus_per_node
+        );
+        anyhow::ensure!(
+            self.gpus() % self.cluster.gpus_per_node == 0,
+            "{}: {} GPUs do not tile {}-GPU nodes",
+            self.name,
+            self.gpus(),
+            self.cluster.gpus_per_node
+        );
+        Ok(())
+    }
+}
+
 impl ScaleTopology {
     pub fn by_name(name: &str) -> Option<&'static ScaleTopology> {
         // Topology names contain hyphens themselves ("2-node tp8 dp2"),
@@ -343,6 +428,41 @@ mod tests {
             nodes: 2,
             tp: 16,
             dp: 1,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn train_topologies_are_the_papers_128_gpu_layout() {
+        for t in ALL_TRAIN_TOPOLOGIES {
+            t.validate().unwrap();
+            assert_eq!(t.gpus(), 128, "{}", t.name);
+            assert_eq!((t.dp, t.pp, t.tp), (2, 8, 8), "{}", t.name);
+            assert_eq!(t.nodes(), 16, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn train_lookup_by_name() {
+        assert_eq!(
+            TrainTopology::by_name("pcie-dp2-pp8-tp8"),
+            Some(&TRAIN_PCIE_128)
+        );
+        assert_eq!(
+            TrainTopology::by_name("H800_dp2_pp8_tp8"),
+            Some(&TRAIN_H800_128)
+        );
+        assert!(TrainTopology::by_name("dp9000").is_none());
+    }
+
+    #[test]
+    fn train_tp_spanning_nodes_is_rejected() {
+        let bad = TrainTopology {
+            name: "tp16 spanning",
+            cluster: &A100_NVLINK,
+            dp: 1,
+            pp: 2,
+            tp: 16,
         };
         assert!(bad.validate().is_err());
     }

@@ -292,6 +292,35 @@ pub fn fig16() -> Table {
      rows)
 }
 
+/// Fig. 16 (event-driven twin): the training rows re-derived by the
+/// DES 1F1B simulator (`crate::training`) instead of the closed form —
+/// per-topology step time, measured bubble, exposed DP tail, speedups.
+pub fn fig16_des() -> Table {
+    use crate::cost::arch::ALL_TRAIN_TOPOLOGIES;
+    use crate::training::{compare_train, TrainScenario};
+    let mut rows = Vec::new();
+    for topo in ALL_TRAIN_TOPOLOGIES {
+        let sc = TrainScenario::full(topo);
+        let cmp = compare_train(&sc).expect("paper topology simulates");
+        rows.push(vec![
+            topo.name.to_string(),
+            format!("{}x{}x{}", topo.dp, topo.pp, topo.tp),
+            ms(cmp.megatron.step_ns),
+            ms(cmp.te.step_ns),
+            ms(cmp.flux.step_ns),
+            pct(cmp.flux.bubble_fraction),
+            ms(cmp.flux.dp_exposed_ns),
+            sp(cmp.speedup()),
+            sp(cmp.speedup_vs_te()),
+        ]);
+    }
+    ("Fig 16 (event-driven): 1F1B training step via the DES \
+      (DP2xPP8xTP8, 128 GPUs, GPT-3 175B)",
+     vec!["topology", "dp x pp x tp", "Megatron ms", "TE ms", "Flux ms",
+          "bubble", "dp tail ms", "vs Megatron", "vs TE"],
+     rows)
+}
+
 /// Fig. 17: decoding, batch 64 / 512.
 pub fn fig17() -> Table {
     let mut rows = Vec::new();
@@ -377,6 +406,7 @@ pub fn all() -> Vec<Table> {
         fig14(),
         fig15(),
         fig16(),
+        fig16_des(),
         fig17(),
     ]
 }

@@ -27,5 +27,6 @@ pub mod parallel;
 pub mod runtime;
 pub mod serving;
 pub mod sim;
+pub mod training;
 pub mod tuner;
 pub mod util;

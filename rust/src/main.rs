@@ -49,6 +49,12 @@ COMMANDS:
                    workload, [--json] writes the byte-stable
                    flux-scale-v1 report ([--out <path>], default
                    BENCH_<n>.json)
+                 --train: event-driven DP x PP x TP training sweep
+                   (1F1B microbatch schedule on the DES, PP hops on
+                   NIC links, DP all-reduce streamed behind backward;
+                   megatron vs TE vs flux per topology); same
+                   [--topo] [--quick] [--json] [--out] flags, report
+                   schema flux-train-v1
     tune         auto-tune one problem, print the winning config
                    (same flags as simulate)
     train        model-level training-step comparison
@@ -93,10 +99,22 @@ fn main() -> Result<()> {
         // `--scale` selects a different flag set: json/quick become
         // switches there, while the plain op-level form keeps rejecting
         // them (they would be silently ignored otherwise).
+        "simulate"
+            if flag_args.iter().any(|a| a == "--scale")
+                && flag_args.iter().any(|a| a == "--train") =>
+        {
+            bail!("--scale and --train are separate sweeps; pick one")
+        }
         "simulate" if flag_args.iter().any(|a| a == "--scale") => {
             cmd_simulate_scale(&Args::parse(
                 rest(),
                 &["verbose", "scale", "json", "quick"],
+            )?)
+        }
+        "simulate" if flag_args.iter().any(|a| a == "--train") => {
+            cmd_simulate_train(&Args::parse(
+                rest(),
+                &["verbose", "train", "json", "quick"],
             )?)
         }
         "simulate" => cmd_simulate(&Args::parse(rest(), &["verbose"])?),
@@ -182,7 +200,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }) {
         bail!(
             "--{k} is not an op-level simulate flag (cluster|op|m|tp|\
-             seed); the serving sweep flags need `simulate --scale`"
+             seed); the sweep flags need `simulate --scale` or \
+             `simulate --train`"
         );
     }
     let cl = cluster_of(args)?;
@@ -253,6 +272,47 @@ fn cmd_simulate_scale(args: &Args) -> Result<()> {
         println!("wrote scale report to {}", path.display());
     } else {
         flux::report::print_scale(&flux::report::scale_doc_for(
+            quick, only,
+        )?)?;
+    }
+    Ok(())
+}
+
+/// `flux simulate --train`: the event-driven DP x PP x TP training
+/// sweep over every `TrainTopology` (or one, with `--topo`), megatron
+/// vs TE vs flux.
+fn cmd_simulate_train(args: &Args) -> Result<()> {
+    use flux::cost::arch::{TrainTopology, ALL_TRAIN_TOPOLOGIES};
+    if let Some(k) = args
+        .flags
+        .keys()
+        .find(|k| !matches!(k.as_str(), "out" | "topo"))
+    {
+        bail!("--{k} is not supported with --train (only --topo, \
+               --quick, --json, --out)");
+    }
+    let only = match args.get("topo") {
+        Some(name) => Some(TrainTopology::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown topology {name:?}; one of: {}",
+                ALL_TRAIN_TOPOLOGIES
+                    .iter()
+                    .map(|t| t.name)
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            )
+        })?),
+        None => None,
+    };
+    let quick = args.has("quick");
+    // `--out` implies a JSON file report, mirroring `flux bench`.
+    let json = args.has("json") || args.get("out").is_some();
+    if json {
+        let out = args.get("out").map(std::path::Path::new);
+        let path = flux::report::write_train(quick, only, out)?;
+        println!("wrote train report to {}", path.display());
+    } else {
+        flux::report::print_train(&flux::report::train_doc_for(
             quick, only,
         )?)?;
     }

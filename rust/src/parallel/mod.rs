@@ -80,6 +80,87 @@ pub struct StageTimes {
     pub bwd_ns: f64,
 }
 
+/// Every per-step cost the 1F1B composition needs, for one (cluster,
+/// model, layout, method) point. This is the single stage-timing
+/// substrate shared by the closed-form [`train_step_ns`] and the
+/// event-driven `training::simulate_train` path: both consume exactly
+/// these numbers, so the two can only diverge in *scheduling*, never in
+/// per-item cost.
+#[derive(Clone, Copy, Debug)]
+pub struct StepCosts {
+    /// Per-microbatch forward/backward time of one pipeline stage.
+    pub stage: StageTimes,
+    /// Activation payload per PP stage boundary per microbatch, bytes
+    /// (the backward gradient hop carries the same shape).
+    pub act_bytes: f64,
+    /// Closed-form time of one PP hop (NIC path at this scale).
+    pub hop_ns: f64,
+    /// Full wire time of the DP ring all-reduce of one GPU's gradient
+    /// shard (0 when dp == 1). How much of it is *exposed* is a
+    /// scheduling question answered differently by the two paths.
+    pub grad_wire_ns: f64,
+    /// Adam over the local shard (memory-bound, never overlapped).
+    pub opt_ns: f64,
+}
+
+/// Build the shared cost substrate for one training-step configuration.
+pub fn step_costs(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    layout: &Layout,
+    micro_tokens: usize,
+    seq: usize,
+    method: Method,
+    seed: u64,
+) -> StepCosts {
+    let stage = stage_times(
+        cluster, model, layout, micro_tokens, seq, method, seed,
+    );
+    // Inter-stage activation transfer per microbatch boundary (PP ranks
+    // live on different nodes at this scale: NIC path).
+    let act_bytes = micro_tokens as f64 * model.d_model as f64 * 2.0;
+    let hop_ns = internode_exchange_ns(cluster, act_bytes);
+    // DP gradient ring all-reduce of this GPU's parameter shard, bf16.
+    let params_per_gpu = model.params() / (layout.pp * layout.tp) as f64;
+    let grad_bytes = params_per_gpu * 2.0;
+    let grad_wire_ns = 2.0 * (layout.dp - 1) as f64 / layout.dp as f64
+        * grad_bytes
+        / cluster.nic_gbps_per_gpu;
+    // Optimizer: Adam over the shard, memory-bound (~6 passes over
+    // params in fp32 master copies).
+    let opt_ns = 6.0 * params_per_gpu * 4.0 / cluster.arch.hbm_gbps;
+    StepCosts { stage, act_bytes, hop_ns, grad_wire_ns, opt_ns }
+}
+
+/// The communication-free twin of [`stage_times`]: every TP op priced
+/// at its monolithic-GEMM time (Eq. 1's `GEMM_non-split`), wgrad and
+/// attention included. The training-level Eq.-2 denominator.
+pub fn ideal_stage_times(
+    cluster: &ClusterSpec,
+    model: &TransformerConfig,
+    layout: &Layout,
+    micro_tokens: usize,
+    seq: usize,
+) -> StageTimes {
+    let layers = model.n_layers / layout.pp;
+    let m = micro_tokens;
+    let mut fwd = 0.0;
+    for p in layer_fwd_ops(model, m, layout.tp) {
+        fwd += p.gemm_nonsplit_ns(cluster);
+    }
+    fwd += layer_attention_extra_ns(cluster, model, m, seq, layout.tp);
+    let mut bwd = 0.0;
+    for p in layer_bwd_ops(model, m, layout.tp) {
+        bwd += p.gemm_nonsplit_ns(cluster);
+        bwd += gemm_time_ns(&cluster.arch, &p.local_gemm()); // wgrad
+    }
+    bwd += 2.0 * layer_attention_extra_ns(cluster, model, m, seq, layout.tp);
+    StageTimes {
+        fwd_ns: fwd * layers as f64,
+        bwd_ns: bwd * layers as f64,
+    }
+}
+
 /// Time of one pipeline stage's forward/backward for one microbatch.
 pub fn stage_times(
     cluster: &ClusterSpec,
@@ -124,40 +205,26 @@ pub fn train_step_ns(
     method: Method,
     seed: u64,
 ) -> f64 {
-    let st = stage_times(
+    let c = step_costs(
         cluster, model, layout, micro_tokens, seq, method, seed,
     );
-    // Inter-stage activation transfer per microbatch boundary (PP ranks
-    // live on different nodes at this scale: NIC path).
-    let act_bytes = micro_tokens as f64 * model.d_model as f64 * 2.0;
-    let hop = internode_exchange_ns(cluster, act_bytes);
     let pipe = schedule::one_f1b_ns(
         layout.pp,
         microbatches,
-        st.fwd_ns,
-        st.bwd_ns,
-        hop,
+        c.stage.fwd_ns,
+        c.stage.bwd_ns,
+        c.hop_ns,
     );
-    // DP gradient ring all-reduce of this GPU's parameter shard, bf16.
     // Megatron buckets gradients and overlaps the all-reduce with the
     // remaining backward passes; only the tail past the backward work
     // is exposed.
-    let params_per_gpu =
-        model.params() / (layout.pp * layout.tp) as f64;
-    let grad_bytes = params_per_gpu * 2.0;
     let dp_ar = if layout.dp > 1 {
-        let wire = 2.0 * (layout.dp - 1) as f64 / layout.dp as f64
-            * grad_bytes
-            / cluster.nic_gbps_per_gpu;
-        let bwd_window = 0.8 * microbatches as f64 * st.bwd_ns;
-        (wire - bwd_window).max(0.05 * wire) // tail bucket stays exposed
+        let bwd_window = 0.8 * microbatches as f64 * c.stage.bwd_ns;
+        (c.grad_wire_ns - bwd_window).max(0.05 * c.grad_wire_ns)
     } else {
         0.0
     };
-    // Optimizer: Adam over the shard, memory-bound (~6 passes over
-    // params in fp32 master copies).
-    let opt = 6.0 * params_per_gpu * 4.0 / cluster.arch.hbm_gbps;
-    pipe + dp_ar + opt
+    pipe + dp_ar + c.opt_ns
 }
 
 #[cfg(test)]
@@ -207,6 +274,33 @@ mod tests {
                 "{}", c.name
             );
         }
+    }
+
+    #[test]
+    fn ideal_stage_floors_every_method() {
+        // The comm-free stage is a lower bound on every method's stage
+        // time: overlap hides communication, it cannot create compute.
+        let ideal = ideal_stage_times(
+            &A100_NVLINK, &GPT3_175B, &LAYOUT, 2048, 2048,
+        );
+        for m in Method::ALL {
+            let st = stage_times(
+                &A100_NVLINK, &GPT3_175B, &LAYOUT, 2048, 2048, m, 3,
+            );
+            assert!(st.fwd_ns >= ideal.fwd_ns * 0.999, "{}", m.name());
+            assert!(st.bwd_ns >= ideal.bwd_ns * 0.999, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn step_costs_dp1_has_no_gradient_wire() {
+        let solo = Layout { dp: 1, pp: 8, tp: 8 };
+        let c = step_costs(
+            &A100_NVLINK, &GPT3_175B, &solo, 2048, 2048,
+            Method::NonOverlap, 3,
+        );
+        assert_eq!(c.grad_wire_ns, 0.0);
+        assert!(c.opt_ns > 0.0 && c.hop_ns > 0.0 && c.act_bytes > 0.0);
     }
 
     #[test]

@@ -22,11 +22,18 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::cost::arch::{ALL_CLUSTERS, ALL_SCALE_TOPOLOGIES};
+use crate::cost::arch::{
+    ALL_CLUSTERS, ALL_SCALE_TOPOLOGIES, ALL_TRAIN_TOPOLOGIES,
+};
 use crate::cost::gemm::tile_grid;
 use crate::figures::{ag_problem, rs_problem};
 use crate::overlap::{baseline, medium, Problem};
+use crate::parallel::schedule;
 use crate::serving::scale::{compare_scale, ScaleReport, ScaleScenario};
+use crate::training::{
+    compare_train, ideal_step_ns, overlap_efficiency_vs_ideal, TrainRun,
+    TrainScenario,
+};
 use crate::tuner::TunerCache;
 use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Summary};
@@ -34,6 +41,8 @@ use crate::util::stats::{percentile, Summary};
 pub const SCHEMA: &str = "flux-bench-v1";
 /// Schema of the `flux simulate --scale --json` report.
 pub const SCALE_SCHEMA: &str = "flux-scale-v1";
+/// Schema of the `flux simulate --train --json` report.
+pub const TRAIN_SCHEMA: &str = "flux-train-v1";
 
 /// Pinned seeds for the simulated suite (full / quick).
 const SEEDS_FULL: [u64; 5] = [7, 11, 13, 17, 23];
@@ -223,19 +232,7 @@ pub fn write_scale(
     only: Option<&'static crate::cost::arch::ScaleTopology>,
     out: Option<&Path>,
 ) -> Result<PathBuf> {
-    let doc = scale_doc_for(quick, only)?;
-    let path = match out {
-        Some(p) => p.to_path_buf(),
-        None => next_bench_path(Path::new(".")),
-    };
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(&path, doc.to_string())
-        .with_context(|| format!("writing {}", path.display()))?;
-    Ok(path)
+    write_doc(&scale_doc_for(quick, only)?, out)
 }
 
 /// Human-readable rendering of the scale document.
@@ -275,6 +272,158 @@ pub fn print_scale(doc: &Json) -> Result<()> {
             "dec tok/s",
             "flux eff",
             "speedup",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+/// The event-driven training document (`flux simulate --train --json`):
+/// every topology in `ALL_TRAIN_TOPOLOGIES` under the Megatron-LM
+/// (non-overlap), TransformerEngine and Flux executions of the 1F1B
+/// step. Deterministic for a given `quick` — byte-identical across
+/// reruns, same contract as [`bench_doc`] / [`scale_doc`].
+pub fn train_doc(quick: bool) -> Result<Json> {
+    train_doc_for(quick, None)
+}
+
+/// Like [`train_doc`], restricted to one topology when `only` is set
+/// (`flux simulate --train --topo <name>`).
+pub fn train_doc_for(
+    quick: bool,
+    only: Option<&'static crate::cost::arch::TrainTopology>,
+) -> Result<Json> {
+    let mut topologies = Vec::new();
+    for topo in ALL_TRAIN_TOPOLOGIES {
+        if only.is_some_and(|o| o.name != topo.name) {
+            continue;
+        }
+        let sc = if quick {
+            TrainScenario::quick(topo)
+        } else {
+            TrainScenario::full(topo)
+        };
+        let cmp = compare_train(&sc)?;
+        let ideal = ideal_step_ns(&sc)?;
+        // Eq. 2 at the step level, ideal computed once per topology.
+        let eff = |r: &TrainRun| {
+            overlap_efficiency_vs_ideal(
+                cmp.megatron.step_ns,
+                r.step_ns,
+                ideal,
+            )
+        };
+        let method_json = |r: &TrainRun| {
+            obj(vec![
+                ("step_ns", Json::from(r.step_ns)),
+                ("analytic_ns", Json::from(r.analytic_ns)),
+                ("pipe_ns", Json::from(r.pipe_ns)),
+                (
+                    "bubble_fraction_pct",
+                    Json::from(r.bubble_fraction * 100.0),
+                ),
+                ("dp_exposed_ns", Json::from(r.dp_exposed_ns)),
+                ("opt_ns", Json::from(r.opt_ns)),
+                ("overlap_eff_pct", Json::from(eff(r) * 100.0)),
+                (
+                    "des_vs_analytic",
+                    Json::from(r.step_ns / r.analytic_ns),
+                ),
+                ("events", Json::from(r.events)),
+            ])
+        };
+        topologies.push(obj(vec![
+            ("topology", Json::from(topo.name)),
+            ("cluster", Json::from(topo.cluster.name)),
+            ("dp", Json::from(topo.dp)),
+            ("pp", Json::from(topo.pp)),
+            ("tp", Json::from(topo.tp)),
+            ("gpus", Json::from(topo.gpus())),
+            ("microbatches", Json::from(sc.microbatches)),
+            ("micro_tokens", Json::from(sc.micro_tokens)),
+            ("seq", Json::from(sc.seq)),
+            ("seed", Json::from(sc.seed as usize)),
+            (
+                "bubble_analytic_pct",
+                Json::from(
+                    schedule::bubble_fraction(topo.pp, sc.microbatches)
+                        * 100.0,
+                ),
+            ),
+            ("ideal_step_ns", Json::from(ideal)),
+            ("megatron", method_json(&cmp.megatron)),
+            ("te", method_json(&cmp.te)),
+            ("flux", method_json(&cmp.flux)),
+            ("speedup", Json::from(cmp.speedup())),
+            ("speedup_vs_te", Json::from(cmp.speedup_vs_te())),
+        ]));
+    }
+    let mut top = vec![
+        ("schema", Json::from(TRAIN_SCHEMA)),
+        ("quick", Json::from(quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("topologies", Json::Arr(topologies)),
+    ];
+    if let Some(o) = only {
+        // Same contract as the scale doc: a filtered report must be
+        // distinguishable from a full sweep when diffing trajectories.
+        top.push(("topo_filter", Json::from(o.name)));
+    }
+    Ok(obj(top))
+}
+
+/// Write the training document; returns the path written. Defaults to
+/// the next free `BENCH_<n>.json` on the shared perf trajectory.
+pub fn write_train(
+    quick: bool,
+    only: Option<&'static crate::cost::arch::TrainTopology>,
+    out: Option<&Path>,
+) -> Result<PathBuf> {
+    write_doc(&train_doc_for(quick, only)?, out)
+}
+
+/// Human-readable rendering of the training document.
+pub fn print_train(doc: &Json) -> Result<()> {
+    fn ms(j: &Json, k: &str) -> Result<String> {
+        Ok(format!("{:.1}", j.get(k)?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        let fx = e.get("flux")?;
+        rows.push(vec![
+            e.get("topology")?.as_str()?.to_string(),
+            format!(
+                "{}x{}x{}",
+                e.get("dp")?.as_usize()?,
+                e.get("pp")?.as_usize()?,
+                e.get("tp")?.as_usize()?
+            ),
+            ms(e.get("megatron")?, "step_ns")?,
+            ms(e.get("te")?, "step_ns")?,
+            ms(fx, "step_ns")?,
+            format!(
+                "{:.1}%",
+                fx.get("bubble_fraction_pct")?.as_f64()?
+            ),
+            format!("{:.1}%", fx.get("overlap_eff_pct")?.as_f64()?),
+            ms(fx, "dp_exposed_ns")?,
+            format!("{:.2}x", e.get("speedup")?.as_f64()?),
+            format!("{:.2}x", e.get("speedup_vs_te")?.as_f64()?),
+        ]);
+    }
+    crate::util::bench::table(
+        "training at scale (event-driven 1F1B, flux vs Megatron-LM/TE)",
+        &[
+            "topology",
+            "dp x pp x tp",
+            "megatron ms",
+            "TE ms",
+            "flux ms",
+            "bubble",
+            "flux eff",
+            "dp tail ms",
+            "vs megatron",
+            "vs TE",
         ],
         &rows,
     );
@@ -347,18 +496,10 @@ pub fn next_bench_path(dir: &Path) -> PathBuf {
     dir.join("BENCH_overflow.json")
 }
 
-/// Write the bench document; returns the path written.
-pub fn write_bench(
-    quick: bool,
-    wall: bool,
-    out: Option<&Path>,
-) -> Result<PathBuf> {
-    let mut doc = bench_doc(quick);
-    if wall {
-        if let Json::Obj(m) = &mut doc {
-            m.insert("wall".to_string(), wall_doc());
-        }
-    }
+/// Shared trajectory writer: resolve `out` (default: the next free
+/// `BENCH_<n>.json`), create the parent dir, write the document.
+/// One path policy for the bench, scale and train reports.
+fn write_doc(doc: &Json, out: Option<&Path>) -> Result<PathBuf> {
     let path = match out {
         Some(p) => p.to_path_buf(),
         None => next_bench_path(Path::new(".")),
@@ -371,6 +512,21 @@ pub fn write_bench(
     std::fs::write(&path, doc.to_string())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(path)
+}
+
+/// Write the bench document; returns the path written.
+pub fn write_bench(
+    quick: bool,
+    wall: bool,
+    out: Option<&Path>,
+) -> Result<PathBuf> {
+    let mut doc = bench_doc(quick);
+    if wall {
+        if let Json::Obj(m) = &mut doc {
+            m.insert("wall".to_string(), wall_doc());
+        }
+    }
+    write_doc(&doc, out)
 }
 
 /// Human-readable rendering of a bench document (`flux bench` without
@@ -479,6 +635,63 @@ mod tests {
     #[test]
     fn print_scale_renders_without_error() {
         print_scale(&scale_doc(true).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn train_doc_is_byte_stable_and_well_formed() {
+        let a = train_doc(true).unwrap().to_string();
+        let b = train_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "train doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            TRAIN_SCHEMA
+        );
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), ALL_TRAIN_TOPOLOGIES.len());
+        for t in topos {
+            for k in [
+                "topology", "cluster", "dp", "pp", "tp", "gpus",
+                "microbatches", "megatron", "te", "flux", "speedup",
+                "speedup_vs_te", "ideal_step_ns",
+            ] {
+                assert!(t.opt(k).is_some(), "missing key {k}");
+            }
+            let fx = t.get("flux").unwrap();
+            let step = fx.get("step_ns").unwrap().as_f64().unwrap();
+            let pipe = fx.get("pipe_ns").unwrap().as_f64().unwrap();
+            assert!(step > pipe && pipe > 0.0);
+            let bubble = fx
+                .get("bubble_fraction_pct")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(bubble > 0.0 && bubble < 100.0);
+            assert!(
+                t.get("speedup").unwrap().as_f64().unwrap() > 1.0,
+                "flux must beat megatron on {}",
+                t.get("topology").unwrap().as_str().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn train_doc_topo_filter_marks_the_document() {
+        use crate::cost::arch::TRAIN_NVLINK_128;
+        let doc = train_doc_for(true, Some(&TRAIN_NVLINK_128)).unwrap();
+        assert_eq!(
+            doc.get("topo_filter").unwrap().as_str().unwrap(),
+            TRAIN_NVLINK_128.name
+        );
+        assert_eq!(
+            doc.get("topologies").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn print_train_renders_without_error() {
+        print_train(&train_doc(true).unwrap()).unwrap();
     }
 
     #[test]

@@ -21,16 +21,27 @@
 
 use crate::util::prng::Rng;
 
-/// Run `prop` over `cases` random cases derived from `seed`.
-pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Rng)) {
-    let cases = std::env::var("FLUX_CHECK_CASES")
+/// The per-case replay seed: shared by [`forall`] and
+/// `util::propcheck::forall_gen` so a printed seed reproduces the same
+/// draw in either harness.
+pub fn case_seed(seed: u64, case: usize) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(case as u64)
+}
+
+/// Case-count override for soak runs (`FLUX_CHECK_CASES=10000`).
+pub fn case_count(default: usize) -> usize {
+    std::env::var("FLUX_CHECK_CASES")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(cases);
+        .unwrap_or(default)
+}
+
+/// Run `prop` over `cases` random cases derived from `seed`.
+pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Rng)) {
+    let cases = case_count(cases);
     for case in 0..cases {
-        let case_seed = seed
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(case as u64);
+        let case_seed = case_seed(seed, case);
         let mut rng = Rng::new(case_seed);
         let result = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| prop(&mut rng)),

@@ -7,4 +7,5 @@ pub mod check;
 pub mod cli;
 pub mod json;
 pub mod prng;
+pub mod propcheck;
 pub mod stats;

@@ -194,6 +194,86 @@ fn simulate_scale_topo_filter() {
 }
 
 #[test]
+fn simulate_train_json_is_reproducible_byte_for_byte() {
+    // Acceptance: the event-driven training report is deterministic,
+    // covers every topology, and the 128-GPU PCIe speedup lands in the
+    // paper's ~1.2x band.
+    let dir = tmp_dir("train");
+    let run = |name: &str| -> String {
+        let path = dir.join(name);
+        let out = flux_bin()
+            .args(["simulate", "--train", "--json", "--quick", "--out"])
+            .arg(&path)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&path).unwrap()
+    };
+    let a = run("BENCH_train_a.json");
+    let b = run("BENCH_train_b.json");
+    assert_eq!(a, b, "simulate --train --json must be deterministic");
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::TRAIN_SCHEMA
+    );
+    let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+    assert_eq!(topos.len(), 3, "all three paper clusters");
+    for t in topos {
+        let name = t.get("topology").unwrap().as_str().unwrap();
+        let speedup = t.get("speedup").unwrap().as_f64().unwrap();
+        assert!(speedup >= 1.0, "{name}: flux slower ({speedup})");
+        if name.contains("pcie") {
+            assert!(
+                speedup > 1.10 && speedup < 1.60,
+                "{name}: PCIe speedup {speedup} outside the Fig. 16 band"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulate_train_prints_a_table_and_filters_topologies() {
+    let out = flux_bin()
+        .args(["simulate", "--train", "--quick", "--topo",
+               "nvlink-dp2-pp8-tp8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("training at scale"), "got: {text}");
+    assert!(text.contains("nvlink dp2 pp8 tp8"), "got: {text}");
+    assert!(!text.contains("pcie"), "filtered out: {text}");
+
+    let out = flux_bin()
+        .args(["simulate", "--train", "--topo", "warp-drive"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown topology"));
+
+    // Op-level flags are rejected, and so is mixing the two sweeps.
+    let out = flux_bin()
+        .args(["simulate", "--train", "--m", "512"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("not supported"));
+
+    let out = flux_bin()
+        .args(["simulate", "--train", "--scale"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("pick one"));
+}
+
+#[test]
 fn simulate_subcommand_prints_a_comparison() {
     let out = flux_bin()
         .args(["simulate", "--m", "512", "--tp", "4", "--op", "rs"])

@@ -1,0 +1,121 @@
+//! Property tests for the DES/overlap core, driven by the in-house
+//! seeded generator combinators (`util::propcheck`): every failure
+//! message carries the reproducing seed and the exact generated input.
+
+use flux::overlap::tiles::tile_dest;
+use flux::sim::engine::EventQueue;
+use flux::util::propcheck::{
+    f64_in, forall_gen, map, one_of, usize_in, vec_of, zip,
+};
+use flux::util::stats::Summary;
+
+/// Event times mixing a coarse lattice (forced exact ties) with
+/// continuous draws (forced near-misses).
+fn event_times() -> impl Fn(&mut flux::util::prng::Rng) -> Vec<f64> {
+    vec_of(
+        usize_in(1, 60),
+        map(
+            zip(one_of(vec![true, false]), f64_in(0.0, 100.0)),
+            |(lattice, x)| if lattice { (x / 10.0).floor() * 10.0 } else { x },
+        ),
+    )
+}
+
+#[test]
+fn random_schedules_drain_in_time_then_fifo_order() {
+    // The DES total-order contract: popping sorts by time, and events
+    // with numerically equal times come out in insertion order.
+    forall_gen(128, 0xDE5_0001, event_times(), |times| {
+        let mut q = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule(t, i);
+        }
+        let drained: Vec<(f64, usize)> =
+            std::iter::from_fn(|| q.next()).collect();
+        assert_eq!(drained.len(), times.len(), "no event lost");
+        for w in drained.windows(2) {
+            let ((t0, i0), (t1, i1)) = (w[0], w[1]);
+            assert!(t0 <= t1, "time order violated: {t0} > {t1}");
+            if t0 == t1 {
+                assert!(i0 < i1, "FIFO violated at t={t0}: {i0} vs {i1}");
+            }
+        }
+        let mut seen: Vec<usize> =
+            drained.iter().map(|&(_, i)| i).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..times.len()).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn interleaved_schedule_and_pop_never_rewinds_the_clock() {
+    // Open-loop usage: scheduling relative to a moving `now` (as the
+    // serving/training sims do) keeps the popped sequence monotone.
+    let gen = vec_of(usize_in(1, 80), zip(one_of(vec![true, false]),
+                                          f64_in(0.0, 25.0)));
+    forall_gen(128, 0xDE5_0002, gen, |ops| {
+        let mut q = EventQueue::new();
+        let mut popped = Vec::new();
+        for &(push, delay) in ops {
+            if push {
+                q.schedule_in(delay, ());
+            } else if let Some((t, ())) = q.next() {
+                popped.push(t);
+            }
+        }
+        while let Some((t, ())) = q.next() {
+            popped.push(t);
+        }
+        for w in popped.windows(2) {
+            assert!(w[0] <= w[1], "clock rewound: {} after {}", w[1], w[0]);
+        }
+    });
+}
+
+#[test]
+fn tile_dest_is_a_balanced_bijection_onto_ranks() {
+    // For every valid (tiles, ranks) shape: the row-tile -> rank map
+    // covers every rank exactly tiles/ranks times, is monotone in the
+    // tile index (block routing), and block starts map bijectively
+    // onto 0..n_tp.
+    let gen = zip(usize_in(1, 13), usize_in(1, 9));
+    forall_gen(256, 0xDE5_0003, gen, |&(n_tp, per)| {
+        let tiles_m = n_tp * per;
+        let dests: Vec<usize> =
+            (0..tiles_m).map(|t| tile_dest(t, tiles_m, n_tp)).collect();
+        let mut counts = vec![0usize; n_tp];
+        for &d in &dests {
+            assert!(d < n_tp, "dest {d} out of range");
+            counts[d] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c == per),
+            "unbalanced routing: {counts:?}"
+        );
+        assert!(dests.windows(2).all(|w| w[0] <= w[1]), "non-monotone");
+        let block_starts: Vec<usize> =
+            (0..n_tp).map(|r| dests[r * per]).collect();
+        assert_eq!(
+            block_starts,
+            (0..n_tp).collect::<Vec<_>>(),
+            "block starts must enumerate the ranks in order"
+        );
+    });
+}
+
+#[test]
+fn summary_percentiles_are_monotone_on_random_samples() {
+    // min <= p50 <= p95 <= p99 <= max on any non-empty finite sample,
+    // mean inside [min, max], std never negative.
+    let gen = vec_of(usize_in(1, 100), f64_in(-1.0e9, 1.0e9));
+    forall_gen(256, 0xDE5_0004, gen, |xs| {
+        let s = Summary::of(xs);
+        assert!(s.min <= s.p50, "min {} > p50 {}", s.min, s.p50);
+        assert!(s.p50 <= s.p95, "p50 {} > p95 {}", s.p50, s.p95);
+        assert!(s.p95 <= s.p99, "p95 {} > p99 {}", s.p95, s.p99);
+        assert!(s.p99 <= s.max, "p99 {} > max {}", s.p99, s.max);
+        assert!(s.mean >= s.min && s.mean <= s.max, "mean {}", s.mean);
+        assert!(s.std >= 0.0);
+        assert_eq!(s.n, xs.len());
+    });
+}
