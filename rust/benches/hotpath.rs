@@ -52,6 +52,7 @@ fn main() {
             max_decode_batch: 8,
             max_prompt: 64,
             max_seq: 128,
+            ..Default::default()
             });
         let mut kv = KvCacheManager::new(1024, 16);
         for i in 0..64u64 {

@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
         max_decode_batch: eng.b,
         max_prompt: eng.s,
         max_seq: eng.smax,
+        ..Default::default()
     });
     let mut kv = KvCacheManager::new(96, 16);
     for i in 0..n_requests as u64 {

@@ -321,6 +321,46 @@ pub fn fig16_des() -> Table {
      rows)
 }
 
+/// Workload sweep (condensed): every workload preset on the two most
+/// contrast-rich serving topologies — the A100 NVLink single replica
+/// and the H800 DP4 cluster. The full preset x topology matrix is
+/// `flux sweep-workloads`; this table is the figure-sized cut showing
+/// where the Flux-vs-decoupled gap diverges: burst backlog widens it
+/// (bursty- vs steady-decode on H800), closed-loop think pauses
+/// compress it (closed- vs open-prefill), and prefill-heavy mixes gain
+/// the most everywhere.
+pub fn fig18_workloads() -> Table {
+    use crate::cost::arch::{SCALE_H800_TP8_DP4, SCALE_TP8};
+    use crate::serving::scale::{compare_scale, ScaleScenario};
+    use crate::workload::all_presets;
+    let mut rows = Vec::new();
+    for wl in all_presets(true) {
+        for topo in [&SCALE_TP8, &SCALE_H800_TP8_DP4] {
+            let sc = ScaleScenario::with_workload(topo, wl.clone());
+            let cmp = compare_scale(&sc).expect("preset simulates");
+            let goodput = |r: &crate::serving::scale::ScaleReport| {
+                r.slo
+                    .map(|s| pct(s.goodput()))
+                    .unwrap_or_else(|| "-".to_string())
+            };
+            rows.push(vec![
+                wl.name.clone(),
+                topo.name.to_string(),
+                ms(cmp.flux.ttft.p99),
+                format!("{:.1}", cmp.flux.tokens_per_sec),
+                goodput(&cmp.flux),
+                goodput(&cmp.decoupled),
+                sp(cmp.speedup()),
+                sp(cmp.latency_speedup()),
+            ]);
+        }
+    }
+    ("Fig 18: workload sweep (presets on TP8 NVLink / H800 DP4)",
+     vec!["workload", "topology", "ttft p99 ms", "flux tok/s",
+          "flux goodput", "dec goodput", "speedup", "lat speedup"],
+     rows)
+}
+
 /// Fig. 17: decoding, batch 64 / 512.
 pub fn fig17() -> Table {
     let mut rows = Vec::new();
@@ -408,6 +448,7 @@ pub fn all() -> Vec<Table> {
         fig16(),
         fig16_des(),
         fig17(),
+        fig18_workloads(),
     ]
 }
 

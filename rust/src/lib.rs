@@ -30,3 +30,4 @@ pub mod sim;
 pub mod training;
 pub mod tuner;
 pub mod util;
+pub mod workload;

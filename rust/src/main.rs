@@ -6,11 +6,15 @@
 //!   tune         auto-tune one problem and print the winning config
 //!   train        model-level training step comparison
 //!   serve        run the REAL tiny TP transformer on PJRT via the batcher
+//!   sweep-workloads  workload preset x topology serving matrix
 //!   gen-goldens  emit artifacts/golden_swizzle.json hermetically (no JAX)
 //!   bench        run the pinned-seed suite; --json writes BENCH_<n>.json
 //!
 //! Examples:
 //!   flux simulate --cluster "a100 nvlink" --op rs --m 4096
+//!   flux simulate --scale --workload bursty-decode --quick
+//!   flux simulate --scale --topo "1-node tp8" --trace trace.json
+//!   flux sweep-workloads --quick --json
 //!   flux tune --cluster "a100 pcie" --op ag --m 8192
 //!   flux serve --requests 6 --gen 8
 //!   flux gen-goldens
@@ -43,18 +47,22 @@ COMMANDS:
                    [--cluster <name>] [--op ag|rs] [--m <rows>]
                    [--tp <degree>] [--seed <n>]
                  --scale: multi-node TP x DP serving-at-scale sweep
-                   (Poisson arrivals, per-replica continuous batching,
+                   (seeded arrivals, per-replica continuous batching,
                    flux vs decoupled per topology); [--topo <name>]
                    restricts to one topology, [--quick] trims the
-                   workload, [--json] writes the byte-stable
-                   flux-scale-v1 report ([--out <path>], default
+                   workload, [--workload <preset|file.json>] swaps
+                   the request source (arrival process, length mix,
+                   routing, SLOs), [--trace <path>] (with --topo)
+                   dumps the DES event stream as chrome://tracing
+                   JSON, [--json] writes the byte-stable
+                   flux-scale-v2 report ([--out <path>], default
                    BENCH_<n>.json)
                  --train: event-driven DP x PP x TP training sweep
                    (1F1B microbatch schedule on the DES, PP hops on
                    NIC links, DP all-reduce streamed behind backward;
                    megatron vs TE vs flux per topology); same
-                   [--topo] [--quick] [--json] [--out] flags, report
-                   schema flux-train-v1
+                   [--topo] [--quick] [--json] [--out] [--trace]
+                   flags, report schema flux-train-v1
     tune         auto-tune one problem, print the winning config
                    (same flags as simulate)
     train        model-level training-step comparison
@@ -63,6 +71,12 @@ COMMANDS:
     serve        run the real tiny TP transformer on PJRT
                    [--requests <n>] [--gen <tokens>]
                    (needs `make artifacts` + the real xla bindings)
+    sweep-workloads  run every workload preset (poisson-balanced,
+                   steady/bursty-decode, open/closed-prefill,
+                   diurnal-chat, long-context) on every serving
+                   topology, flux vs decoupled; [--quick] trims
+                   request counts, [--json] writes the byte-stable
+                   flux-sweep-v1 report ([--out <path>])
     gen-goldens  emit the cross-language golden file from the Rust tile
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
@@ -118,6 +132,10 @@ fn main() -> Result<()> {
             )?)
         }
         "simulate" => cmd_simulate(&Args::parse(rest(), &["verbose"])?),
+        "sweep-workloads" => cmd_sweep_workloads(&Args::parse(
+            rest(),
+            &["json", "quick"],
+        )?),
         "tune" => cmd_tune(&Args::parse(rest(), &["verbose"])?),
         "train" => cmd_train(&Args::parse(rest(), &["verbose"])?),
         "serve" => cmd_serve(&Args::parse(rest(), &["verbose"])?),
@@ -126,8 +144,9 @@ fn main() -> Result<()> {
             cmd_bench(&Args::parse(rest(), &["json", "quick", "wall"])?)
         }
         other => bail!(
-            "unknown command {other:?}; try figures|simulate|tune|train|\
-             serve|gen-goldens|bench (or --help)"
+            "unknown command {other:?}; try figures|simulate|\
+             sweep-workloads|tune|train|serve|gen-goldens|bench \
+             (or --help)"
         ),
     }
 }
@@ -236,19 +255,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 /// `flux simulate --scale`: the multi-node TP x DP serving sweep over
-/// every `ScaleTopology` (or one, with `--topo`), flux vs decoupled.
+/// every `ScaleTopology` (or one, with `--topo`), flux vs decoupled,
+/// with the request source swappable via `--workload`.
 fn cmd_simulate_scale(args: &Args) -> Result<()> {
     use flux::cost::arch::{ScaleTopology, ALL_SCALE_TOPOLOGIES};
     // The sweep is pinned (fixed seeds per topology) so the report
     // stays byte-stable: reject the op-level flags instead of silently
     // ignoring them.
-    if let Some(k) = args
-        .flags
-        .keys()
-        .find(|k| !matches!(k.as_str(), "out" | "topo"))
-    {
+    if let Some(k) = args.flags.keys().find(|k| {
+        !matches!(k.as_str(), "out" | "topo" | "workload" | "trace")
+    }) {
         bail!("--{k} is not supported with --scale (only --topo, \
-               --quick, --json, --out)");
+               --workload, --trace, --quick, --json, --out)");
     }
     let only = match args.get("topo") {
         Some(name) => Some(ScaleTopology::by_name(name).ok_or_else(|| {
@@ -264,16 +282,81 @@ fn cmd_simulate_scale(args: &Args) -> Result<()> {
         None => None,
     };
     let quick = args.has("quick");
+    // A trace of the whole sweep would interleave topologies into one
+    // meaningless timeline; require the single-topology form up front.
+    if args.get("trace").is_some() && only.is_none() {
+        bail!("--trace needs --topo <name>: a trace is one \
+               topology's event stream");
+    }
+    let workload = match args.get("workload") {
+        Some(arg) => {
+            Some(flux::workload::WorkloadSpec::resolve(arg, quick)?)
+        }
+        None => None,
+    };
     // `--out` implies a JSON file report, mirroring `flux bench`.
     let json = args.has("json") || args.get("out").is_some();
     if json {
         let out = args.get("out").map(std::path::Path::new);
-        let path = flux::report::write_scale(quick, only, out)?;
+        let path = flux::report::write_scale(
+            quick,
+            only,
+            workload.as_ref(),
+            out,
+        )?;
         println!("wrote scale report to {}", path.display());
     } else {
-        flux::report::print_scale(&flux::report::scale_doc_for(
-            quick, only,
+        flux::report::print_scale(&flux::report::scale_doc_with(
+            quick,
+            only,
+            workload.as_ref(),
         )?)?;
+    }
+    if let Some(trace_path) = args.get("trace") {
+        // Deliberately re-simulates the (seed-deterministic, quick)
+        // comparison rather than threading a Trace through the report
+        // emitters: the trace is identical either way and the report
+        // path stays untangled from tracing.
+        let topo = only.expect("checked above");
+        let wl = match &workload {
+            Some(wl) => wl.clone(),
+            None => flux::workload::preset("poisson-balanced", quick)
+                .expect("default preset exists"),
+        };
+        let sc = flux::serving::scale::ScaleScenario::with_workload(
+            topo, wl,
+        );
+        let mut trace = flux::sim::trace::Trace::new();
+        flux::serving::scale::compare_scale_traced(&sc, &mut trace)?;
+        let path = std::path::Path::new(trace_path);
+        trace.write(path)?;
+        println!(
+            "wrote chrome trace ({} events) to {trace_path}",
+            trace.len()
+        );
+    }
+    Ok(())
+}
+
+/// `flux sweep-workloads`: every workload preset on every serving
+/// topology, flux vs decoupled (`flux-sweep-v1`).
+fn cmd_sweep_workloads(args: &Args) -> Result<()> {
+    if let Some(k) =
+        args.flags.keys().find(|k| !matches!(k.as_str(), "out"))
+    {
+        bail!(
+            "--{k} is not a sweep-workloads flag (only --quick, \
+             --json, --out)"
+        );
+    }
+    let quick = args.has("quick");
+    let json = args.has("json") || args.get("out").is_some();
+    if json {
+        let out = args.get("out").map(std::path::Path::new);
+        let path = flux::report::write_sweep(quick, out)?;
+        println!("wrote workload sweep report to {}", path.display());
+    } else {
+        flux::report::print_sweep(&flux::report::sweep_doc(quick)?)?;
     }
     Ok(())
 }
@@ -286,10 +369,10 @@ fn cmd_simulate_train(args: &Args) -> Result<()> {
     if let Some(k) = args
         .flags
         .keys()
-        .find(|k| !matches!(k.as_str(), "out" | "topo"))
+        .find(|k| !matches!(k.as_str(), "out" | "topo" | "trace"))
     {
         bail!("--{k} is not supported with --train (only --topo, \
-               --quick, --json, --out)");
+               --trace, --quick, --json, --out)");
     }
     let only = match args.get("topo") {
         Some(name) => Some(TrainTopology::by_name(name).ok_or_else(|| {
@@ -305,6 +388,10 @@ fn cmd_simulate_train(args: &Args) -> Result<()> {
         None => None,
     };
     let quick = args.has("quick");
+    if args.get("trace").is_some() && only.is_none() {
+        bail!("--trace needs --topo <name>: a trace is one \
+               topology's event stream");
+    }
     // `--out` implies a JSON file report, mirroring `flux bench`.
     let json = args.has("json") || args.get("out").is_some();
     if json {
@@ -315,6 +402,22 @@ fn cmd_simulate_train(args: &Args) -> Result<()> {
         flux::report::print_train(&flux::report::train_doc_for(
             quick, only,
         )?)?;
+    }
+    if let Some(trace_path) = args.get("trace") {
+        let topo = only.expect("checked above");
+        let sc = if quick {
+            flux::training::TrainScenario::quick(topo)
+        } else {
+            flux::training::TrainScenario::full(topo)
+        };
+        let mut trace = flux::sim::trace::Trace::new();
+        flux::training::compare_train_traced(&sc, &mut trace)?;
+        let path = std::path::Path::new(trace_path);
+        trace.write(path)?;
+        println!(
+            "wrote chrome trace ({} events) to {trace_path}",
+            trace.len()
+        );
     }
     Ok(())
 }
@@ -382,6 +485,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_decode_batch: eng.b,
         max_prompt: eng.s,
         max_seq: eng.smax,
+        ..Default::default()
     });
     let mut kv = KvCacheManager::new(64, 16);
     for i in 0..n_requests as u64 {

@@ -39,10 +39,19 @@ use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Summary};
 
 pub const SCHEMA: &str = "flux-bench-v1";
-/// Schema of the `flux simulate --scale --json` report.
-pub const SCALE_SCHEMA: &str = "flux-scale-v1";
+/// Schema of the `flux simulate --scale --json` report. v2 folds in
+/// the workload subsystem: a `workload` spec object per topology and
+/// per-method `slo` goodput/abandonment accounting. Every v1 field is
+/// preserved with identical values for the default Poisson workload
+/// (the coordinator replays PR-2's PRNG draw sequence bit-for-bit;
+/// `prompt`/`gen`/`arrival_mean_ns` remain emitted for fixed-mix
+/// Poisson workloads).
+pub const SCALE_SCHEMA: &str = "flux-scale-v2";
 /// Schema of the `flux simulate --train --json` report.
 pub const TRAIN_SCHEMA: &str = "flux-train-v1";
+/// Schema of the `flux sweep-workloads --json` report: the workload
+/// preset x topology matrix, flux vs decoupled.
+pub const SWEEP_SCHEMA: &str = "flux-sweep-v1";
 
 /// Pinned seeds for the simulated suite (full / quick).
 const SEEDS_FULL: [u64; 5] = [7, 11, 13, 17, 23];
@@ -156,7 +165,7 @@ fn latency_percentiles(s: &Summary) -> Json {
 }
 
 fn scale_method_json(r: &ScaleReport) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("completed", Json::from(r.completed)),
         ("tokens", Json::from(r.tokens)),
         ("makespan_ns", Json::from(r.makespan_ns)),
@@ -165,7 +174,11 @@ fn scale_method_json(r: &ScaleReport) -> Json {
         ("ttft_ns", latency_percentiles(&r.ttft)),
         ("per_token_ns", latency_percentiles(&r.per_token)),
         ("latency_ns", latency_percentiles(&r.latency)),
-    ])
+    ];
+    if let Some(slo) = &r.slo {
+        fields.push(("slo", slo.to_json()));
+    }
+    obj(fields)
 }
 
 /// The serving-at-scale document (`flux simulate --scale --json`):
@@ -182,33 +195,65 @@ pub fn scale_doc_for(
     quick: bool,
     only: Option<&'static crate::cost::arch::ScaleTopology>,
 ) -> Result<Json> {
+    scale_doc_with(quick, only, None)
+}
+
+/// One topology's entry of the scale/sweep documents: legacy v1
+/// fields (`prompt`/`gen` for fixed mixes, `arrival_mean_ns` for
+/// Poisson arrivals, cluster-level), the workload spec, and both
+/// methods' metrics.
+fn scale_entry(sc: &ScaleScenario) -> Result<Json> {
+    use crate::workload::ArrivalSpec;
+    let topo = sc.topo;
+    let cmp = compare_scale(sc)?;
+    let mut fields = vec![
+        ("topology", Json::from(topo.name)),
+        ("cluster", Json::from(topo.cluster.name)),
+        ("nodes", Json::from(topo.nodes)),
+        ("tp", Json::from(topo.tp)),
+        ("dp", Json::from(topo.dp)),
+        ("requests", Json::from(sc.n_requests())),
+    ];
+    if let Some(c) = sc.workload.mix.fixed() {
+        fields.push(("prompt", Json::from(c.prompt)));
+        fields.push(("gen", Json::from(c.gen)));
+    }
+    if let ArrivalSpec::Poisson { mean_ns } = sc.workload.arrival {
+        fields.push((
+            "arrival_mean_ns",
+            Json::from(mean_ns / topo.dp as f64),
+        ));
+    }
+    fields.push(("seed", Json::from(sc.seed as usize)));
+    fields.push(("workload", sc.workload.to_json()));
+    fields.push(("decoupled", scale_method_json(&cmp.decoupled)));
+    fields.push(("flux", scale_method_json(&cmp.flux)));
+    fields.push(("speedup", Json::from(cmp.speedup())));
+    fields.push(("latency_speedup", Json::from(cmp.latency_speedup())));
+    if let Some(delta) = cmp.goodput_delta() {
+        fields.push(("goodput_delta", Json::from(delta)));
+    }
+    Ok(obj(fields))
+}
+
+/// Like [`scale_doc_for`], with the request source swapped for a
+/// custom workload (`flux simulate --scale --workload <preset|file>`).
+pub fn scale_doc_with(
+    quick: bool,
+    only: Option<&'static crate::cost::arch::ScaleTopology>,
+    workload: Option<&crate::workload::WorkloadSpec>,
+) -> Result<Json> {
     let mut topologies = Vec::new();
     for topo in ALL_SCALE_TOPOLOGIES {
         if only.is_some_and(|o| o.name != topo.name) {
             continue;
         }
-        let sc = if quick {
-            ScaleScenario::quick(topo)
-        } else {
-            ScaleScenario::full(topo)
+        let sc = match workload {
+            Some(wl) => ScaleScenario::with_workload(topo, wl.clone()),
+            None if quick => ScaleScenario::quick(topo),
+            None => ScaleScenario::full(topo),
         };
-        let cmp = compare_scale(&sc)?;
-        topologies.push(obj(vec![
-            ("topology", Json::from(topo.name)),
-            ("cluster", Json::from(topo.cluster.name)),
-            ("nodes", Json::from(topo.nodes)),
-            ("tp", Json::from(topo.tp)),
-            ("dp", Json::from(topo.dp)),
-            ("requests", Json::from(sc.n_requests)),
-            ("prompt", Json::from(sc.prompt_len)),
-            ("gen", Json::from(sc.gen_len)),
-            ("arrival_mean_ns", Json::from(sc.arrival_mean_ns)),
-            ("seed", Json::from(sc.seed as usize)),
-            ("decoupled", scale_method_json(&cmp.decoupled)),
-            ("flux", scale_method_json(&cmp.flux)),
-            ("speedup", Json::from(cmp.speedup())),
-            ("latency_speedup", Json::from(cmp.latency_speedup())),
-        ]));
+        topologies.push(scale_entry(&sc)?);
     }
     let mut top = vec![
         ("schema", Json::from(SCALE_SCHEMA)),
@@ -221,6 +266,10 @@ pub fn scale_doc_for(
         // the trajectory diffing contract compares like with like.
         top.push(("topo_filter", Json::from(o.name)));
     }
+    if let Some(wl) = workload {
+        // Same contract for a swapped request source.
+        top.push(("workload_filter", Json::from(wl.name.as_str())));
+    }
     Ok(obj(top))
 }
 
@@ -230,9 +279,10 @@ pub fn scale_doc_for(
 pub fn write_scale(
     quick: bool,
     only: Option<&'static crate::cost::arch::ScaleTopology>,
+    workload: Option<&crate::workload::WorkloadSpec>,
     out: Option<&Path>,
 ) -> Result<PathBuf> {
-    write_doc(&scale_doc_for(quick, only)?, out)
+    write_doc(&scale_doc_with(quick, only, workload)?, out)
 }
 
 /// Human-readable rendering of the scale document.
@@ -272,6 +322,95 @@ pub fn print_scale(doc: &Json) -> Result<()> {
             "dec tok/s",
             "flux eff",
             "speedup",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+/// The workload-sweep document (`flux sweep-workloads --json`): every
+/// built-in preset ([`crate::workload::all_presets`]) on every
+/// [`ALL_SCALE_TOPOLOGIES`] entry, flux vs decoupled — the matrix that
+/// shows where the speedup and goodput gaps diverge (burst backlog
+/// widens them, closed-loop think pauses compress them, the H800
+/// narrow-store cliff turns decode-heavy cells against Flux).
+/// Deterministic for a given `quick`, same byte-stability contract as
+/// [`bench_doc`].
+pub fn sweep_doc(quick: bool) -> Result<Json> {
+    let mut presets = Vec::new();
+    for wl in crate::workload::all_presets(quick) {
+        let mut topologies = Vec::new();
+        for topo in ALL_SCALE_TOPOLOGIES {
+            let sc = ScaleScenario::with_workload(topo, wl.clone());
+            topologies.push(scale_entry(&sc)?);
+        }
+        presets.push(obj(vec![
+            ("name", Json::from(wl.name.as_str())),
+            ("workload", wl.to_json()),
+            ("topologies", Json::Arr(topologies)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("schema", Json::from(SWEEP_SCHEMA)),
+        ("quick", Json::from(quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("presets", Json::Arr(presets)),
+    ]))
+}
+
+/// Write the sweep document; returns the path written (same
+/// `BENCH_<n>.json` trajectory policy as the other reports).
+pub fn write_sweep(quick: bool, out: Option<&Path>) -> Result<PathBuf> {
+    write_doc(&sweep_doc(quick)?, out)
+}
+
+/// Human-readable rendering of the sweep document.
+pub fn print_sweep(doc: &Json) -> Result<()> {
+    let mut rows = Vec::new();
+    for p in doc.get("presets")?.as_arr()? {
+        let name = p.get("name")?.as_str()?;
+        for e in p.get("topologies")?.as_arr()? {
+            let fx = e.get("flux")?;
+            let de = e.get("decoupled")?;
+            let goodput = |m: &Json| -> String {
+                match m.opt("slo") {
+                    Some(s) => s
+                        .get("goodput")
+                        .and_then(|g| g.as_f64())
+                        .map(|g| format!("{:.0}%", g * 100.0))
+                        .unwrap_or_else(|_| "-".to_string()),
+                    None => "-".to_string(),
+                }
+            };
+            rows.push(vec![
+                name.to_string(),
+                e.get("topology")?.as_str()?.to_string(),
+                format!(
+                    "{:.1}",
+                    fx.get("ttft_ns")?.get("p99_ns")?.as_f64()? / 1e6
+                ),
+                format!("{:.1}", fx.get("tokens_per_sec")?.as_f64()?),
+                goodput(fx),
+                goodput(de),
+                format!("{:.2}x", e.get("speedup")?.as_f64()?),
+                format!(
+                    "{:.2}x",
+                    e.get("latency_speedup")?.as_f64()?
+                ),
+            ]);
+        }
+    }
+    crate::util::bench::table(
+        "workload sweep (presets x topologies, flux vs decoupled)",
+        &[
+            "workload",
+            "topology",
+            "ttft p99 ms",
+            "flux tok/s",
+            "flux goodput",
+            "dec goodput",
+            "speedup",
+            "lat speedup",
         ],
         &rows,
     );
@@ -616,7 +755,8 @@ mod tests {
         for t in topos {
             for k in [
                 "topology", "cluster", "nodes", "tp", "dp", "requests",
-                "decoupled", "flux", "speedup",
+                "prompt", "gen", "arrival_mean_ns", "workload",
+                "decoupled", "flux", "speedup", "goodput_delta",
             ] {
                 assert!(t.opt(k).is_some(), "missing key {k}");
             }
@@ -629,7 +769,97 @@ mod tests {
             assert!(
                 fx.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0
             );
+            // v2: the default preset defines SLOs, so both methods
+            // carry goodput accounting.
+            let slo = fx.get("slo").unwrap();
+            let g = slo.get("goodput").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&g), "goodput {g}");
+            // The workload spec round-trips from the report itself.
+            let wl = crate::workload::WorkloadSpec::from_json(
+                t.get("workload").unwrap(),
+            )
+            .unwrap();
+            assert_eq!(wl.name, "poisson-balanced");
         }
+    }
+
+    #[test]
+    fn sweep_doc_is_byte_stable_and_covers_the_matrix() {
+        let a = sweep_doc(true).unwrap().to_string();
+        let b = sweep_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "sweep doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            SWEEP_SCHEMA
+        );
+        let presets = doc.get("presets").unwrap().as_arr().unwrap();
+        assert_eq!(presets.len(), crate::workload::PRESET_NAMES.len());
+        for (p, name) in
+            presets.iter().zip(crate::workload::PRESET_NAMES)
+        {
+            assert_eq!(p.get("name").unwrap().as_str().unwrap(), name);
+            let topos = p.get("topologies").unwrap().as_arr().unwrap();
+            assert_eq!(topos.len(), ALL_SCALE_TOPOLOGIES.len());
+            for t in topos {
+                let speedup =
+                    t.get("speedup").unwrap().as_f64().unwrap();
+                let nvlink = t
+                    .get("cluster")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .contains("NVLink");
+                // The acceptance bar: flux >= decoupled end to end on
+                // every NVLink topology, for every preset.
+                if nvlink {
+                    assert!(
+                        speedup >= 1.0,
+                        "{name} on {}: speedup {speedup}",
+                        t.get("topology").unwrap().as_str().unwrap()
+                    );
+                }
+                // Goodput: flux meets at least as many SLOs as the
+                // decoupled execution, everywhere.
+                let goodput = |m: &Json| {
+                    m.get("slo")
+                        .unwrap()
+                        .get("goodput")
+                        .unwrap()
+                        .as_f64()
+                        .unwrap()
+                };
+                let gfx = goodput(t.get("flux").unwrap());
+                let gde = goodput(t.get("decoupled").unwrap());
+                assert!(
+                    gfx >= gde,
+                    "{name} on {}: flux goodput {gfx} < decoupled {gde}",
+                    t.get("topology").unwrap().as_str().unwrap()
+                );
+            }
+        }
+        // The human rendering consumes the same document (checked here
+        // rather than in its own test to avoid a third full sweep).
+        print_sweep(&doc).unwrap();
+    }
+
+    #[test]
+    fn scale_doc_with_workload_marks_the_document() {
+        let wl =
+            crate::workload::preset("bursty-decode", true).unwrap();
+        use crate::cost::arch::SCALE_TP8;
+        let doc =
+            scale_doc_with(true, Some(&SCALE_TP8), Some(&wl)).unwrap();
+        assert_eq!(
+            doc.get("workload_filter").unwrap().as_str().unwrap(),
+            "bursty-decode"
+        );
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), 1);
+        // Two-point mix + MMPP arrivals: no fixed prompt/gen, no
+        // Poisson mean — the v1 compat fields are honestly absent.
+        assert!(topos[0].opt("prompt").is_none());
+        assert!(topos[0].opt("arrival_mean_ns").is_none());
     }
 
     #[test]

@@ -24,6 +24,12 @@ pub struct BatcherConfig {
     pub max_prompt: usize,
     /// Cap on total sequence length.
     pub max_seq: usize,
+    /// Token budget per prefill batch (vLLM's max_num_batched_tokens):
+    /// admission stops before the summed prompt lengths exceed it,
+    /// except that a batch always takes at least one request. The
+    /// default never binds; variable-length workloads set it so one
+    /// long-context prompt does not drag a whole padded batch along.
+    pub max_prefill_tokens: usize,
 }
 
 impl Default for BatcherConfig {
@@ -33,6 +39,7 @@ impl Default for BatcherConfig {
             max_decode_batch: 4,
             max_prompt: 64,
             max_seq: 128,
+            max_prefill_tokens: usize::MAX,
         }
     }
 }
@@ -110,6 +117,12 @@ impl Batcher {
         self.queue.is_empty() && self.running.is_empty()
     }
 
+    /// Requests submitted but not yet finished (queued + running) —
+    /// the load signal least-outstanding routing balances on.
+    pub fn outstanding(&self) -> usize {
+        self.queue.len() + self.running.len()
+    }
+
     /// Pick the next work item. Prefill-priority: drain the admission
     /// queue whenever KV blocks allow; otherwise decode.
     ///
@@ -127,11 +140,17 @@ impl Batcher {
         // preemption path, reserving only the prompt would let admitted
         // sequences jointly over-commit the pool and OOM mid-decode.
         let mut batch = Vec::new();
+        let mut batch_tokens = 0usize;
         let mut admit_err = None;
         while batch.len() < self.cfg.max_prefill_batch {
             let Some(&id) = self.queue.front() else { break };
             let req = self.get(id);
             let len = req.prompt.len();
+            if !batch.is_empty()
+                && batch_tokens + len > self.cfg.max_prefill_tokens
+            {
+                break; // token budget: leave the rest for the next tick
+            }
             let budget =
                 (len + req.max_new_tokens).min(self.cfg.max_seq).max(len);
             if !kv.can_admit(budget) {
@@ -145,6 +164,7 @@ impl Batcher {
             self.get_mut(id).state = RequestState::Decoding;
             self.running.push(id);
             batch.push(id);
+            batch_tokens += len;
         }
         if let Some(e) = admit_err {
             // Roll back this tick's admissions (reverse order restores
@@ -309,6 +329,7 @@ mod tests {
             max_decode_batch: 4,
             max_prompt: 64,
             max_seq: 64,
+            ..Default::default()
         });
         let mut kv = KvCacheManager::new(4, 16);
         b.submit(req(0, 16, 48));
@@ -331,6 +352,55 @@ mod tests {
         assert_eq!(prefills, vec![vec![1]], "1 admits only after 0 frees");
         assert!(b.all_done());
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_token_budget_splits_batches() {
+        // Cap 100 tokens: a 60-token prompt and a 50-token prompt do
+        // not share a batch, but a lone over-budget prompt still runs
+        // (the batch always takes at least one request).
+        let mut b = Batcher::new(BatcherConfig {
+            max_prefill_batch: 4,
+            max_prompt: 256,
+            max_seq: 512,
+            max_prefill_tokens: 100,
+            ..Default::default()
+        });
+        let mut kv = KvCacheManager::new(256, 16);
+        b.submit(req(0, 60, 1));
+        b.submit(req(1, 50, 1));
+        b.submit(req(2, 200, 1)); // alone and over budget
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![0]));
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![1]));
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![2]));
+    }
+
+    #[test]
+    fn default_token_budget_never_binds() {
+        // The PR-2 compat contract: with the default (unbounded)
+        // budget, batching is governed by max_prefill_batch alone.
+        let (mut b, mut kv) = setup();
+        for i in 0..4 {
+            b.submit(req(i, 60, 1));
+        }
+        match b.next_work(&mut kv).unwrap() {
+            Work::Prefill(ids) => assert_eq!(ids.len(), 4),
+            w => panic!("expected full prefill, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn outstanding_counts_queued_plus_running() {
+        let (mut b, mut kv) = setup();
+        assert_eq!(b.outstanding(), 0);
+        b.submit(req(0, 8, 2));
+        b.submit(req(1, 8, 2));
+        assert_eq!(b.outstanding(), 2);
+        b.next_work(&mut kv).unwrap(); // both admitted to running
+        assert_eq!(b.outstanding(), 2);
+        b.complete_decode(&[0, 1], &[1, 1], &mut kv, 1.0).unwrap();
+        b.complete_decode(&[0, 1], &[1, 1], &mut kv, 2.0).unwrap();
+        assert_eq!(b.outstanding(), 0);
     }
 
     #[test]

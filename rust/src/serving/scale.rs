@@ -3,8 +3,10 @@
 //! Scales the single-TP-group serving simulation up to a whole cluster:
 //! `topo.dp` independent TP groups (replicas, Megatron-style TP within a
 //! node / replicas across nodes) are driven through ONE shared DES event
-//! queue ([`crate::sim::engine::EventQueue`]). Open-loop Poisson
-//! arrivals hit a round-robin router; each replica runs its own
+//! queue ([`crate::sim::engine::EventQueue`]). The request source is a
+//! declarative [`WorkloadSpec`] ([`crate::workload`]): an arrival
+//! process (Poisson / bursty MMPP / diurnal / closed-loop), a length
+//! mix, a routing policy and optional SLOs. Each replica runs its own
 //! prefill-priority continuous batcher ([`Batcher`]) against its own
 //! paged [`KvCacheManager`], and every scheduler step is timed by the
 //! chosen overlap strategy ([`Method`]): `Method::Flux` is the fused
@@ -12,17 +14,25 @@
 //! GEMM-then-NCCL execution the paper compares against (vLLM /
 //! Megatron-LM serving).
 //!
-//! The router is deliberately round-robin rather than least-loaded: the
-//! request→replica assignment is then identical for every `Method`, so a
-//! Flux-vs-decoupled comparison measures execution speed, never routing
-//! luck. Replicas never share links (`ScaleTopology::validate` pins TP
-//! inside a node), so the only coupling between them is the shared
-//! arrival process — which is what makes tail latency (p99 TTFT) a
-//! cluster-level, not replica-level, quantity.
+//! Routing: the default is round-robin — the request→replica assignment
+//! is then identical for every `Method`, so a Flux-vs-decoupled
+//! comparison measures execution speed, never routing luck.
+//! [`Routing::LeastOutstanding`] is the opt-in alternative for tail
+//! latency under bursty, skewed traffic; it reacts to queue state, so
+//! its assignment legitimately depends on the method being timed (both
+//! methods still run the same policy). Replicas never share links
+//! (`ScaleTopology::validate` pins TP inside a node), so the only
+//! coupling between them is the shared arrival process — which is what
+//! makes tail latency (p99 TTFT) a cluster-level, not replica-level,
+//! quantity.
 //!
-//! Everything is seeded and deterministic: the same
-//! [`ScaleScenario`] produces byte-identical reports across reruns,
-//! which is what lets CI diff the `flux simulate --scale --json` output.
+//! Everything is seeded and deterministic: the same [`ScaleScenario`]
+//! produces byte-identical reports across reruns, which is what lets CI
+//! diff the `flux simulate --scale --json` output. The default
+//! `poisson-balanced` workload replays the PR-2 coordinator's PRNG
+//! draw sequence exactly (one exponential per request, fixed lengths),
+//! so its timings are bit-identical to the pre-workload reports — the
+//! compat tests pin those f64s.
 
 use std::collections::BTreeMap;
 
@@ -39,42 +49,36 @@ use crate::serving::simulate::{
     decode_cache_len, decode_step_ns, prefill_ns,
 };
 use crate::sim::engine::EventQueue;
-use crate::util::prng::Rng;
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::workload::{Routing, SloReport, WorkloadSpec};
 
-/// One serving-at-scale experiment: a topology, a model and an open-loop
-/// workload.
-#[derive(Clone, Copy, Debug)]
+/// One serving-at-scale experiment: a topology, a model, an engine
+/// shape and a declarative workload.
+#[derive(Clone, Debug)]
 pub struct ScaleScenario {
     pub topo: &'static ScaleTopology,
     pub model: &'static TransformerConfig,
-    /// Total requests across the cluster (round-robined over replicas).
-    pub n_requests: usize,
-    /// Mean Poisson inter-arrival time for the whole cluster, ns.
-    pub arrival_mean_ns: f64,
-    pub prompt_len: usize,
-    pub gen_len: usize,
+    pub workload: WorkloadSpec,
     pub max_prefill_batch: usize,
     pub max_decode_batch: usize,
-    /// KV pool per replica, in sequences' worth of blocks (the decode
-    /// concurrency cap).
+    /// KV pool per replica, in worst-case sequences' worth of blocks
+    /// (the decode concurrency cap).
     pub kv_seqs: usize,
     pub seed: u64,
 }
 
 impl ScaleScenario {
-    /// CI-sized scenario: small request count, short generations.
-    pub fn quick(topo: &'static ScaleTopology) -> ScaleScenario {
+    /// The engine shape shared by every scenario (PR-2's values).
+    pub fn with_workload(
+        topo: &'static ScaleTopology,
+        workload: WorkloadSpec,
+    ) -> ScaleScenario {
         ScaleScenario {
             topo,
             model: &crate::model::configs::GPT3_175B,
-            n_requests: 8 * topo.dp,
-            // Saturating load: arrivals outpace one replica's service
-            // rate so queueing (and therefore the overlap speedup) is
-            // visible in the latency percentiles.
-            arrival_mean_ns: 20.0e6 / topo.dp as f64,
-            prompt_len: 512,
-            gen_len: 8,
+            workload,
             max_prefill_batch: 4,
             max_decode_batch: 8,
             kv_seqs: 16,
@@ -82,13 +86,29 @@ impl ScaleScenario {
         }
     }
 
+    /// CI-sized scenario: the default workload preset, quick variant
+    /// (saturating Poisson arrivals so queueing — and therefore the
+    /// overlap speedup — is visible in the latency percentiles).
+    pub fn quick(topo: &'static ScaleTopology) -> ScaleScenario {
+        ScaleScenario::with_workload(
+            topo,
+            crate::workload::preset("poisson-balanced", true)
+                .expect("default preset exists"),
+        )
+    }
+
     /// Paper-shaped scenario: more requests, longer generations.
     pub fn full(topo: &'static ScaleTopology) -> ScaleScenario {
-        ScaleScenario {
-            n_requests: 24 * topo.dp,
-            gen_len: 16,
-            ..ScaleScenario::quick(topo)
-        }
+        ScaleScenario::with_workload(
+            topo,
+            crate::workload::preset("poisson-balanced", false)
+                .expect("default preset exists"),
+        )
+    }
+
+    /// Total requests across the cluster.
+    pub fn n_requests(&self) -> usize {
+        self.workload.requests_per_replica * self.topo.dp
     }
 }
 
@@ -120,6 +140,8 @@ pub struct ScaleReport {
     /// Step-level overlap efficiency of this method at the prefill
     /// reference batch (Eq. 2 applied at the model level).
     pub overlap_eff: f64,
+    /// Goodput/abandonment accounting, when the workload defines SLOs.
+    pub slo: Option<SloReport>,
     pub replicas: Vec<ReplicaReport>,
 }
 
@@ -143,25 +165,27 @@ pub fn ideal_prefill_ns(
 
 /// Model-level overlap efficiency (Eq. 2): what fraction of the
 /// decoupled execution's exposed communication time the method hides,
-/// measured at the scenario's reference prefill batch.
+/// measured at the scenario's reference prefill batch (full prefill
+/// batch of the mix's longest prompt — for a fixed mix, exactly the
+/// pre-workload reference).
 pub fn scale_overlap_efficiency(sc: &ScaleScenario, method: Method) -> f64 {
+    let ref_seq = sc.workload.mix.max_prompt();
     let base = prefill_ns(
         sc.topo.cluster,
         sc.model,
         sc.max_prefill_batch,
-        sc.prompt_len,
+        ref_seq,
         sc.topo.tp,
         Method::NonOverlap,
         sc.seed,
     );
-    let ideal = ideal_prefill_ns(
-        sc.topo, sc.model, sc.max_prefill_batch, sc.prompt_len,
-    );
+    let ideal =
+        ideal_prefill_ns(sc.topo, sc.model, sc.max_prefill_batch, ref_seq);
     let t = prefill_ns(
         sc.topo.cluster,
         sc.model,
         sc.max_prefill_batch,
-        sc.prompt_len,
+        ref_seq,
         sc.topo.tp,
         method,
         sc.seed,
@@ -192,21 +216,49 @@ enum Ev {
 
 /// Run one (scenario, method) serving simulation to completion.
 pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
+    run_scale_traced(sc, method, None)
+}
+
+/// Like [`run_scale`], optionally recording the DES event stream into
+/// a chrome trace: `(trace, pid0)` — replica `r` becomes process
+/// `pid0 + r`, so method lanes stack side by side in one timeline.
+pub fn run_scale_traced(
+    sc: &ScaleScenario,
+    method: Method,
+    mut trace: Option<(&mut Trace, usize)>,
+) -> Result<ScaleReport> {
     sc.topo.validate()?;
-    ensure!(sc.n_requests > 0, "empty workload");
-    ensure!(sc.gen_len >= 1, "gen_len must be >= 1");
+    sc.workload.validate()?;
     let dp = sc.topo.dp;
+    let gw = sc.workload.generate(sc.seed, dp);
+    let n = gw.n_requests();
+    ensure!(n > 0, "empty workload");
+    let max_prompt = gw.max_prompt();
+    let max_total = gw.max_total();
     let block_tokens = 64;
-    let blocks_per_seq =
-        (sc.prompt_len + sc.gen_len).div_ceil(block_tokens) + 1;
+    let blocks_per_seq = max_total.div_ceil(block_tokens) + 1;
+    let max_prefill_tokens = sc
+        .workload
+        .max_prefill_tokens
+        .unwrap_or(max_prompt * sc.max_prefill_batch);
+
+    if let Some((tr, pid0)) = trace.as_mut() {
+        for r in 0..dp {
+            tr.process_name(
+                *pid0 + r,
+                &format!("{}/replica{r}", method.name()),
+            );
+        }
+    }
 
     let mut replicas: Vec<Replica> = (0..dp)
         .map(|_| Replica {
             batcher: Batcher::new(BatcherConfig {
                 max_prefill_batch: sc.max_prefill_batch,
                 max_decode_batch: sc.max_decode_batch,
-                max_prompt: sc.prompt_len,
-                max_seq: sc.prompt_len + sc.gen_len + 1,
+                max_prompt,
+                max_seq: max_total + 1,
+                max_prefill_tokens,
             }),
             kv: KvCacheManager::new(sc.kv_seqs * blocks_per_seq, block_tokens),
             in_flight: Vec::new(),
@@ -215,18 +267,20 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
         })
         .collect();
 
-    // Step-time cache: (replica-phase, batch) → ns. Identical across
-    // replicas (same spec/model/method/seed), so one cluster-wide map.
-    let mut step_cache: BTreeMap<(bool, usize), f64> = BTreeMap::new();
-    let avg_cache_len = decode_cache_len(sc.prompt_len, sc.gen_len);
-    let mut step_ns = |is_prefill: bool, batch: usize| -> f64 {
-        *step_cache.entry((is_prefill, batch)).or_insert_with(|| {
+    // Step-time cache: (phase, batch, padded-seq | mean-cache-len) →
+    // ns. Identical across replicas (same spec/model/method/seed), so
+    // one cluster-wide map. For a fixed mix the third key component is
+    // constant and the cached values equal the pre-workload ones.
+    let mut step_cache: BTreeMap<(bool, usize, usize), f64> =
+        BTreeMap::new();
+    let mut step_ns = |is_prefill: bool, batch: usize, len: usize| -> f64 {
+        *step_cache.entry((is_prefill, batch, len)).or_insert_with(|| {
             if is_prefill {
                 prefill_ns(
                     sc.topo.cluster,
                     sc.model,
                     batch,
-                    sc.prompt_len,
+                    len,
                     sc.topo.tp,
                     method,
                     sc.seed,
@@ -236,7 +290,7 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
                     sc.topo.cluster,
                     sc.model,
                     batch,
-                    avg_cache_len,
+                    len,
                     sc.topo.tp,
                     method,
                     sc.seed,
@@ -245,27 +299,61 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
         })
     };
 
-    // Open-loop Poisson arrivals, drawn up front so the arrival process
-    // is identical for every method under the same seed.
+    // Open-loop arrivals are pre-drawn (identical for every method
+    // under the same seed); the closed loop issues request `i` at
+    // completion time + its pre-drawn think gap, so arrival times
+    // legitimately depend on the execution being timed.
     let mut q = EventQueue::new();
-    let mut rng = Rng::new(sc.seed);
-    let mut t_arr = 0.0;
-    for i in 0..sc.n_requests {
-        t_arr += rng.exponential(sc.arrival_mean_ns);
-        q.schedule(t_arr, Ev::Arrive(i));
+    let mut issued = 0usize;
+    if gw.is_closed_loop() {
+        let users = (gw.concurrency * dp).min(n);
+        for i in 0..users {
+            q.schedule(gw.think_gaps[i], Ev::Arrive(i));
+        }
+        issued = users;
+    } else {
+        for (i, &at) in gw.arrivals.iter().enumerate() {
+            q.schedule(at, Ev::Arrive(i));
+        }
+        issued = n;
     }
+
+    // Round-robin position (arrival order, which for open-loop equals
+    // request-index order — the PR-2 assignment).
+    let mut rr_next = 0usize;
 
     while let Some((now, ev)) = q.next() {
         let r = match ev {
             Ev::Arrive(i) => {
-                // Round-robin router: method-independent assignment.
-                let r = i % dp;
-                let rep = &mut replicas[r];
-                rep.batcher.submit(Request::new(
+                let r = match sc.workload.routing {
+                    Routing::RoundRobin => {
+                        let r = rr_next % dp;
+                        rr_next += 1;
+                        r
+                    }
+                    // Fewest outstanding wins; ties to the lowest
+                    // index for determinism.
+                    Routing::LeastOutstanding => (0..dp)
+                        .min_by_key(|&j| {
+                            (replicas[j].batcher.outstanding(), j)
+                        })
+                        .expect("dp >= 1"),
+                };
+                let len = gw.lengths[i];
+                if let Some((tr, pid0)) = trace.as_mut() {
+                    tr.instant(
+                        *pid0 + r,
+                        0,
+                        "arrive",
+                        now,
+                        vec![("req", Json::from(i))],
+                    );
+                }
+                replicas[r].batcher.submit(Request::new(
                     i as u64,
                     now,
-                    vec![1; sc.prompt_len],
-                    sc.gen_len,
+                    vec![1; len.prompt],
+                    len.gen,
                 ));
                 r
             }
@@ -279,37 +367,83 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
                     }
                 }
                 let toks = vec![0i32; ids.len()];
-                rep.batcher
+                let finished = rep
+                    .batcher
                     .complete_decode(&ids, &toks, &mut rep.kv, now)
                     .with_context(|| format!("replica {r} step at {now}"))?;
+                // Closed loop: each completion frees a user, who
+                // thinks, then issues the next request.
+                if gw.is_closed_loop() {
+                    for _ in &finished {
+                        if issued < n {
+                            q.schedule(
+                                now + gw.think_gaps[issued],
+                                Ev::Arrive(issued),
+                            );
+                            issued += 1;
+                        }
+                    }
+                }
                 r
             }
         };
         // Try to start the next step on the touched replica.
         let rep = &mut replicas[r];
         if rep.in_flight.is_empty() {
-            match rep.batcher.next_work(&mut rep.kv)? {
-                Work::Prefill(ids) => {
-                    let t = step_ns(true, ids.len());
-                    rep.in_flight = ids;
-                    rep.in_flight_is_prefill = true;
-                    rep.busy_ns += t;
-                    q.schedule(now + t, Ev::StepDone(r));
-                }
-                Work::Decode(ids) => {
-                    let t = step_ns(false, ids.len());
-                    rep.in_flight = ids;
-                    rep.in_flight_is_prefill = false;
-                    rep.busy_ns += t;
-                    q.schedule(now + t, Ev::StepDone(r));
-                }
-                Work::Idle => {}
+            let work = rep.batcher.next_work(&mut rep.kv)?;
+            let (ids, is_prefill) = match work {
+                Work::Prefill(ids) => (ids, true),
+                Work::Decode(ids) => (ids, false),
+                Work::Idle => continue,
+            };
+            // Prefill runs padded to the batch's longest prompt;
+            // decode is costed at the batch's mean representative
+            // KV length (prompt + gen/2 each, the same midpoint the
+            // single-group loop uses).
+            let len = if is_prefill {
+                ids.iter()
+                    .map(|&id| rep.batcher.get(id).prompt.len())
+                    .max()
+                    .expect("non-empty batch")
+            } else {
+                ids.iter()
+                    .map(|&id| {
+                        let req = rep.batcher.get(id);
+                        decode_cache_len(
+                            req.prompt.len(),
+                            req.max_new_tokens,
+                        )
+                    })
+                    .sum::<usize>()
+                    / ids.len()
+            };
+            let t = step_ns(is_prefill, ids.len(), len);
+            if let Some((tr, pid0)) = trace.as_mut() {
+                tr.span(
+                    *pid0 + r,
+                    0,
+                    if is_prefill { "prefill" } else { "decode" },
+                    now,
+                    t,
+                    vec![
+                        ("batch", Json::from(ids.len())),
+                        (
+                            if is_prefill { "seq" } else { "cache_len" },
+                            Json::from(len),
+                        ),
+                    ],
+                );
             }
+            rep.in_flight = ids;
+            rep.in_flight_is_prefill = is_prefill;
+            rep.busy_ns += t;
+            q.schedule(now + t, Ev::StepDone(r));
         }
     }
 
-    // All arrivals were scheduled and every generation is finite, so a
+    // All requests were issued and every generation is finite, so a
     // drained queue means a drained cluster.
+    ensure!(issued == n, "closed loop stalled at {issued}/{n} issued");
     for (r, rep) in replicas.iter().enumerate() {
         ensure!(
             rep.batcher.all_done(),
@@ -317,10 +451,11 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
         );
     }
 
-    let mut ttft = Vec::with_capacity(sc.n_requests);
-    let mut per_token = Vec::with_capacity(sc.n_requests);
-    let mut latency = Vec::with_capacity(sc.n_requests);
+    let mut ttft = Vec::with_capacity(n);
+    let mut per_token = Vec::with_capacity(n);
+    let mut latency = Vec::with_capacity(n);
     let mut makespan: f64 = 0.0;
+    let mut slo_report = sc.workload.slo.map(|_| SloReport::default());
     for rep in &replicas {
         for req in &rep.batcher.requests {
             let t = req
@@ -331,8 +466,14 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
             latency.push(l);
             // First token lands with prefill; the rest are decode steps.
             let decode_tokens = (req.generated.len() - 1).max(1);
-            per_token.push((l - t) / decode_tokens as f64);
+            let pt = (l - t) / decode_tokens as f64;
+            per_token.push(pt);
             makespan = makespan.max(req.finished_ns.unwrap());
+            if let (Some(slo), Some(report)) =
+                (&sc.workload.slo, slo_report.as_mut())
+            {
+                report.observe(slo, t, pt, req.generated.len());
+            }
         }
     }
 
@@ -368,6 +509,7 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
         latency: Summary::of(&latency),
         tokens_per_sec: tokens as f64 / (makespan * 1e-9),
         overlap_eff: scale_overlap_efficiency(sc, method),
+        slo: slo_report,
         replicas: replica_reports,
     })
 }
@@ -389,6 +531,15 @@ impl ScaleComparison {
     pub fn latency_speedup(&self) -> f64 {
         self.decoupled.latency.mean / self.flux.latency.mean
     }
+
+    /// Attained-goodput advantage (flux - decoupled), when SLOs are
+    /// defined.
+    pub fn goodput_delta(&self) -> Option<f64> {
+        match (&self.flux.slo, &self.decoupled.slo) {
+            (Some(f), Some(d)) => Some(f.goodput() - d.goodput()),
+            _ => None,
+        }
+    }
 }
 
 pub fn compare_scale(sc: &ScaleScenario) -> Result<ScaleComparison> {
@@ -398,11 +549,33 @@ pub fn compare_scale(sc: &ScaleScenario) -> Result<ScaleComparison> {
     })
 }
 
+/// Both methods with the DES streams captured side by side in one
+/// chrome trace: decoupled replicas on pids `[0, dp)`, flux on
+/// `[dp, 2*dp)`.
+pub fn compare_scale_traced(
+    sc: &ScaleScenario,
+    trace: &mut Trace,
+) -> Result<ScaleComparison> {
+    Ok(ScaleComparison {
+        decoupled: run_scale_traced(
+            sc,
+            Method::NonOverlap,
+            Some((&mut *trace, 0)),
+        )?,
+        flux: run_scale_traced(
+            sc,
+            Method::Flux,
+            Some((&mut *trace, sc.topo.dp)),
+        )?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cost::arch::{
-        ALL_SCALE_TOPOLOGIES, SCALE_PCIE_TP8_DP2, SCALE_TP8, SCALE_TP8_DP2,
+        ALL_SCALE_TOPOLOGIES, SCALE_H800_TP8_DP4, SCALE_PCIE_TP8_DP2,
+        SCALE_TP8, SCALE_TP8_DP2,
     };
 
     #[test]
@@ -410,12 +583,34 @@ mod tests {
         for topo in ALL_SCALE_TOPOLOGIES {
             let sc = ScaleScenario::quick(topo);
             let rep = run_scale(&sc, Method::Flux).unwrap();
-            assert_eq!(rep.completed, sc.n_requests, "{}", topo.name);
-            assert_eq!(rep.tokens, sc.n_requests * sc.gen_len);
+            assert_eq!(rep.completed, sc.n_requests(), "{}", topo.name);
+            assert_eq!(rep.tokens, sc.n_requests() * 8, "quick gen = 8");
             assert!(rep.tokens_per_sec > 0.0);
             assert!(rep.ttft.p50 > 0.0);
             assert!(rep.latency.p50 >= rep.ttft.p50);
             assert!(rep.per_token.p50 > 0.0);
+        }
+    }
+
+    #[test]
+    fn default_path_is_bit_identical_to_pr2() {
+        // THE compat contract of the workload refactor: the default
+        // Poisson preset must reproduce the pre-workload coordinator's
+        // timings to the last bit (pins generated by the validated
+        // Python port of the PR-2 code). A drift here means the
+        // refactor changed the PRNG draw order or the step costing.
+        let pins = [
+            (&SCALE_TP8, 1118032308.8980734f64, 881228300.1589197f64),
+            (&SCALE_TP8_DP2, 1117549870.466751, 824933462.2074677),
+            (&SCALE_PCIE_TP8_DP2, 3270362457.795217, 2903126006.4066467),
+            (&SCALE_H800_TP8_DP4, 598347635.5413818, 326857533.4727859),
+        ];
+        for (topo, makespan, ttft_p99) in pins {
+            let rep =
+                run_scale(&ScaleScenario::quick(topo), Method::Flux)
+                    .unwrap();
+            assert_eq!(rep.makespan_ns, makespan, "{}", topo.name);
+            assert_eq!(rep.ttft.p99, ttft_p99, "{}", topo.name);
         }
     }
 
@@ -427,6 +622,7 @@ mod tests {
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.ttft.p99, b.ttft.p99);
         assert_eq!(a.per_token.mean, b.per_token.mean);
+        assert_eq!(a.slo, b.slo);
     }
 
     #[test]
@@ -435,7 +631,7 @@ mod tests {
         let rep = run_scale(&sc, Method::Flux).unwrap();
         assert_eq!(rep.replicas.len(), 2);
         for r in &rep.replicas {
-            assert_eq!(r.completed, sc.n_requests / 2);
+            assert_eq!(r.completed, sc.n_requests() / 2);
             assert!(r.prefill_batches > 0);
             assert!(r.decode_steps > 0);
             assert!(r.busy_ns > 0.0);
@@ -500,5 +696,65 @@ mod tests {
             two.tokens_per_sec,
             one.tokens_per_sec
         );
+    }
+
+    #[test]
+    fn default_workload_carries_slo_accounting() {
+        // The default preset defines SLOs, so the report carries the
+        // goodput fields (quick tp8: 7 of 8 requests meet both).
+        let rep =
+            run_scale(&ScaleScenario::quick(&SCALE_TP8), Method::Flux)
+                .unwrap();
+        let slo = rep.slo.expect("default preset has SLOs");
+        assert_eq!(slo.requests, 8);
+        assert!(slo.met_both <= slo.met_ttft);
+        assert!(slo.met_both <= slo.met_per_token);
+        assert!(slo.goodput() > 0.0 && slo.goodput() <= 1.0);
+    }
+
+    #[test]
+    fn closed_loop_workload_completes_and_spreads_prefills() {
+        let wl = crate::workload::preset("closed-prefill", true).unwrap();
+        let sc = ScaleScenario::with_workload(&SCALE_TP8_DP2, wl);
+        let rep = run_scale(&sc, Method::Flux).unwrap();
+        assert_eq!(rep.completed, sc.n_requests());
+        // Think-gated arrivals rarely coincide, so prefills stay
+        // narrow: port-calibrated, each replica runs one prefill per
+        // request (6 of 6); assert the conservative half of that so
+        // the band survives small preset retunes.
+        for r in &rep.replicas {
+            assert_eq!(r.completed, sc.workload.requests_per_replica);
+            assert!(
+                r.prefill_batches as usize * 2
+                    >= sc.workload.requests_per_replica,
+                "prefill batches {} for {} requests",
+                r.prefill_batches,
+                sc.workload.requests_per_replica
+            );
+        }
+    }
+
+    #[test]
+    fn trace_capture_is_deterministic_and_shaped() {
+        let sc = ScaleScenario::quick(&SCALE_TP8_DP2);
+        let mut a = Trace::new();
+        let mut b = Trace::new();
+        compare_scale_traced(&sc, &mut a).unwrap();
+        compare_scale_traced(&sc, &mut b).unwrap();
+        let text = a.to_json().to_string();
+        assert_eq!(text, b.to_json().to_string(), "trace must replay");
+        let doc = Json::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 methods x 2 replicas named + arrivals + steps.
+        assert!(evs.len() > 4 + 2 * sc.n_requests(), "{}", evs.len());
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+            .map(|e| {
+                e.get("args").unwrap().get("name").unwrap().as_str().unwrap()
+            })
+            .collect();
+        assert!(names.contains(&"Flux/replica0"));
+        assert!(names.contains(&"non-overlap/replica1"));
     }
 }

@@ -12,5 +12,6 @@ pub mod device;
 pub mod engine;
 pub mod resources;
 pub mod topology;
+pub mod trace;
 
 pub use resources::Time;

@@ -1,0 +1,187 @@
+//! Chrome trace-event exporter for the DES.
+//!
+//! `flux simulate --scale|--train --trace <path>` dumps the event
+//! stream as a chrome://tracing / Perfetto JSON object
+//! (`{"traceEvents": [...]}`): one *pid* per replica or pipeline
+//! stage (method lanes get disjoint pid ranges, named via metadata
+//! events), complete-`"X"` spans for scheduler steps and transfers,
+//! instant-`"i"` events for arrivals. Timestamps are microseconds
+//! (the format's unit); simulation times are ns.
+//!
+//! Byte-stability: events are emitted in DES execution order and the
+//! JSON writer is deterministic, so a fixed seed produces an
+//! identical file across reruns — the same contract as the report
+//! emitters, and what the CLI test byte-checks.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// An in-memory trace being collected by a simulation run.
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<Json>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Name a process lane (chrome metadata event). Call once per pid
+    /// before its spans for a readable timeline.
+    pub fn process_name(&mut self, pid: usize, name: &str) {
+        self.events.push(obj(vec![
+            ("ph", Json::from("M")),
+            ("name", Json::from("process_name")),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(0usize)),
+            (
+                "args",
+                obj(vec![("name", Json::from(name))]),
+            ),
+        ]));
+    }
+
+    /// A complete span: `[start_ns, start_ns + dur_ns)` on (pid, tid).
+    pub fn span(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        start_ns: f64,
+        dur_ns: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let mut ev = vec![
+            ("ph", Json::from("X")),
+            ("name", Json::from(name)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(tid)),
+            ("ts", Json::from(start_ns / 1e3)),
+            ("dur", Json::from(dur_ns / 1e3)),
+        ];
+        if !args.is_empty() {
+            ev.push(("args", obj(args)));
+        }
+        self.events.push(obj(ev));
+    }
+
+    /// An instant event at `ts_ns` on (pid, tid).
+    pub fn instant(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        ts_ns: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let mut ev = vec![
+            ("ph", Json::from("i")),
+            ("s", Json::from("t")), // thread-scoped instant
+            ("name", Json::from(name)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(tid)),
+            ("ts", Json::from(ts_ns / 1e3)),
+        ];
+        if !args.is_empty() {
+            ev.push(("args", obj(args)));
+        }
+        self.events.push(obj(ev));
+    }
+
+    /// The chrome://tracing document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("displayTimeUnit", Json::from("ms")),
+            ("traceEvents", Json::Arr(self.events.clone())),
+        ])
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new();
+        t.process_name(0, "flux/replica0");
+        t.instant(0, 0, "arrive", 1500.0, vec![("req", Json::from(3usize))]);
+        t.span(
+            0,
+            0,
+            "prefill",
+            2000.0,
+            5_000_000.0,
+            vec![("batch", Json::from(4usize))],
+        );
+        t.span(0, 1, "hop", 2500.0, 1000.0, Vec::new());
+        t
+    }
+
+    #[test]
+    fn emits_chrome_trace_shape() {
+        let doc = sample().to_json();
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 4);
+        // Metadata first, then the instant, then spans.
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(evs[1].get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(evs[2].get("ph").unwrap().as_str().unwrap(), "X");
+        // ns -> us conversion.
+        assert_eq!(evs[2].get("ts").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(evs[2].get("dur").unwrap().as_f64().unwrap(), 5000.0);
+        assert_eq!(
+            evs[2]
+                .get("args")
+                .unwrap()
+                .get("batch")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            4
+        );
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        assert_eq!(
+            sample().to_json().to_string(),
+            sample().to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn write_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("flux_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("t.json");
+        let t = sample();
+        t.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, t.to_json().to_string());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -42,6 +42,8 @@ use crate::parallel::{
 use crate::sim::engine::EventQueue;
 use crate::sim::resources::Serial;
 use crate::sim::topology::Net;
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
 
 /// One training experiment: a topology, a model and a microbatch plan.
 #[derive(Clone, Copy, Debug)]
@@ -187,9 +189,30 @@ fn validate_scenario(sc: &TrainScenario) -> Result<()> {
 
 /// Run one (scenario, method) training step through the event queue.
 pub fn run_train(sc: &TrainScenario, method: Method) -> Result<TrainRun> {
+    run_train_traced(sc, method, None)
+}
+
+/// Like [`run_train`], optionally recording the DES event stream into
+/// a chrome trace: `(trace, pid0)` — pipeline stage `s` becomes
+/// process `pid0 + s` (compute spans on tid 0, PP hops on tid 1, DP
+/// all-reduce buckets on tid 2).
+pub fn run_train_traced(
+    sc: &TrainScenario,
+    method: Method,
+    mut trace: Option<(&mut Trace, usize)>,
+) -> Result<TrainRun> {
     validate_scenario(sc)?;
+    if let Some((tr, pid0)) = trace.as_mut() {
+        for s in 0..sc.topo.pp {
+            tr.process_name(
+                *pid0 + s,
+                &format!("{}/stage{s}", method.name()),
+            );
+        }
+    }
     let costs = sc.costs(method);
-    let out = simulate_with_costs(sc.topo, sc.microbatches, &costs)?;
+    let out =
+        simulate_with_costs(sc.topo, sc.microbatches, &costs, trace)?;
     Ok(TrainRun {
         method,
         analytic_ns: train_step_ns(
@@ -221,7 +244,8 @@ pub fn ideal_step_ns(sc: &TrainScenario) -> Result<f64> {
         ),
         ..sc.costs(Method::NonOverlap)
     };
-    Ok(simulate_with_costs(sc.topo, sc.microbatches, &ideal)?.step_ns)
+    Ok(simulate_with_costs(sc.topo, sc.microbatches, &ideal, None)?
+        .step_ns)
 }
 
 /// Eq. 2 against a precomputed ideal: the fraction of the
@@ -260,6 +284,7 @@ fn simulate_with_costs(
     topo: &TrainTopology,
     microbatches: usize,
     costs: &StepCosts,
+    mut trace: Option<(&mut Trace, usize)>,
 ) -> Result<TrainRun> {
     let pp = topo.pp;
     let m = microbatches;
@@ -302,13 +327,36 @@ fn simulate_with_costs(
             Ev::FwdDone(s) => {
                 stages[s].busy = false;
                 stages[s].fwd_done += 1;
+                if let Some((tr, pid0)) = trace.as_mut() {
+                    tr.span(
+                        *pid0 + s,
+                        0,
+                        "fwd",
+                        now - costs.stage.fwd_ns,
+                        costs.stage.fwd_ns,
+                        vec![(
+                            "micro",
+                            Json::from(stages[s].fwd_done - 1),
+                        )],
+                    );
+                }
                 if s + 1 < pp {
-                    let (_, end) = net.transfer(
+                    let (hop_start, end) = net.transfer(
                         rank_of(s),
                         rank_of(s + 1),
                         costs.act_bytes,
                         now,
                     );
+                    if let Some((tr, pid0)) = trace.as_mut() {
+                        tr.span(
+                            *pid0 + s + 1,
+                            1,
+                            "act-hop",
+                            hop_start,
+                            end - hop_start,
+                            Vec::new(),
+                        );
+                    }
                     q.schedule(end, Ev::ActArrive(s + 1));
                 } else {
                     // The last stage turns around in place.
@@ -320,13 +368,36 @@ fn simulate_with_costs(
                 stages[s].busy = false;
                 stages[s].bwd_done += 1;
                 stages[s].last_bwd_end = now;
+                if let Some((tr, pid0)) = trace.as_mut() {
+                    tr.span(
+                        *pid0 + s,
+                        0,
+                        "bwd",
+                        now - costs.stage.bwd_ns,
+                        costs.stage.bwd_ns,
+                        vec![(
+                            "micro",
+                            Json::from(stages[s].bwd_done - 1),
+                        )],
+                    );
+                }
                 if s > 0 {
-                    let (_, end) = net.transfer(
+                    let (hop_start, end) = net.transfer(
                         rank_of(s),
                         rank_of(s - 1),
                         costs.act_bytes,
                         now,
                     );
+                    if let Some((tr, pid0)) = trace.as_mut() {
+                        tr.span(
+                            *pid0 + s - 1,
+                            1,
+                            "grad-hop",
+                            hop_start,
+                            end - hop_start,
+                            Vec::new(),
+                        );
+                    }
                     q.schedule(end, Ev::GradArrive(s - 1));
                 }
                 let done = stages[s].bwd_done;
@@ -336,8 +407,19 @@ fn simulate_with_costs(
                     let release = if done == k0 + 1 { done } else { 1 };
                     let mut ar_end = 0.0;
                     for _ in 0..release {
-                        ar_end =
-                            stages[s].dp_link.acquire(now, bucket_ns).1;
+                        let (b_start, b_end) =
+                            stages[s].dp_link.acquire(now, bucket_ns);
+                        if let Some((tr, pid0)) = trace.as_mut() {
+                            tr.span(
+                                *pid0 + s,
+                                2,
+                                "dp-bucket",
+                                b_start,
+                                b_end - b_start,
+                                Vec::new(),
+                            );
+                        }
+                        ar_end = b_end;
                     }
                     if done == m {
                         q.schedule(ar_end, Ev::AllReduceDone(s));
@@ -415,6 +497,33 @@ pub fn compare_train(sc: &TrainScenario) -> Result<TrainComparison> {
         megatron: run_train(sc, Method::NonOverlap)?,
         te: run_train(sc, Method::Medium)?,
         flux: run_train(sc, Method::Flux)?,
+    })
+}
+
+/// All three methods with the DES streams captured side by side in one
+/// chrome trace: Megatron stages on pids `[0, pp)`, TE on
+/// `[pp, 2*pp)`, Flux on `[2*pp, 3*pp)`.
+pub fn compare_train_traced(
+    sc: &TrainScenario,
+    trace: &mut Trace,
+) -> Result<TrainComparison> {
+    let pp = sc.topo.pp;
+    Ok(TrainComparison {
+        megatron: run_train_traced(
+            sc,
+            Method::NonOverlap,
+            Some((&mut *trace, 0)),
+        )?,
+        te: run_train_traced(
+            sc,
+            Method::Medium,
+            Some((&mut *trace, pp)),
+        )?,
+        flux: run_train_traced(
+            sc,
+            Method::Flux,
+            Some((&mut *trace, 2 * pp)),
+        )?,
     })
 }
 
@@ -608,6 +717,30 @@ mod tests {
             train_overlap_efficiency(&sc, base.step_ns, base.step_ns)
                 .unwrap();
         assert_eq!(self_eff, 0.0);
+    }
+
+    #[test]
+    fn trace_capture_is_deterministic_and_spans_all_stages() {
+        let sc = TrainScenario::quick(&TRAIN_NVLINK_128);
+        let mut a = Trace::new();
+        let mut b = Trace::new();
+        compare_train_traced(&sc, &mut a).unwrap();
+        compare_train_traced(&sc, &mut b).unwrap();
+        let text = a.to_json().to_string();
+        assert_eq!(text, b.to_json().to_string(), "trace must replay");
+        let doc = Json::parse(&text).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 methods x 8 stages x 8 microbatches x (fwd + bwd) compute
+        // spans at minimum, plus hops, buckets and metadata.
+        assert!(evs.len() >= 3 * 8 * 8 * 2, "{}", evs.len());
+        // The traced runs must not perturb the simulation.
+        let plain = run_train(&sc, Method::Flux).unwrap();
+        let mut t = Trace::new();
+        let traced =
+            run_train_traced(&sc, Method::Flux, Some((&mut t, 0)))
+                .unwrap();
+        assert_eq!(plain.step_ns, traced.step_ns);
+        assert_eq!(plain.events, traced.events);
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! Arrival processes: how requests hit the cluster over time.
+//!
+//! Four shapes behind one seeded interface, chosen to span the traffic
+//! regimes the paper's inference figures (13–15) are sensitive to:
+//!
+//! * [`ArrivalSpec::Poisson`] — memoryless open-loop arrivals, the
+//!   PR-2 default (bit-preserved: one exponential draw per request).
+//! * [`ArrivalSpec::Mmpp`] — on/off bursty arrivals (a two-state
+//!   Markov-modulated Poisson process): bursts of closely spaced
+//!   requests separated by exponential silences. Burst *backlog* is
+//!   what amplifies the Flux-vs-decoupled gap.
+//! * [`ArrivalSpec::Diurnal`] — rate-curve Poisson: the instantaneous
+//!   rate swings sinusoidally around the base rate, the day/night
+//!   load shape of a public serving endpoint.
+//! * [`ArrivalSpec::ClosedLoop`] — fixed concurrency: a pool of users
+//!   who each wait for their previous request to finish, think for an
+//!   exponential pause, then issue the next one. Arrival times depend
+//!   on completions, so they are generated *inside* the coordinator,
+//!   not up front — the think gaps are still pre-drawn per request
+//!   index so every execution method sees the same user behavior.
+//!
+//! Cluster-level scaling: specs express *per-replica* load, and open
+//! -loop gap means are divided by the DP degree (rates add across
+//! replicas); closed-loop concurrency multiplies by it. One spec file
+//! therefore drives every [`crate::cost::arch::ScaleTopology`] at the
+//! same per-replica intensity.
+//!
+//! Draw-order contract (the byte-stability anchor, shared with the
+//! length samplers in [`super::mix`]): `generate` draws all open-loop
+//! arrival gaps (or all closed-loop think gaps) first, then all
+//! request lengths, from one `Rng::new(seed)`. The default Poisson +
+//! fixed-mix path consumes exactly one exponential per request and
+//! nothing else — the identical sequence PR-2's coordinator drew.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// A seeded arrival process. Open-loop processes pre-draw the full
+/// absolute-time schedule; the closed loop exposes its parameters for
+/// the coordinator's completion-driven issue loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Open-loop Poisson with per-replica mean inter-arrival `mean_ns`.
+    Poisson { mean_ns: f64 },
+    /// On/off bursty arrivals: bursts of exponential(`on_mean_ns`)
+    /// gaps, sizes uniform in `[1, 2*avg_burst)`, separated by
+    /// exponential(`idle_mean_ns`) silences (per-replica means).
+    Mmpp { on_mean_ns: f64, idle_mean_ns: f64, avg_burst: usize },
+    /// Rate-curve Poisson: instantaneous rate scaled by
+    /// `1 + amplitude * sin(2*pi*t / period_ns)` around the base.
+    Diurnal { base_mean_ns: f64, amplitude: f64, period_ns: f64 },
+    /// Fixed concurrency per replica with exponential think time.
+    ClosedLoop { concurrency: usize, think_ns: f64 },
+}
+
+impl ArrivalSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Poisson { .. } => "poisson",
+            ArrivalSpec::Mmpp { .. } => "mmpp",
+            ArrivalSpec::Diurnal { .. } => "diurnal",
+            ArrivalSpec::ClosedLoop { .. } => "closed-loop",
+        }
+    }
+
+    /// Pre-draw the open-loop absolute arrival times for `n` requests
+    /// over `dp` replicas (gap means divided by `dp`: rates add).
+    /// Returns `None` for the closed loop, whose arrivals depend on
+    /// completions.
+    pub fn arrival_times(
+        &self,
+        n: usize,
+        dp: usize,
+        rng: &mut Rng,
+    ) -> Option<Vec<f64>> {
+        let dp = dp as f64;
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        match *self {
+            ArrivalSpec::Poisson { mean_ns } => {
+                for _ in 0..n {
+                    t += rng.exponential(mean_ns / dp);
+                    out.push(t);
+                }
+            }
+            ArrivalSpec::Mmpp { on_mean_ns, idle_mean_ns, avg_burst } => {
+                let mut burst_left = 0usize;
+                for _ in 0..n {
+                    if burst_left == 0 {
+                        t += rng.exponential(idle_mean_ns / dp);
+                        burst_left = 1
+                            + rng.below(2 * avg_burst as u64 - 1) as usize;
+                    } else {
+                        t += rng.exponential(on_mean_ns / dp);
+                    }
+                    burst_left -= 1;
+                    out.push(t);
+                }
+            }
+            ArrivalSpec::Diurnal { base_mean_ns, amplitude, period_ns } => {
+                for _ in 0..n {
+                    let rate = 1.0
+                        + amplitude
+                            * (2.0 * std::f64::consts::PI * t / period_ns)
+                                .sin();
+                    t += rng.exponential(base_mean_ns / dp / rate);
+                    out.push(t);
+                }
+            }
+            ArrivalSpec::ClosedLoop { .. } => return None,
+        }
+        Some(out)
+    }
+
+    /// Pre-draw the closed loop's per-request think gaps (issue order
+    /// indexes them, so every method replays the same user pauses).
+    /// Empty for open-loop processes.
+    pub fn think_gaps(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            ArrivalSpec::ClosedLoop { think_ns, .. } => {
+                (0..n).map(|_| rng.exponential(think_ns)).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Reject non-finite / non-positive / degenerate parameters with a
+    /// pointed error (a NaN rate would otherwise surface as a
+    /// "non-finite event time" panic mid-simulation, and an absurd
+    /// count — `as_usize` saturates huge floats — as an arithmetic
+    /// overflow inside `generate`).
+    pub fn validate(&self) -> Result<()> {
+        let pos = |name: &str, x: f64| -> Result<()> {
+            if !x.is_finite() || x <= 0.0 {
+                bail!(
+                    "arrival.{name} must be finite and > 0, got {x}"
+                );
+            }
+            Ok(())
+        };
+        let count = |name: &str, x: usize| -> Result<()> {
+            if !(1..=super::MAX_COUNT).contains(&x) {
+                bail!(
+                    "arrival.{name} must be in [1, {}], got {x}",
+                    super::MAX_COUNT
+                );
+            }
+            Ok(())
+        };
+        match *self {
+            ArrivalSpec::Poisson { mean_ns } => pos("mean_ns", mean_ns),
+            ArrivalSpec::Mmpp { on_mean_ns, idle_mean_ns, avg_burst } => {
+                pos("on_mean_ns", on_mean_ns)?;
+                pos("idle_mean_ns", idle_mean_ns)?;
+                count("avg_burst", avg_burst)
+            }
+            ArrivalSpec::Diurnal { base_mean_ns, amplitude, period_ns } => {
+                pos("base_mean_ns", base_mean_ns)?;
+                pos("period_ns", period_ns)?;
+                if !amplitude.is_finite()
+                    || !(0.0..1.0).contains(&amplitude)
+                {
+                    bail!(
+                        "arrival.amplitude must be in [0, 1) so the \
+                         rate stays positive, got {amplitude}"
+                    );
+                }
+                Ok(())
+            }
+            ArrivalSpec::ClosedLoop { concurrency, think_ns } => {
+                pos("think_ns", think_ns)?;
+                count("concurrency", concurrency)
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ArrivalSpec::Poisson { mean_ns } => obj(vec![
+                ("kind", Json::from("poisson")),
+                ("mean_ns", Json::from(mean_ns)),
+            ]),
+            ArrivalSpec::Mmpp { on_mean_ns, idle_mean_ns, avg_burst } => {
+                obj(vec![
+                    ("kind", Json::from("mmpp")),
+                    ("on_mean_ns", Json::from(on_mean_ns)),
+                    ("idle_mean_ns", Json::from(idle_mean_ns)),
+                    ("avg_burst", Json::from(avg_burst)),
+                ])
+            }
+            ArrivalSpec::Diurnal { base_mean_ns, amplitude, period_ns } => {
+                obj(vec![
+                    ("kind", Json::from("diurnal")),
+                    ("base_mean_ns", Json::from(base_mean_ns)),
+                    ("amplitude", Json::from(amplitude)),
+                    ("period_ns", Json::from(period_ns)),
+                ])
+            }
+            ArrivalSpec::ClosedLoop { concurrency, think_ns } => {
+                obj(vec![
+                    ("kind", Json::from("closed-loop")),
+                    ("concurrency", Json::from(concurrency)),
+                    ("think_ns", Json::from(think_ns)),
+                ])
+            }
+        }
+    }
+
+    /// Parse (and validate) from the `"arrival"` object of a workload
+    /// file.
+    pub fn from_json(j: &Json) -> Result<ArrivalSpec> {
+        let spec = match j.get("kind")?.as_str()? {
+            "poisson" => ArrivalSpec::Poisson {
+                mean_ns: j.get("mean_ns")?.as_f64()?,
+            },
+            "mmpp" => ArrivalSpec::Mmpp {
+                on_mean_ns: j.get("on_mean_ns")?.as_f64()?,
+                idle_mean_ns: j.get("idle_mean_ns")?.as_f64()?,
+                avg_burst: j.get("avg_burst")?.as_usize()?,
+            },
+            "diurnal" => ArrivalSpec::Diurnal {
+                base_mean_ns: j.get("base_mean_ns")?.as_f64()?,
+                amplitude: j.get("amplitude")?.as_f64()?,
+                period_ns: j.get("period_ns")?.as_f64()?,
+            },
+            "closed-loop" => ArrivalSpec::ClosedLoop {
+                concurrency: j.get("concurrency")?.as_usize()?,
+                think_ns: j.get("think_ns")?.as_f64()?,
+            },
+            k => bail!(
+                "unknown arrival kind {k:?} \
+                 (poisson|mmpp|diurnal|closed-loop)"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_matches_the_pr2_draw_sequence() {
+        // The default path's contract: arrival_times with the cluster
+        // mean is exactly the `t += rng.exponential(mean)` loop the
+        // PR-2 coordinator ran.
+        let spec = ArrivalSpec::Poisson { mean_ns: 20.0e6 };
+        let times =
+            spec.arrival_times(8, 2, &mut Rng::new(17)).unwrap();
+        let mut rng = Rng::new(17);
+        let mut t = 0.0;
+        for &at in &times {
+            t += rng.exponential(20.0e6 / 2.0);
+            assert_eq!(at, t);
+        }
+    }
+
+    #[test]
+    fn all_processes_are_finite_increasing_and_seeded() {
+        let specs = [
+            ArrivalSpec::Poisson { mean_ns: 1e6 },
+            ArrivalSpec::Mmpp {
+                on_mean_ns: 1e5,
+                idle_mean_ns: 1e7,
+                avg_burst: 4,
+            },
+            ArrivalSpec::Diurnal {
+                base_mean_ns: 1e6,
+                amplitude: 0.9,
+                period_ns: 1e8,
+            },
+        ];
+        for spec in &specs {
+            let a = spec.arrival_times(64, 2, &mut Rng::new(3)).unwrap();
+            let b = spec.arrival_times(64, 2, &mut Rng::new(3)).unwrap();
+            assert_eq!(a, b, "{:?} must replay by seed", spec.kind());
+            let mut prev = 0.0;
+            for &t in &a {
+                assert!(t.is_finite() && t >= prev, "{t} after {prev}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_pre_draws_think_gaps_only() {
+        let spec =
+            ArrivalSpec::ClosedLoop { concurrency: 2, think_ns: 1e6 };
+        assert!(spec.arrival_times(8, 1, &mut Rng::new(1)).is_none());
+        let gaps = spec.think_gaps(8, &mut Rng::new(1));
+        assert_eq!(gaps.len(), 8);
+        assert!(gaps.iter().all(|g| g.is_finite() && *g >= 0.0));
+        // Open-loop processes have no think gaps.
+        let open = ArrivalSpec::Poisson { mean_ns: 1e6 };
+        assert!(open.think_gaps(8, &mut Rng::new(1)).is_empty());
+    }
+
+    #[test]
+    fn mmpp_bursts_are_tighter_than_idles() {
+        // Structural sanity: with a 100x on/idle separation, the p90
+        // gap (burst-internal) is far below the max gap (idle).
+        let spec = ArrivalSpec::Mmpp {
+            on_mean_ns: 1e5,
+            idle_mean_ns: 1e7,
+            avg_burst: 8,
+        };
+        let times =
+            spec.arrival_times(256, 1, &mut Rng::new(5)).unwrap();
+        let mut gaps: Vec<f64> =
+            times.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_by(|a, b| a.total_cmp(b));
+        let p50 = gaps[gaps.len() / 2];
+        let max = *gaps.last().unwrap();
+        assert!(
+            max > 20.0 * p50,
+            "idle gaps ({max}) should dwarf burst gaps ({p50})"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_rates() {
+        for bad in [
+            ArrivalSpec::Poisson { mean_ns: 0.0 },
+            ArrivalSpec::Poisson { mean_ns: -1.0 },
+            ArrivalSpec::Poisson { mean_ns: f64::NAN },
+            ArrivalSpec::Poisson { mean_ns: f64::INFINITY },
+            ArrivalSpec::Mmpp {
+                on_mean_ns: 1.0,
+                idle_mean_ns: f64::NAN,
+                avg_burst: 2,
+            },
+            ArrivalSpec::Mmpp {
+                on_mean_ns: 1.0,
+                idle_mean_ns: 1.0,
+                avg_burst: 0,
+            },
+            ArrivalSpec::Diurnal {
+                base_mean_ns: 1.0,
+                amplitude: 1.0,
+                period_ns: 1.0,
+            },
+            ArrivalSpec::Diurnal {
+                base_mean_ns: 1.0,
+                amplitude: -0.1,
+                period_ns: 1.0,
+            },
+            ArrivalSpec::ClosedLoop { concurrency: 0, think_ns: 1.0 },
+            // Saturated `as_usize` casts from absurd file values must
+            // be rejected here, not overflow inside generate().
+            ArrivalSpec::Mmpp {
+                on_mean_ns: 1.0,
+                idle_mean_ns: 1.0,
+                avg_burst: usize::MAX,
+            },
+            ArrivalSpec::ClosedLoop {
+                concurrency: crate::workload::MAX_COUNT + 1,
+                think_ns: 1.0,
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        for spec in [
+            ArrivalSpec::Poisson { mean_ns: 2.5e7 },
+            ArrivalSpec::Mmpp {
+                on_mean_ns: 1e6,
+                idle_mean_ns: 9e7,
+                avg_burst: 8,
+            },
+            ArrivalSpec::Diurnal {
+                base_mean_ns: 1.5e7,
+                amplitude: 0.8,
+                period_ns: 2e8,
+            },
+            ArrivalSpec::ClosedLoop { concurrency: 2, think_ns: 1.5e8 },
+        ] {
+            let j = Json::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(ArrivalSpec::from_json(&j).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_nonfinite_rates_with_pointed_error() {
+        let j = Json::parse(
+            r#"{"kind": "poisson", "mean_ns": -2e6}"#,
+        )
+        .unwrap();
+        let err = ArrivalSpec::from_json(&j).unwrap_err().to_string();
+        assert!(
+            err.contains("mean_ns") && err.contains("-2000000"),
+            "error must name the field and value: {err}"
+        );
+    }
+}

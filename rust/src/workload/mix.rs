@@ -1,0 +1,258 @@
+//! Request-mix models: how long prompts and generations are.
+//!
+//! The paper's inference evaluation is length-shaped — Fig. 16 prefill
+//! is 8 x 2048-token prompts, Fig. 17 decoding is long token-by-token
+//! generations — and which phase dominates decides how much TP
+//! communication Flux can hide. Two samplers cover the space:
+//!
+//! * [`MixSpec::Fixed`] — every request identical (the PR-2 default;
+//!   draws nothing from the PRNG, preserving the arrival stream
+//!   byte-for-byte).
+//! * [`MixSpec::TwoPoint`] — a ShareGPT-like two-point mixture: with
+//!   probability `p_long` the request is the long class, otherwise the
+//!   short class (one uniform draw per request). Real trace length
+//!   histograms are famously bimodal — short chat turns plus a heavy
+//!   tail of long documents — and a two-point mixture is the smallest
+//!   model that reproduces the scheduling pathologies that bimodality
+//!   causes (head-of-line blocking, padded-batch waste).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// One request class: prompt tokens in, generated tokens out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LenClass {
+    pub prompt: usize,
+    pub gen: usize,
+}
+
+impl LenClass {
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("prompt", Json::from(self.prompt)),
+            ("gen", Json::from(self.gen)),
+        ])
+    }
+
+    /// Both lengths in `[1, MAX_COUNT]` — an absurd length would
+    /// otherwise become an OOM-sized prompt allocation mid-simulation.
+    fn check(self, what: &str) -> Result<()> {
+        let max = super::MAX_COUNT;
+        ensure!(
+            (1..=max).contains(&self.prompt)
+                && (1..=max).contains(&self.gen),
+            "{what} lengths must be in [1, {max}], got prompt {} \
+             gen {}",
+            self.prompt,
+            self.gen
+        );
+        Ok(())
+    }
+
+    fn from_json(j: &Json) -> Result<LenClass> {
+        let c = LenClass {
+            prompt: j.get("prompt")?.as_usize()?,
+            gen: j.get("gen")?.as_usize()?,
+        };
+        c.check("mix length class")?;
+        Ok(c)
+    }
+}
+
+/// A seeded request-length sampler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MixSpec {
+    /// Every request `prompt` x `gen` (no PRNG draws).
+    Fixed(LenClass),
+    /// Two-point mixture: `long` with probability `p_long`, else
+    /// `short` (one uniform draw per request).
+    TwoPoint { p_long: f64, short: LenClass, long: LenClass },
+}
+
+impl MixSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MixSpec::Fixed(_) => "fixed",
+            MixSpec::TwoPoint { .. } => "two-point",
+        }
+    }
+
+    /// Draw `n` request lengths (index == request id). Fixed draws
+    /// nothing; two-point consumes exactly one `f64` per request.
+    pub fn lengths(&self, n: usize, rng: &mut Rng) -> Vec<LenClass> {
+        match *self {
+            MixSpec::Fixed(c) => vec![c; n],
+            MixSpec::TwoPoint { p_long, short, long } => (0..n)
+                .map(|_| if rng.f64() < p_long { long } else { short })
+                .collect(),
+        }
+    }
+
+    /// The longest prompt this mix can emit (padded-batch sizing).
+    pub fn max_prompt(&self) -> usize {
+        match *self {
+            MixSpec::Fixed(c) => c.prompt,
+            MixSpec::TwoPoint { short, long, .. } => {
+                short.prompt.max(long.prompt)
+            }
+        }
+    }
+
+    /// The longest total sequence (prompt + gen) this mix can emit
+    /// (KV-pool sizing).
+    pub fn max_total(&self) -> usize {
+        match *self {
+            MixSpec::Fixed(c) => c.prompt + c.gen,
+            MixSpec::TwoPoint { short, long, .. } => {
+                (short.prompt + short.gen).max(long.prompt + long.gen)
+            }
+        }
+    }
+
+    /// The fixed lengths, when the mix is degenerate (the v1-report
+    /// compat fields only exist for fixed mixes).
+    pub fn fixed(&self) -> Option<LenClass> {
+        match *self {
+            MixSpec::Fixed(c) => Some(c),
+            MixSpec::TwoPoint { .. } => None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            MixSpec::Fixed(c) => c.check("mix")?,
+            MixSpec::TwoPoint { p_long, short, long } => {
+                if !p_long.is_finite() || !(0.0..=1.0).contains(&p_long)
+                {
+                    bail!(
+                        "mix.p_long must be a probability in [0, 1], \
+                         got {p_long}"
+                    );
+                }
+                short.check("mix.short")?;
+                long.check("mix.long")?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            MixSpec::Fixed(c) => obj(vec![
+                ("kind", Json::from("fixed")),
+                ("prompt", Json::from(c.prompt)),
+                ("gen", Json::from(c.gen)),
+            ]),
+            MixSpec::TwoPoint { p_long, short, long } => obj(vec![
+                ("kind", Json::from("two-point")),
+                ("p_long", Json::from(p_long)),
+                ("short", short.to_json()),
+                ("long", long.to_json()),
+            ]),
+        }
+    }
+
+    /// Parse (and validate) from the `"mix"` object of a workload file.
+    pub fn from_json(j: &Json) -> Result<MixSpec> {
+        let spec = match j.get("kind")?.as_str()? {
+            "fixed" => MixSpec::Fixed(LenClass {
+                prompt: j.get("prompt")?.as_usize()?,
+                gen: j.get("gen")?.as_usize()?,
+            }),
+            "two-point" => MixSpec::TwoPoint {
+                p_long: j.get("p_long")?.as_f64()?,
+                short: LenClass::from_json(j.get("short")?)?,
+                long: LenClass::from_json(j.get("long")?)?,
+            },
+            k => bail!("unknown mix kind {k:?} (fixed|two-point)"),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHORT: LenClass = LenClass { prompt: 256, gen: 16 };
+    const LONG: LenClass = LenClass { prompt: 1024, gen: 32 };
+
+    #[test]
+    fn fixed_draws_nothing_from_the_rng() {
+        // The bit-compat anchor: a fixed mix must leave the PRNG
+        // untouched so the PR-2 arrival stream replays exactly.
+        let mix = MixSpec::Fixed(SHORT);
+        let mut rng = Rng::new(17);
+        let before = rng.clone().next_u64();
+        let lens = mix.lengths(100, &mut rng);
+        assert_eq!(rng.next_u64(), before, "rng state must be untouched");
+        assert!(lens.iter().all(|c| *c == SHORT));
+    }
+
+    #[test]
+    fn two_point_stays_in_class_and_hits_both() {
+        let mix =
+            MixSpec::TwoPoint { p_long: 0.3, short: SHORT, long: LONG };
+        let lens = mix.lengths(400, &mut Rng::new(7));
+        let n_long = lens.iter().filter(|c| **c == LONG).count();
+        assert!(lens.iter().all(|c| *c == SHORT || *c == LONG));
+        // ~30% +- a wide tolerance at n=400.
+        assert!((60..=180).contains(&n_long), "n_long {n_long}");
+        // Replays by seed.
+        assert_eq!(lens, mix.lengths(400, &mut Rng::new(7)));
+    }
+
+    #[test]
+    fn bounds_cover_both_classes() {
+        let mix =
+            MixSpec::TwoPoint { p_long: 0.5, short: SHORT, long: LONG };
+        assert_eq!(mix.max_prompt(), 1024);
+        assert_eq!(mix.max_total(), 1056);
+        assert_eq!(mix.fixed(), None);
+        let fixed = MixSpec::Fixed(LONG);
+        assert_eq!(fixed.max_prompt(), 1024);
+        assert_eq!(fixed.max_total(), 1056);
+        assert_eq!(fixed.fixed(), Some(LONG));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_mixes() {
+        for bad in [
+            MixSpec::Fixed(LenClass { prompt: 0, gen: 1 }),
+            MixSpec::Fixed(LenClass { prompt: 1, gen: 0 }),
+            MixSpec::TwoPoint {
+                p_long: f64::NAN,
+                short: SHORT,
+                long: LONG,
+            },
+            MixSpec::TwoPoint { p_long: 1.5, short: SHORT, long: LONG },
+            MixSpec::TwoPoint {
+                p_long: 0.5,
+                short: LenClass { prompt: 0, gen: 1 },
+                long: LONG,
+            },
+            // OOM-sized lengths from a scenario file are a parse-time
+            // rejection, not a mid-simulation allocation failure.
+            MixSpec::Fixed(LenClass {
+                prompt: crate::workload::MAX_COUNT + 1,
+                gen: 1,
+            }),
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips_both_kinds() {
+        for mix in [
+            MixSpec::Fixed(SHORT),
+            MixSpec::TwoPoint { p_long: 0.25, short: SHORT, long: LONG },
+        ] {
+            let j = Json::parse(&mix.to_json().to_string()).unwrap();
+            assert_eq!(MixSpec::from_json(&j).unwrap(), mix);
+        }
+    }
+}

@@ -1,0 +1,540 @@
+//! Workload generation: arrival processes, request mixes and SLOs as
+//! one declarative, replayable [`WorkloadSpec`].
+//!
+//! The serving-at-scale coordinator ([`crate::serving::scale`]) used
+//! to know exactly one traffic shape — a seeded Poisson process with
+//! one prompt/generation length. This subsystem turns the request
+//! source into data: a spec names an arrival process ([`arrival`]), a
+//! length mix ([`mix`]), a routing policy, per-request SLOs ([`slo`])
+//! and a request count, and [`WorkloadSpec::generate`] expands it into
+//! the per-request schedule the DES consumes. Everything draws from
+//! one `Rng::new(seed)` under a fixed order (arrivals/think gaps
+//! first, then lengths), so a checked-in scenario file replays
+//! byte-stably — and the default preset reproduces the PR-2 Poisson
+//! coordinator draw-for-draw.
+//!
+//! Specs express *per-replica* load (`requests_per_replica`, gap means
+//! per replica): one file drives every
+//! [`crate::cost::arch::ScaleTopology`] at the same intensity, which
+//! is what makes the `flux sweep-workloads` preset-x-topology matrix
+//! comparable.
+
+pub mod arrival;
+pub mod mix;
+pub mod slo;
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub use arrival::ArrivalSpec;
+pub use mix::{LenClass, MixSpec};
+pub use slo::{SloReport, SloSpec};
+
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// Upper bound on every count-like spec field (requests, burst sizes,
+/// concurrency, token lengths, token budgets). `Json::as_usize`
+/// accepts any integral f64 and the float→int cast saturates, so an
+/// absurd value in a scenario file would otherwise surface as an
+/// arithmetic overflow or an OOM allocation mid-simulation instead of
+/// a parse-time rejection. 2^20 tokens/requests is far beyond any
+/// scenario the simulator is calibrated for.
+pub const MAX_COUNT: usize = 1 << 20;
+
+/// How the cluster-level router assigns arrivals to DP replicas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Routing {
+    /// Strict rotation: method-independent assignment (the PR-2
+    /// policy, kept as the default so flux-vs-decoupled comparisons
+    /// never measure routing luck).
+    #[default]
+    RoundRobin,
+    /// Fewest queued + running requests wins (ties to the lowest
+    /// replica index). Sees queue imbalance, so it beats round-robin
+    /// on tail TTFT when bursty arrivals meet a skewed length mix.
+    LeastOutstanding,
+}
+
+impl Routing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round-robin",
+            Routing::LeastOutstanding => "least-outstanding",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Routing> {
+        match name {
+            "round-robin" => Ok(Routing::RoundRobin),
+            "least-outstanding" => Ok(Routing::LeastOutstanding),
+            _ => bail!(
+                "unknown routing {name:?} \
+                 (round-robin|least-outstanding)"
+            ),
+        }
+    }
+}
+
+/// One declarative serving workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub arrival: ArrivalSpec,
+    pub mix: MixSpec,
+    /// Requests per DP replica (total = this x dp).
+    pub requests_per_replica: usize,
+    pub routing: Routing,
+    /// Optional per-request deadlines; when set, the report gains
+    /// goodput/abandonment accounting.
+    pub slo: Option<SloSpec>,
+    /// Optional prefill token budget per batch (vLLM's
+    /// max_num_batched_tokens); defaults to max_prompt x prefill
+    /// batch, which never binds for a fixed mix.
+    pub max_prefill_tokens: Option<usize>,
+}
+
+/// The expanded per-request schedule the coordinator consumes.
+#[derive(Clone, Debug)]
+pub struct GeneratedWorkload {
+    /// Per-request lengths, index == request id.
+    pub lengths: Vec<LenClass>,
+    /// Open-loop absolute arrival times (empty for closed loop).
+    pub arrivals: Vec<f64>,
+    /// Closed-loop think gaps by issue index (empty for open loop).
+    pub think_gaps: Vec<f64>,
+    /// Closed-loop user count per replica (0 for open loop).
+    pub concurrency: usize,
+}
+
+impl GeneratedWorkload {
+    pub fn n_requests(&self) -> usize {
+        self.lengths.len()
+    }
+
+    pub fn is_closed_loop(&self) -> bool {
+        self.concurrency > 0
+    }
+
+    pub fn max_prompt(&self) -> usize {
+        self.lengths.iter().map(|c| c.prompt).max().unwrap_or(0)
+    }
+
+    pub fn max_total(&self) -> usize {
+        self.lengths
+            .iter()
+            .map(|c| c.prompt + c.gen)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl WorkloadSpec {
+    /// Expand the spec for a `dp`-replica cluster. One `Rng::new(seed)`
+    /// drives everything: arrival times (or think gaps) first, then
+    /// lengths — the order the byte-stability tests pin.
+    pub fn generate(&self, seed: u64, dp: usize) -> GeneratedWorkload {
+        let n = self.requests_per_replica * dp;
+        let mut rng = Rng::new(seed);
+        let (arrivals, think_gaps, concurrency) =
+            match self.arrival.arrival_times(n, dp, &mut rng) {
+                Some(at) => (at, Vec::new(), 0),
+                None => {
+                    let think = self.arrival.think_gaps(n, &mut rng);
+                    let ArrivalSpec::ClosedLoop { concurrency, .. } =
+                        self.arrival
+                    else {
+                        unreachable!("only the closed loop defers")
+                    };
+                    (Vec::new(), think, concurrency)
+                }
+            };
+        GeneratedWorkload {
+            lengths: self.mix.lengths(n, &mut rng),
+            arrivals,
+            think_gaps,
+            concurrency,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let ctx = || format!("workload {:?}", self.name);
+        ensure!(!self.name.is_empty(), "workload name must be non-empty");
+        self.arrival.validate().with_context(ctx)?;
+        self.mix.validate().with_context(ctx)?;
+        if let Some(slo) = &self.slo {
+            slo.validate().with_context(ctx)?;
+        }
+        ensure!(
+            (1..=MAX_COUNT).contains(&self.requests_per_replica),
+            "{}: requests_per_replica must be in [1, {MAX_COUNT}], \
+             got {}",
+            ctx(),
+            self.requests_per_replica
+        );
+        if let Some(cap) = self.max_prefill_tokens {
+            ensure!(
+                cap >= self.mix.max_prompt(),
+                "{}: max_prefill_tokens ({cap}) below the mix's \
+                 longest prompt ({}) — no prefill batch could ever \
+                 form",
+                ctx(),
+                self.mix.max_prompt()
+            );
+            ensure!(
+                cap <= MAX_COUNT,
+                "{}: max_prefill_tokens ({cap}) exceeds the \
+                 {MAX_COUNT}-token sanity cap",
+                ctx()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("arrival", self.arrival.to_json()),
+            ("mix", self.mix.to_json()),
+            (
+                "requests_per_replica",
+                Json::from(self.requests_per_replica),
+            ),
+            ("routing", Json::from(self.routing.name())),
+        ];
+        if let Some(slo) = &self.slo {
+            fields.push(("slo", slo.to_json()));
+        }
+        if let Some(cap) = self.max_prefill_tokens {
+            fields.push(("max_prefill_tokens", Json::from(cap)));
+        }
+        obj(fields)
+    }
+
+    /// Parse (and validate) a workload document. Bad rates, durations
+    /// and probabilities are rejected here with pointed errors instead
+    /// of panicking mid-simulation (the same boundary hardening PR-2
+    /// gave the event queue).
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let ctx = || format!("workload {name:?}");
+        let spec = WorkloadSpec {
+            arrival: ArrivalSpec::from_json(j.get("arrival")?)
+                .with_context(ctx)?,
+            mix: MixSpec::from_json(j.get("mix")?).with_context(ctx)?,
+            requests_per_replica: j
+                .get("requests_per_replica")?
+                .as_usize()
+                .with_context(ctx)?,
+            routing: match j.opt("routing") {
+                Some(r) => Routing::from_name(r.as_str()?)
+                    .with_context(ctx)?,
+                None => Routing::RoundRobin,
+            },
+            slo: match j.opt("slo") {
+                Some(s) => {
+                    Some(SloSpec::from_json(s).with_context(ctx)?)
+                }
+                None => None,
+            },
+            max_prefill_tokens: match j.opt("max_prefill_tokens") {
+                Some(c) => Some(c.as_usize().with_context(ctx)?),
+                None => None,
+            },
+            name,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a workload scenario file from disk.
+    pub fn load(path: &std::path::Path) -> Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading workload file {}", path.display())
+        })?;
+        let j = Json::parse(&text).with_context(|| {
+            format!("parsing workload file {}", path.display())
+        })?;
+        WorkloadSpec::from_json(&j).with_context(|| {
+            format!("validating workload file {}", path.display())
+        })
+    }
+
+    /// Resolve `--workload <preset|file.json>`: a preset name first,
+    /// else a path.
+    pub fn resolve(arg: &str, quick: bool) -> Result<WorkloadSpec> {
+        if let Some(wl) = preset(arg, quick) {
+            return Ok(wl);
+        }
+        if arg.ends_with(".json") || std::path::Path::new(arg).exists()
+        {
+            return WorkloadSpec::load(std::path::Path::new(arg));
+        }
+        bail!(
+            "unknown workload {arg:?}; one of the presets ({}) or a \
+             scenario .json file",
+            PRESET_NAMES.join(" | ")
+        )
+    }
+}
+
+/// The preset names `flux sweep-workloads` iterates, in report order.
+pub const PRESET_NAMES: [&str; 7] = [
+    "poisson-balanced",
+    "steady-decode",
+    "bursty-decode",
+    "open-prefill",
+    "closed-prefill",
+    "diurnal-chat",
+    "long-context",
+];
+
+/// Built-in presets. `quick` trims request counts to CI size (and, for
+/// the default preset, keeps the PR-2 quick/full generation lengths).
+///
+/// The matrix is designed in pairs so the sweep isolates one traffic
+/// axis at a time: `steady-decode` vs `bursty-decode` share a mix and
+/// differ only in arrivals (burst backlog widens the Flux gap —
+/// measured on H800, speedup 1.03 -> 1.11 quick); `open-prefill` vs
+/// `closed-prefill` share a mix and differ only in loop closure (think
+/// pauses compress it, 1.58 -> 1.31 on H800).
+pub fn preset(name: &str, quick: bool) -> Option<WorkloadSpec> {
+    let k = if quick { 1 } else { 3 };
+    let decode_mix = MixSpec::TwoPoint {
+        p_long: 0.25,
+        short: LenClass { prompt: 512, gen: 16 },
+        long: LenClass { prompt: 768, gen: 32 },
+    };
+    let prefill_mix =
+        MixSpec::Fixed(LenClass { prompt: 2048, gen: 4 });
+    let slo = |ttft: f64, tok: f64, abandon: f64| {
+        Some(SloSpec {
+            ttft_ns: ttft,
+            per_token_ns: tok,
+            abandon_ttft_ns: abandon,
+        })
+    };
+    let spec = match name {
+        // The PR-2 scenario, verbatim: Poisson at 20ms/replica, fixed
+        // 512-token prompts, 8/16-token generations.
+        "poisson-balanced" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Poisson { mean_ns: 20.0e6 },
+            mix: MixSpec::Fixed(LenClass {
+                prompt: 512,
+                gen: if quick { 8 } else { 16 },
+            }),
+            requests_per_replica: if quick { 8 } else { 24 },
+            routing: Routing::RoundRobin,
+            slo: slo(1.2e9, 120.0e6, 2.5e9),
+            max_prefill_tokens: None,
+        },
+        "steady-decode" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Poisson { mean_ns: 60.0e6 },
+            mix: decode_mix,
+            requests_per_replica: 8 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(0.6e9, 120.0e6, 2.0e9),
+            max_prefill_tokens: None,
+        },
+        "bursty-decode" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Mmpp {
+                on_mean_ns: 1.0e6,
+                idle_mean_ns: 90.0e6,
+                avg_burst: 8,
+            },
+            mix: decode_mix,
+            requests_per_replica: 8 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(0.6e9, 120.0e6, 2.0e9),
+            max_prefill_tokens: None,
+        },
+        "open-prefill" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Poisson { mean_ns: 30.0e6 },
+            mix: prefill_mix,
+            requests_per_replica: 6 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(2.0e9, 150.0e6, 4.0e9),
+            max_prefill_tokens: None,
+        },
+        "closed-prefill" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::ClosedLoop {
+                concurrency: 2,
+                think_ns: 150.0e6,
+            },
+            mix: prefill_mix,
+            requests_per_replica: 6 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(2.0e9, 150.0e6, 4.0e9),
+            max_prefill_tokens: None,
+        },
+        "diurnal-chat" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Diurnal {
+                base_mean_ns: 15.0e6,
+                amplitude: 0.8,
+                period_ns: 200.0e6,
+            },
+            mix: MixSpec::TwoPoint {
+                p_long: 0.3,
+                short: LenClass { prompt: 256, gen: 16 },
+                long: LenClass { prompt: 1024, gen: 32 },
+            },
+            requests_per_replica: 8 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(1.0e9, 120.0e6, 2.0e9),
+            max_prefill_tokens: None,
+        },
+        "long-context" => WorkloadSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Poisson { mean_ns: 40.0e6 },
+            mix: MixSpec::TwoPoint {
+                p_long: 0.5,
+                short: LenClass { prompt: 512, gen: 8 },
+                long: LenClass { prompt: 6144, gen: 16 },
+            },
+            requests_per_replica: 6 * k,
+            routing: Routing::RoundRobin,
+            slo: slo(3.0e9, 150.0e6, 6.0e9),
+            max_prefill_tokens: Some(8192),
+        },
+        _ => return None,
+    };
+    debug_assert!(spec.validate().is_ok());
+    Some(spec)
+}
+
+/// All presets in report order.
+pub fn all_presets(quick: bool) -> Vec<WorkloadSpec> {
+    PRESET_NAMES
+        .iter()
+        .map(|n| preset(n, quick).expect("preset table is closed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_preset_replays_the_pr2_draw_sequence() {
+        // generate() must consume exactly one exponential per request
+        // and nothing else, in request order — the PR-2 coordinator's
+        // sequence.
+        let wl = preset("poisson-balanced", true).unwrap();
+        let dp = 2;
+        let gw = wl.generate(17, dp);
+        assert_eq!(gw.n_requests(), 16);
+        assert!(!gw.is_closed_loop());
+        let mut rng = Rng::new(17);
+        let mut t = 0.0;
+        for (i, &at) in gw.arrivals.iter().enumerate() {
+            t += rng.exponential(20.0e6 / dp as f64);
+            assert_eq!(at, t, "arrival {i}");
+        }
+        assert!(gw
+            .lengths
+            .iter()
+            .all(|c| *c == LenClass { prompt: 512, gen: 8 }));
+    }
+
+    #[test]
+    fn every_preset_generates_and_validates() {
+        for quick in [true, false] {
+            for wl in all_presets(quick) {
+                wl.validate().unwrap();
+                let gw = wl.generate(17, 4);
+                assert_eq!(
+                    gw.n_requests(),
+                    wl.requests_per_replica * 4
+                );
+                assert!(gw.max_prompt() >= 1);
+                assert!(gw.max_total() > gw.max_prompt());
+                if gw.is_closed_loop() {
+                    assert_eq!(gw.think_gaps.len(), gw.n_requests());
+                    assert!(gw.arrivals.is_empty());
+                } else {
+                    assert_eq!(gw.arrivals.len(), gw.n_requests());
+                    assert!(gw.think_gaps.is_empty());
+                }
+                // Identical seeds, identical schedules.
+                let gw2 = wl.generate(17, 4);
+                assert_eq!(gw.arrivals, gw2.arrivals);
+                assert_eq!(gw.think_gaps, gw2.think_gaps);
+                assert_eq!(gw.lengths, gw2.lengths);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_json_round_trips_byte_stably() {
+        for wl in all_presets(true) {
+            let text = wl.to_json().to_string();
+            let parsed =
+                WorkloadSpec::from_json(&Json::parse(&text).unwrap())
+                    .unwrap();
+            assert_eq!(parsed, wl);
+            // Serialize -> parse -> serialize is byte-identical: the
+            // contract that lets scenario files be checked in.
+            assert_eq!(parsed.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_specs_with_pointed_errors() {
+        let base = preset("poisson-balanced", true).unwrap();
+        // Non-positive rate.
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "arrival".into(),
+                Json::parse(r#"{"kind":"poisson","mean_ns":0}"#)
+                    .unwrap(),
+            );
+        }
+        let err = WorkloadSpec::from_json(&j).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("poisson-balanced")
+                && msg.contains("mean_ns"),
+            "must name the workload and the field: {msg}"
+        );
+        // Zero requests.
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("requests_per_replica".into(), Json::from(0usize));
+        }
+        assert!(WorkloadSpec::from_json(&j).is_err());
+        // Token cap below the longest prompt.
+        let mut j = base.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("max_prefill_tokens".into(), Json::from(64usize));
+        }
+        let msg =
+            format!("{:#}", WorkloadSpec::from_json(&j).unwrap_err());
+        assert!(msg.contains("max_prefill_tokens"), "{msg}");
+    }
+
+    #[test]
+    fn resolve_finds_presets_and_rejects_unknown_names() {
+        assert_eq!(
+            WorkloadSpec::resolve("bursty-decode", true).unwrap().name,
+            "bursty-decode"
+        );
+        let err = WorkloadSpec::resolve("mystery-traffic", true)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("poisson-balanced"), "{err}");
+    }
+
+    #[test]
+    fn routing_names_round_trip() {
+        for r in [Routing::RoundRobin, Routing::LeastOutstanding] {
+            assert_eq!(Routing::from_name(r.name()).unwrap(), r);
+        }
+        assert!(Routing::from_name("random").is_err());
+    }
+}

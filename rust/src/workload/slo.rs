@@ -1,0 +1,201 @@
+//! SLO specification and attained-goodput evaluation.
+//!
+//! Serving papers compare TP communication strategies by *goodput* —
+//! the fraction of requests that meet their latency deadlines — not
+//! raw throughput, because under load a faster execution converts
+//! queueing delay into met SLOs nonlinearly. Two deadlines per
+//! request, the standard pair:
+//!
+//! * **TTFT** (`ttft_ns`): arrival to first token (prefill exposure);
+//! * **per-token** (`per_token_ns`): mean inter-token decode latency.
+//!
+//! A request meets the SLO when it meets *both*. Requests whose TTFT
+//! exceeds `abandon_ttft_ns` are counted as **abandoned** — the user
+//! walked away, so every token they were served is wasted work. The
+//! simulator still runs them to completion (abandonment accounting
+//! must not perturb the execution being compared), it just books the
+//! waste.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Per-request latency deadlines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token deadline, ns.
+    pub ttft_ns: f64,
+    /// Mean inter-token decode latency deadline, ns.
+    pub per_token_ns: f64,
+    /// TTFT beyond which the request counts as abandoned, ns.
+    pub abandon_ttft_ns: f64,
+}
+
+impl SloSpec {
+    pub fn validate(&self) -> Result<()> {
+        for (name, x) in [
+            ("ttft_ns", self.ttft_ns),
+            ("per_token_ns", self.per_token_ns),
+            ("abandon_ttft_ns", self.abandon_ttft_ns),
+        ] {
+            if !x.is_finite() || x <= 0.0 {
+                bail!("slo.{name} must be finite and > 0, got {x}");
+            }
+        }
+        if self.abandon_ttft_ns < self.ttft_ns {
+            bail!(
+                "slo.abandon_ttft_ns ({}) must be >= slo.ttft_ns ({}): \
+                 a request cannot be abandoned before it misses its \
+                 deadline",
+                self.abandon_ttft_ns,
+                self.ttft_ns
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("ttft_ns", Json::from(self.ttft_ns)),
+            ("per_token_ns", Json::from(self.per_token_ns)),
+            ("abandon_ttft_ns", Json::from(self.abandon_ttft_ns)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SloSpec> {
+        let spec = SloSpec {
+            ttft_ns: j.get("ttft_ns")?.as_f64()?,
+            per_token_ns: j.get("per_token_ns")?.as_f64()?,
+            abandon_ttft_ns: j.get("abandon_ttft_ns")?.as_f64()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Attained-goodput accounting over one run's finished requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloReport {
+    /// Requests evaluated.
+    pub requests: usize,
+    /// Requests meeting the TTFT deadline.
+    pub met_ttft: usize,
+    /// Requests meeting the per-token deadline.
+    pub met_per_token: usize,
+    /// Requests meeting both (the goodput numerator).
+    pub met_both: usize,
+    /// Requests whose TTFT exceeded the abandonment threshold.
+    pub abandoned: usize,
+    /// Tokens generated for abandoned requests (wasted work).
+    pub wasted_tokens: usize,
+}
+
+impl SloReport {
+    /// Fold one finished request into the accounting.
+    pub fn observe(
+        &mut self,
+        slo: &SloSpec,
+        ttft_ns: f64,
+        per_token_ns: f64,
+        generated_tokens: usize,
+    ) {
+        self.requests += 1;
+        let a = ttft_ns <= slo.ttft_ns;
+        let b = per_token_ns <= slo.per_token_ns;
+        self.met_ttft += a as usize;
+        self.met_per_token += b as usize;
+        self.met_both += (a && b) as usize;
+        if ttft_ns > slo.abandon_ttft_ns {
+            self.abandoned += 1;
+            self.wasted_tokens += generated_tokens;
+        }
+    }
+
+    /// Attained goodput: the fraction of requests meeting both SLOs.
+    pub fn goodput(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.met_both as f64 / self.requests as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("goodput", Json::from(self.goodput())),
+            ("met_ttft", Json::from(self.met_ttft)),
+            ("met_per_token", Json::from(self.met_per_token)),
+            ("met_both", Json::from(self.met_both)),
+            ("abandoned", Json::from(self.abandoned)),
+            ("wasted_tokens", Json::from(self.wasted_tokens)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SLO: SloSpec = SloSpec {
+        ttft_ns: 100.0,
+        per_token_ns: 10.0,
+        abandon_ttft_ns: 300.0,
+    };
+
+    #[test]
+    fn goodput_requires_both_deadlines() {
+        let mut r = SloReport::default();
+        r.observe(&SLO, 50.0, 5.0, 8); // meets both
+        r.observe(&SLO, 50.0, 50.0, 8); // ttft only
+        r.observe(&SLO, 200.0, 5.0, 8); // per-token only
+        r.observe(&SLO, 400.0, 50.0, 8); // neither, abandoned
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.met_ttft, 2);
+        assert_eq!(r.met_per_token, 2);
+        assert_eq!(r.met_both, 1);
+        assert_eq!(r.goodput(), 0.25);
+        assert_eq!(r.abandoned, 1);
+        assert_eq!(r.wasted_tokens, 8);
+    }
+
+    #[test]
+    fn deadline_boundaries_are_inclusive() {
+        let mut r = SloReport::default();
+        r.observe(&SLO, 100.0, 10.0, 1);
+        assert_eq!(r.met_both, 1);
+        // Exactly at the abandonment threshold is still served.
+        r.observe(&SLO, 300.0, 10.0, 1);
+        assert_eq!(r.abandoned, 0);
+    }
+
+    #[test]
+    fn empty_report_has_zero_goodput() {
+        assert_eq!(SloReport::default().goodput(), 0.0);
+    }
+
+    #[test]
+    fn validation_rejects_nonfinite_and_inverted_deadlines() {
+        for bad in [
+            SloSpec { ttft_ns: f64::NAN, ..SLO },
+            SloSpec { per_token_ns: 0.0, ..SLO },
+            SloSpec { abandon_ttft_ns: -1.0, ..SLO },
+            SloSpec { abandon_ttft_ns: 50.0, ..SLO }, // < ttft
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+        assert!(SLO.validate().is_ok());
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = Json::parse(&SLO.to_json().to_string()).unwrap();
+        assert_eq!(SloSpec::from_json(&j).unwrap(), SLO);
+        let mut r = SloReport::default();
+        r.observe(&SLO, 50.0, 5.0, 8);
+        let rj = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(rj.get("goodput").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            rj.get("met_both").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+}

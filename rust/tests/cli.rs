@@ -194,6 +194,194 @@ fn simulate_scale_topo_filter() {
 }
 
 #[test]
+fn simulate_scale_workload_flag_swaps_the_request_source() {
+    // A preset by name: the report is marked with workload_filter and
+    // carries the spec + SLO accounting.
+    let dir = tmp_dir("workload_flag");
+    let path = dir.join("preset.json");
+    let out = flux_bin()
+        .args([
+            "simulate", "--scale", "--quick", "--json",
+            "--workload", "bursty-decode",
+            "--topo", "1-node-tp8",
+            "--out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = flux::util::json::Json::parse(
+        &std::fs::read_to_string(&path).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        doc.get("workload_filter").unwrap().as_str().unwrap(),
+        "bursty-decode"
+    );
+    let t = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+    let wl = t.get("workload").unwrap();
+    assert_eq!(
+        wl.get("arrival").unwrap().get("kind").unwrap().as_str().unwrap(),
+        "mmpp"
+    );
+    assert!(t.get("flux").unwrap().get("slo").unwrap().opt("goodput").is_some());
+
+    // The checked-in example scenario file drives the same path.
+    let file = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts/workload_bursty_chat.json"
+    );
+    let path2 = dir.join("file.json");
+    let out = flux_bin()
+        .args([
+            "simulate", "--scale", "--quick", "--json",
+            "--workload", file,
+            "--topo", "1-node-tp8",
+            "--out",
+        ])
+        .arg(&path2)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = flux::util::json::Json::parse(
+        &std::fs::read_to_string(&path2).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        doc.get("workload_filter").unwrap().as_str().unwrap(),
+        "bursty-chat-example"
+    );
+
+    // Unknown names are rejected with the preset list.
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--workload", "mystery-traffic"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr)
+        .contains("poisson-balanced"));
+
+    // A file with a non-positive rate is rejected at parse time with a
+    // pointed error, not a mid-simulation panic.
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        r#"{"name": "bad", "arrival": {"kind": "poisson",
+            "mean_ns": -5}, "mix": {"kind": "fixed", "prompt": 8,
+            "gen": 2}, "requests_per_replica": 2}"#,
+    )
+    .unwrap();
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--workload"])
+        .arg(&bad)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("mean_ns") && err.contains("finite"),
+        "pointed parse error expected, got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_workloads_json_covers_the_preset_matrix() {
+    // Acceptance: every preset on every topology, Flux never losing to
+    // the decoupled execution on NVLink clusters. Byte-stability
+    // across reruns is covered by the in-crate report test and CI's
+    // release-mode `cmp` of BENCH_3.json, so one (debug-mode) run
+    // suffices here.
+    let dir = tmp_dir("sweep");
+    let path = dir.join("BENCH_sweep.json");
+    let out = flux_bin()
+        .args(["sweep-workloads", "--json", "--quick", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let a = std::fs::read_to_string(&path).unwrap();
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::SWEEP_SCHEMA
+    );
+    let presets = doc.get("presets").unwrap().as_arr().unwrap();
+    assert_eq!(presets.len(), flux::workload::PRESET_NAMES.len());
+    for p in presets {
+        for t in p.get("topologies").unwrap().as_arr().unwrap() {
+            let nvlink = t
+                .get("cluster")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains("NVLink");
+            let speedup = t.get("speedup").unwrap().as_f64().unwrap();
+            if nvlink {
+                assert!(
+                    speedup >= 1.0,
+                    "{} on {}: {speedup}",
+                    p.get("name").unwrap().as_str().unwrap(),
+                    t.get("topology").unwrap().as_str().unwrap()
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_flag_writes_byte_stable_chrome_traces() {
+    let dir = tmp_dir("trace");
+    let run = |cmd: &str, name: &str| -> String {
+        let path = dir.join(name);
+        let out = flux_bin()
+            .args([
+                "simulate", cmd, "--quick",
+                "--topo",
+                if cmd == "--scale" { "1-node-tp8" } else {
+                    "nvlink-dp2-pp8-tp8"
+                },
+                "--trace",
+            ])
+            .arg(&path)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{cmd}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&path).unwrap()
+    };
+    for cmd in ["--scale", "--train"] {
+        let a = run(cmd, "a.json");
+        let b = run(cmd, "b.json");
+        assert_eq!(a, b, "{cmd} trace must be byte-stable");
+        let doc = flux::util::json::Json::parse(&a).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty(), "{cmd} trace has events");
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(["X", "i", "M"].contains(&ph), "{cmd}: ph {ph}");
+        }
+    }
+    // A whole-sweep trace would interleave topologies: rejected.
+    let out = flux_bin()
+        .args(["simulate", "--scale", "--quick", "--trace"])
+        .arg(dir.join("no.json"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--topo"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn simulate_train_json_is_reproducible_byte_for_byte() {
     // Acceptance: the event-driven training report is deterministic,
     // covers every topology, and the 128-GPU PCIe speedup lands in the

@@ -143,6 +143,7 @@ fn batcher_driven_serving_loop_completes() {
         max_decode_batch: eng.b,
         max_prompt: eng.s,
         max_seq: eng.smax,
+        ..Default::default()
     });
     let mut kv = KvCacheManager::new(64, 16);
     for i in 0..3u64 {

@@ -51,6 +51,7 @@ fn decode_round_robin_never_starves_past_the_cap() {
         max_decode_batch: 2,
         max_prompt: 64,
         max_seq: 128,
+        ..Default::default()
     });
     let mut kv = KvCacheManager::new(64, 16);
     let n = 5u64;
