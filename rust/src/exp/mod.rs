@@ -1,0 +1,130 @@
+//! The experiment layer: declarative [`Scenario`]s executed by a
+//! parallel, deterministic [`Runner`].
+//!
+//! Before this layer, the four end-to-end paths (`simulate --scale`,
+//! `simulate --train`, `sweep-workloads`, `bench`) each hand-wired
+//! topology x workload x method selection, report emission and CLI
+//! plumbing. Now:
+//!
+//! * a [`Scenario`] *names* an experiment (mode, topology filter,
+//!   workload, method set) and round-trips through JSON, so a new
+//!   experiment is a checked-in `artifacts/scenario_*.json` file plus
+//!   at most one registry line;
+//! * [`Runner::run_matrix`] is the single execution substrate: every
+//!   independent cell of the matrix runs on a `std::thread` worker and
+//!   results merge in fixed scenario order, so every report is
+//!   **byte-identical** to a sequential run at any `--threads` count;
+//! * [`execute`] is the one CLI back end: it builds the report
+//!   document through [`crate::report`], prints or writes it, and
+//!   optionally re-simulates a single-topology scenario with DES
+//!   tracing — `main.rs` only parses flags.
+
+pub mod runner;
+pub mod scenario;
+
+pub use runner::{default_threads, Runner};
+pub use scenario::{Mode, Scenario, WorkloadRef};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::report;
+use crate::sim::trace::Trace;
+use crate::util::json::Json;
+
+/// Output plumbing shared by every experiment invocation.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOpts {
+    /// Write the JSON document instead of printing the table.
+    pub json: bool,
+    /// Report path (`--out`; implies `json` at the CLI).
+    pub out: Option<PathBuf>,
+    /// Chrome-trace path (single-topology scenarios only).
+    pub trace: Option<PathBuf>,
+    /// Worker threads for the cell matrix (`None` = one per core).
+    pub threads: Option<usize>,
+}
+
+/// Execute a scenario end to end: build the report document (cells in
+/// parallel), print or write it, then optionally capture the DES
+/// trace of the single selected topology.
+pub fn execute(sc: &Scenario, opts: &ExecOpts) -> Result<()> {
+    if opts.trace.is_some() {
+        // Check up front: a trace of a whole sweep would interleave
+        // topologies into one meaningless timeline.
+        ensure!(
+            sc.topo_count()? == 1,
+            "--trace needs --topo <name> (or a single-topology \
+             scenario): a trace is one topology's event stream"
+        );
+    }
+    let runner = Runner::from_flag(opts.threads);
+    match sc.mode {
+        Mode::Serve => {
+            let doc = report::scale_doc_scenario(sc, &runner)?;
+            emit(&doc, opts, report::print_scale, "scale")?;
+        }
+        Mode::Train => {
+            let doc = report::train_doc_scenario(sc, &runner)?;
+            emit(&doc, opts, report::print_train, "train")?;
+        }
+    }
+    if let Some(path) = &opts.trace {
+        write_trace(sc, path)?;
+    }
+    Ok(())
+}
+
+/// `flux sweep-workloads`: every workload preset on every serving
+/// topology through the same runner.
+pub fn execute_sweep(quick: bool, opts: &ExecOpts) -> Result<()> {
+    let runner = Runner::from_flag(opts.threads);
+    let doc = report::sweep_doc_with(quick, &runner)?;
+    emit(&doc, opts, report::print_sweep, "workload sweep")
+}
+
+fn emit(
+    doc: &Json,
+    opts: &ExecOpts,
+    print: fn(&Json) -> Result<()>,
+    what: &str,
+) -> Result<()> {
+    if opts.json || opts.out.is_some() {
+        let path = report::write_doc(doc, opts.out.as_deref())?;
+        println!("wrote {what} report to {}", path.display());
+    } else {
+        print(doc)?;
+    }
+    Ok(())
+}
+
+/// Capture the DES stream of a single-topology scenario as a chrome
+/// trace. Deliberately re-simulates the seeded comparison rather than
+/// threading a `Trace` through the report emitters: the trace is
+/// identical either way and the report path stays untangled from
+/// tracing. The trace always records the mode's full standard
+/// comparison (decoupled+flux / megatron+te+flux), independent of the
+/// scenario's method set.
+fn write_trace(sc: &Scenario, path: &Path) -> Result<()> {
+    let mut trace = Trace::new();
+    match sc.mode {
+        Mode::Serve => {
+            let cells = sc.serve_cells()?;
+            crate::serving::scale::compare_scale_traced(
+                &cells[0], &mut trace,
+            )?;
+        }
+        Mode::Train => {
+            let cells = sc.train_cells()?;
+            crate::training::compare_train_traced(&cells[0], &mut trace)?;
+        }
+    }
+    trace.write(path)?;
+    println!(
+        "wrote chrome trace ({} events) to {}",
+        trace.len(),
+        path.display()
+    );
+    Ok(())
+}

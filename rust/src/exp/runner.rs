@@ -1,0 +1,204 @@
+//! Deterministic parallel execution of independent experiment cells.
+//!
+//! Every cell of the method x topology x workload matrix is a seeded,
+//! self-contained DES (or op-level) run: cells share no mutable state,
+//! so they can execute on different threads and still produce the
+//! exact f64s a sequential sweep produces. [`Runner::run_matrix`]
+//! exploits that: `std::thread` workers (no external thread-pool
+//! dependency) claim cells off an atomic counter, and results are
+//! merged back **in input order** — so every report stays
+//! byte-identical to the single-threaded emission no matter how the
+//! OS schedules the workers. The flux-scale-v2 / flux-train-v1 /
+//! flux-sweep-v1 / flux-bench-v1 compat tests are the safety net, and
+//! `tests/exp.rs` pins parallel == sequential across thread counts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// One result slot per cell, filled by whichever worker ran the cell.
+type Slot<T> = Mutex<Option<Result<T>>>;
+
+/// Executes experiment cells, in parallel when configured with more
+/// than one worker. The worker count never changes *what* is computed
+/// — only the wall-clock time of the matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct Runner {
+    threads: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner::new()
+    }
+}
+
+impl Runner {
+    /// One worker per core the OS reports (`--threads <n>` overrides;
+    /// 1 forces the sequential path).
+    pub fn new() -> Runner {
+        Runner::with_threads(default_threads())
+    }
+
+    pub fn with_threads(threads: usize) -> Runner {
+        Runner { threads: threads.max(1) }
+    }
+
+    /// Resolve the optional `--threads` CLI flag.
+    pub fn from_flag(threads: Option<usize>) -> Runner {
+        match threads {
+            Some(n) => Runner::with_threads(n),
+            None => Runner::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over the `cells` x `per` cross product at job grain
+    /// (every pair is one worker job), handing back one `Vec<T>` per
+    /// cell in cell order, `per` order within. The shared
+    /// orchestration of the scale and train documents: even a
+    /// single-cell scenario spreads its method set across workers.
+    pub fn run_product<C, M, T>(
+        &self,
+        cells: &[C],
+        per: &[M],
+        f: impl Fn(&C, &M) -> Result<T> + Sync,
+    ) -> Result<Vec<Vec<T>>>
+    where
+        C: Sync,
+        M: Sync,
+        T: Send,
+    {
+        let jobs: Vec<(usize, usize)> = (0..cells.len())
+            .flat_map(|i| (0..per.len()).map(move |j| (i, j)))
+            .collect();
+        let flat =
+            self.run_matrix(&jobs, |&(i, j)| f(&cells[i], &per[j]))?;
+        let mut it = flat.into_iter();
+        let mut out = Vec::with_capacity(cells.len());
+        for _ in 0..cells.len() {
+            out.push(it.by_ref().take(per.len()).collect());
+        }
+        Ok(out)
+    }
+
+    /// Map `f` over `cells`, in parallel when more than one worker is
+    /// configured. Results come back in cell order regardless of which
+    /// worker ran which cell, and on failure the first failing cell
+    /// **by input order** wins — errors are as deterministic as
+    /// successes.
+    pub fn run_matrix<C, T>(
+        &self,
+        cells: &[C],
+        f: impl Fn(&C) -> Result<T> + Sync,
+    ) -> Result<Vec<T>>
+    where
+        C: Sync,
+        T: Send,
+    {
+        let workers = self.threads.min(cells.len());
+        if workers <= 1 {
+            return cells.iter().map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Slot<T>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let out = f(&cells[i]);
+                    *slots[i].lock().expect("cell slot poisoned") =
+                        Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("cell slot poisoned")
+                    .expect("every cell below len is claimed exactly once")
+            })
+            .collect()
+    }
+}
+
+/// Default worker count: one per core the OS reports.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_cell_order() {
+        let cells: Vec<usize> = (0..33).collect();
+        for threads in [1, 2, 8, 64] {
+            let out = Runner::with_threads(threads)
+                .run_matrix(&cells, |&i| Ok(i * i))
+                .unwrap();
+            let want: Vec<usize> = cells.iter().map(|i| i * i).collect();
+            assert_eq!(out, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn first_failing_cell_by_input_order_wins() {
+        let cells: Vec<usize> = (0..64).collect();
+        for threads in [1, 7] {
+            let err = Runner::with_threads(threads)
+                .run_matrix(&cells, |&i| {
+                    if i >= 10 {
+                        anyhow::bail!("cell {i} failed")
+                    }
+                    Ok(i)
+                })
+                .unwrap_err();
+            assert_eq!(err.to_string(), "cell 10 failed", "{threads}");
+        }
+    }
+
+    #[test]
+    fn run_product_chunks_per_cell_in_order() {
+        let cells = [10usize, 20, 30];
+        let per = ["a", "b"];
+        for threads in [1, 4] {
+            let out = Runner::with_threads(threads)
+                .run_product(&cells, &per, |&c, &m| {
+                    Ok(format!("{c}{m}"))
+                })
+                .unwrap();
+            assert_eq!(
+                out,
+                vec![
+                    vec!["10a".to_string(), "10b".to_string()],
+                    vec!["20a".to_string(), "20b".to_string()],
+                    vec!["30a".to_string(), "30b".to_string()],
+                ],
+                "{threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_sequential_and_empty_is_fine() {
+        let r = Runner::with_threads(0);
+        assert_eq!(r.threads(), 1);
+        let out: Vec<usize> =
+            r.run_matrix(&Vec::<usize>::new(), |&i| Ok(i)).unwrap();
+        assert!(out.is_empty());
+        assert!(Runner::from_flag(None).threads() >= 1);
+        assert_eq!(Runner::from_flag(Some(3)).threads(), 3);
+        assert!(default_threads() >= 1);
+    }
+}

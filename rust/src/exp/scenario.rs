@@ -1,0 +1,631 @@
+//! Declarative experiment scenarios.
+//!
+//! A [`Scenario`] is pure data: a mode (serve/train), a topology
+//! filter over the [`crate::cost::arch`] registries, a request source
+//! (serve mode: a workload preset name or an inline
+//! [`WorkloadSpec`]), and an overlap [`Method`] set. It
+//! parses/serializes through `util/json` exactly like `WorkloadSpec`,
+//! so a scenario is a checked-in JSON file (`flux scenario
+//! artifacts/scenario_*.json`) instead of a 5-file code edit; the
+//! `simulate --scale` / `--train` CLI paths build anonymous scenarios
+//! from their flags and go through the same expansion.
+//!
+//! Expansion is deliberately dumb: [`Scenario::serve_cells`] /
+//! [`Scenario::train_cells`] produce the concrete per-topology DES
+//! scenarios in **topology-registry order** (the order every report
+//! has always emitted), and the [`crate::exp::Runner`] executes them
+//! — the single place a scenario becomes a DES run.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cost::arch::{
+    ScaleTopology, TrainTopology, ALL_SCALE_TOPOLOGIES,
+    ALL_TRAIN_TOPOLOGIES,
+};
+use crate::overlap::Method;
+use crate::serving::scale::ScaleScenario;
+use crate::training::TrainScenario;
+use crate::util::json::{obj, Json};
+use crate::workload::{self, WorkloadSpec};
+
+/// Which end-to-end path a scenario drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Multi-node TP x DP serving (`flux-scale-v2` documents).
+    Serve,
+    /// Event-driven DP x PP x TP training (`flux-train-v1` documents).
+    Train,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Serve => "serve",
+            Mode::Train => "train",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Mode> {
+        match name {
+            "serve" => Ok(Mode::Serve),
+            "train" => Ok(Mode::Train),
+            _ => bail!("unknown mode {name:?} (serve|train)"),
+        }
+    }
+}
+
+/// The request source of a serve scenario: a preset by name (resolved
+/// at expansion time, so `quick` picks the preset's CI-sized variant)
+/// or an inline spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadRef {
+    Preset(String),
+    Inline(WorkloadSpec),
+}
+
+/// One declarative experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Scenario files carry a name (stamped into the report as
+    /// `"scenario"`); CLI-built anonymous scenarios leave it empty and
+    /// the report stays exactly its historical shape.
+    pub name: String,
+    pub mode: Mode,
+    /// Topology filter (registry names, any spelling
+    /// [`ScaleTopology::by_name`] accepts); `None` runs every topology
+    /// of the mode and the report carries no `topo_filter`.
+    pub topos: Option<Vec<String>>,
+    /// Serve-mode request source; `None` = each topology's default
+    /// preset (quick or full per [`Scenario::quick`]). Note `quick`
+    /// resizes *presets* only — an inline spec carries explicit counts
+    /// and runs as written (the historical `--workload file.json
+    /// --quick` semantics), while the document's `quick` flag keeps
+    /// recording the requested trim.
+    pub workload: Option<WorkloadRef>,
+    /// Overlap methods to run; `None` = the mode's default set
+    /// ([`Method::SERVE_SET`] / [`Method::TRAIN_SET`]).
+    pub methods: Option<Vec<Method>>,
+    pub quick: bool,
+}
+
+impl Scenario {
+    /// The `simulate --scale` CLI invocation as an anonymous scenario.
+    pub fn serve(
+        only: Option<&'static ScaleTopology>,
+        workload: Option<WorkloadSpec>,
+        quick: bool,
+    ) -> Scenario {
+        Scenario {
+            name: String::new(),
+            mode: Mode::Serve,
+            topos: only.map(|t| vec![t.name.to_string()]),
+            workload: workload.map(WorkloadRef::Inline),
+            methods: None,
+            quick,
+        }
+    }
+
+    /// The `simulate --train` CLI invocation as an anonymous scenario.
+    pub fn train(
+        only: Option<&'static TrainTopology>,
+        quick: bool,
+    ) -> Scenario {
+        Scenario {
+            name: String::new(),
+            mode: Mode::Train,
+            topos: only.map(|t| vec![t.name.to_string()]),
+            workload: None,
+            methods: None,
+            quick,
+        }
+    }
+
+    /// [`Scenario::serve`] with the topology still a CLI string;
+    /// unknown names fail with the registry listing.
+    pub fn serve_cli(
+        topo: Option<&str>,
+        workload: Option<WorkloadSpec>,
+        quick: bool,
+    ) -> Result<Scenario> {
+        let only = match topo {
+            Some(name) => Some(scale_topo(name)?),
+            None => None,
+        };
+        Ok(Scenario::serve(only, workload, quick))
+    }
+
+    /// [`Scenario::train`] with the topology still a CLI string.
+    pub fn train_cli(topo: Option<&str>, quick: bool) -> Result<Scenario> {
+        let only = match topo {
+            Some(name) => Some(train_topo(name)?),
+            None => None,
+        };
+        Ok(Scenario::train(only, quick))
+    }
+
+    /// The method set to execute (mode default when unspecified).
+    pub fn method_set(&self) -> Vec<Method> {
+        match &self.methods {
+            Some(ms) => ms.clone(),
+            None => match self.mode {
+                Mode::Serve => Method::SERVE_SET.to_vec(),
+                Mode::Train => Method::TRAIN_SET.to_vec(),
+            },
+        }
+    }
+
+    /// The serve-mode topology selection, in `ALL_SCALE_TOPOLOGIES`
+    /// order (report order is registry order regardless of how the
+    /// filter lists names).
+    pub fn scale_topos(&self) -> Result<Vec<&'static ScaleTopology>> {
+        ensure!(
+            self.mode == Mode::Serve,
+            "scenario {:?}: not a serve scenario",
+            self.name
+        );
+        match &self.topos {
+            None => Ok(ALL_SCALE_TOPOLOGIES.to_vec()),
+            Some(filter) => resolve_filter(
+                &self.name,
+                filter,
+                &ALL_SCALE_TOPOLOGIES,
+                scale_topo,
+                |t| t.name,
+            ),
+        }
+    }
+
+    /// The train-mode topology selection, in `ALL_TRAIN_TOPOLOGIES`
+    /// order.
+    pub fn train_topos(&self) -> Result<Vec<&'static TrainTopology>> {
+        ensure!(
+            self.mode == Mode::Train,
+            "scenario {:?}: not a train scenario",
+            self.name
+        );
+        match &self.topos {
+            None => Ok(ALL_TRAIN_TOPOLOGIES.to_vec()),
+            Some(filter) => resolve_filter(
+                &self.name,
+                filter,
+                &ALL_TRAIN_TOPOLOGIES,
+                train_topo,
+                |t| t.name,
+            ),
+        }
+    }
+
+    /// How many topologies the scenario selects (any mode).
+    pub fn topo_count(&self) -> Result<usize> {
+        Ok(match self.mode {
+            Mode::Serve => self.scale_topos()?.len(),
+            Mode::Train => self.train_topos()?.len(),
+        })
+    }
+
+    /// Canonical registry names of the topology filter, `None` when
+    /// the scenario runs every topology (reports emit `topo_filter`
+    /// only for filtered runs — the trajectory-diffing contract).
+    pub fn topo_filter_names(&self) -> Result<Option<Vec<&'static str>>> {
+        if self.topos.is_none() {
+            return Ok(None);
+        }
+        Ok(Some(match self.mode {
+            Mode::Serve => {
+                self.scale_topos()?.iter().map(|t| t.name).collect()
+            }
+            Mode::Train => {
+                self.train_topos()?.iter().map(|t| t.name).collect()
+            }
+        }))
+    }
+
+    /// The `workload_filter` value the report carries (`None` when the
+    /// scenario runs each topology's default workload).
+    pub fn workload_name(&self) -> Option<&str> {
+        match &self.workload {
+            Some(WorkloadRef::Preset(n)) => Some(n),
+            Some(WorkloadRef::Inline(s)) => Some(&s.name),
+            None => None,
+        }
+    }
+
+    /// Resolve the request source to a concrete spec (serve mode);
+    /// `None` means "each topology's default preset".
+    fn resolved_workload(&self) -> Result<Option<WorkloadSpec>> {
+        match &self.workload {
+            Some(WorkloadRef::Preset(name)) => Ok(Some(
+                workload::preset(name, self.quick).ok_or_else(|| {
+                    anyhow!(
+                        "scenario {:?}: unknown workload preset {name:?} \
+                         (one of: {})",
+                        self.name,
+                        workload::PRESET_NAMES.join(" | ")
+                    )
+                })?,
+            )),
+            Some(WorkloadRef::Inline(spec)) => Ok(Some(spec.clone())),
+            None => Ok(None),
+        }
+    }
+
+    /// Expand into the per-topology serving scenarios, registry order.
+    pub fn serve_cells(&self) -> Result<Vec<ScaleScenario>> {
+        let wl = self.resolved_workload()?;
+        Ok(self
+            .scale_topos()?
+            .into_iter()
+            .map(|topo| match &wl {
+                Some(wl) => ScaleScenario::with_workload(topo, wl.clone()),
+                None if self.quick => ScaleScenario::quick(topo),
+                None => ScaleScenario::full(topo),
+            })
+            .collect())
+    }
+
+    /// Expand into the per-topology training scenarios, registry order.
+    pub fn train_cells(&self) -> Result<Vec<TrainScenario>> {
+        Ok(self
+            .train_topos()?
+            .into_iter()
+            .map(|topo| {
+                if self.quick {
+                    TrainScenario::quick(topo)
+                } else {
+                    TrainScenario::full(topo)
+                }
+            })
+            .collect())
+    }
+
+    /// Check everything a scenario file can get wrong: mode/workload
+    /// consistency, method-set shape, topology and preset names.
+    pub fn validate(&self) -> Result<()> {
+        if self.mode == Mode::Train {
+            ensure!(
+                self.workload.is_none(),
+                "scenario {:?}: train mode takes no workload",
+                self.name
+            );
+        }
+        let ms = self.method_set();
+        ensure!(
+            !ms.is_empty(),
+            "scenario {:?}: empty method set",
+            self.name
+        );
+        ensure!(
+            ms.contains(&Method::NonOverlap),
+            "scenario {:?}: the method set must include \"baseline\" \
+             (the reference the speedup and efficiency fields divide by)",
+            self.name
+        );
+        match self.mode {
+            // The serve table/speedup fields read the decoupled and
+            // flux blocks; the train table reads all three. Scenario
+            // sets may only extend these, never drop them.
+            Mode::Serve => ensure!(
+                ms.contains(&Method::Flux),
+                "scenario {:?}: serve method sets must include \
+                 \"flux\" (the table and speedup fields read it)",
+                self.name
+            ),
+            Mode::Train => {
+                for m in Method::TRAIN_SET {
+                    ensure!(
+                        ms.contains(&m),
+                        "scenario {:?}: train method sets must \
+                         include {:?} (the table reads all three)",
+                        self.name,
+                        m.key()
+                    );
+                }
+            }
+        }
+        for (i, m) in ms.iter().enumerate() {
+            ensure!(
+                !ms[..i].contains(m),
+                "scenario {:?}: duplicate method {:?}",
+                self.name,
+                m.key()
+            );
+        }
+        match self.mode {
+            Mode::Serve => {
+                self.scale_topos()?;
+                self.resolved_workload()?;
+            }
+            Mode::Train => {
+                self.train_topos()?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("mode", Json::from(self.mode.name())),
+            ("quick", Json::from(self.quick)),
+        ];
+        if let Some(topos) = &self.topos {
+            fields.push((
+                "topologies",
+                Json::Arr(
+                    topos.iter().map(|t| Json::from(t.as_str())).collect(),
+                ),
+            ));
+        }
+        match &self.workload {
+            Some(WorkloadRef::Preset(n)) => {
+                fields.push(("workload", Json::from(n.as_str())));
+            }
+            Some(WorkloadRef::Inline(s)) => {
+                fields.push(("workload", s.to_json()));
+            }
+            None => {}
+        }
+        if let Some(ms) = &self.methods {
+            fields.push((
+                "methods",
+                Json::Arr(ms.iter().map(|m| Json::from(m.key())).collect()),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// Parse (and validate) a scenario document. Bad modes, methods,
+    /// topology and preset names are rejected here with pointed errors
+    /// instead of surfacing mid-run.
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let name = j.get("name")?.as_str()?.to_string();
+        ensure!(!name.is_empty(), "scenario name must be non-empty");
+        let ctx = || format!("scenario {name:?}");
+        let sc = Scenario {
+            mode: Mode::from_name(j.get("mode")?.as_str()?)
+                .with_context(ctx)?,
+            quick: match j.opt("quick") {
+                Some(q) => q.as_bool().with_context(ctx)?,
+                None => false,
+            },
+            topos: match j.opt("topologies") {
+                Some(t) => {
+                    let mut names = Vec::new();
+                    for x in t.as_arr().with_context(ctx)? {
+                        names.push(
+                            x.as_str().with_context(ctx)?.to_string(),
+                        );
+                    }
+                    Some(names)
+                }
+                None => None,
+            },
+            workload: match j.opt("workload") {
+                Some(Json::Str(s)) => Some(WorkloadRef::Preset(s.clone())),
+                Some(w) => Some(WorkloadRef::Inline(
+                    WorkloadSpec::from_json(w).with_context(ctx)?,
+                )),
+                None => None,
+            },
+            methods: match j.opt("methods") {
+                Some(ms) => {
+                    let mut out = Vec::new();
+                    for m in ms.as_arr().with_context(ctx)? {
+                        let key = m.as_str().with_context(ctx)?;
+                        out.push(Method::by_key(key).ok_or_else(|| {
+                            anyhow!(
+                                "{}: unknown method {key:?} (one of: {})",
+                                ctx(),
+                                Method::keys().join(" | ")
+                            )
+                        })?);
+                    }
+                    Some(out)
+                }
+                None => None,
+            },
+            name,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Parse a scenario file from disk.
+    pub fn load(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading scenario file {}", path.display())
+        })?;
+        let j = Json::parse(&text).with_context(|| {
+            format!("parsing scenario file {}", path.display())
+        })?;
+        Scenario::from_json(&j).with_context(|| {
+            format!("validating scenario file {}", path.display())
+        })
+    }
+}
+
+/// Resolve a topology filter against one registry: every name must
+/// look up, duplicates collapse, and the selection comes back in
+/// **registry order** (the order every report has always emitted),
+/// not filter order.
+fn resolve_filter<T>(
+    scenario: &str,
+    filter: &[String],
+    all: &[&'static T],
+    by_name: impl Fn(&str) -> Result<&'static T>,
+    name_of: impl Fn(&'static T) -> &'static str,
+) -> Result<Vec<&'static T>> {
+    ensure!(
+        !filter.is_empty(),
+        "scenario {scenario:?}: empty topology filter"
+    );
+    let mut picked: Vec<&'static T> = Vec::new();
+    for name in filter {
+        let t = by_name(name)
+            .with_context(|| format!("scenario {scenario:?}"))?;
+        if !picked.iter().any(|p| name_of(p) == name_of(t)) {
+            picked.push(t);
+        }
+    }
+    Ok(all
+        .iter()
+        .copied()
+        .filter(|t| picked.iter().any(|p| name_of(p) == name_of(*t)))
+        .collect())
+}
+
+fn scale_topo(name: &str) -> Result<&'static ScaleTopology> {
+    ScaleTopology::by_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown topology {name:?}; one of: {}",
+            ALL_SCALE_TOPOLOGIES
+                .iter()
+                .map(|t| t.name)
+                .collect::<Vec<_>>()
+                .join(" | ")
+        )
+    })
+}
+
+fn train_topo(name: &str) -> Result<&'static TrainTopology> {
+    TrainTopology::by_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown topology {name:?}; one of: {}",
+            ALL_TRAIN_TOPOLOGIES
+                .iter()
+                .map(|t| t.name)
+                .collect::<Vec<_>>()
+                .join(" | ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::{SCALE_TP8, TRAIN_PCIE_128};
+
+    fn named() -> Scenario {
+        Scenario {
+            name: "demo".into(),
+            mode: Mode::Serve,
+            topos: Some(vec!["1-node-tp8".into()]),
+            workload: Some(WorkloadRef::Preset("bursty-decode".into())),
+            methods: Some(vec![
+                Method::NonOverlap,
+                Method::Medium,
+                Method::Flux,
+            ]),
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_byte_stably() {
+        for sc in [
+            named(),
+            Scenario {
+                name: "inline".into(),
+                workload: Some(WorkloadRef::Inline(
+                    crate::workload::preset("steady-decode", true).unwrap(),
+                )),
+                topos: None,
+                methods: None,
+                ..named()
+            },
+            Scenario {
+                name: "train".into(),
+                mode: Mode::Train,
+                topos: Some(vec![TRAIN_PCIE_128.name.to_string()]),
+                workload: None,
+                methods: None,
+                quick: false,
+            },
+        ] {
+            let text = sc.to_json().to_string();
+            let parsed =
+                Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, sc);
+            assert_eq!(parsed.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn cells_expand_in_registry_order_with_quick_sizing() {
+        let all = Scenario::serve(None, None, true);
+        let cells = all.serve_cells().unwrap();
+        assert_eq!(cells.len(), ALL_SCALE_TOPOLOGIES.len());
+        for (cell, topo) in cells.iter().zip(ALL_SCALE_TOPOLOGIES) {
+            assert_eq!(cell.topo.name, topo.name);
+            assert_eq!(cell.workload.name, "poisson-balanced");
+        }
+        // Filter: one topology, preset resolved at the quick size.
+        let one = named();
+        let cells = one.serve_cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].topo.name, SCALE_TP8.name);
+        assert_eq!(cells[0].workload.name, "bursty-decode");
+        assert_eq!(
+            cells[0].workload,
+            crate::workload::preset("bursty-decode", true).unwrap()
+        );
+        assert_eq!(
+            one.topo_filter_names().unwrap().unwrap(),
+            vec![SCALE_TP8.name]
+        );
+        assert_eq!(all.topo_filter_names().unwrap(), None);
+        // Train cells honor quick/full.
+        let tr = Scenario::train(Some(&TRAIN_PCIE_128), false);
+        let cells = tr.train_cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].microbatches, 16, "full plan");
+    }
+
+    #[test]
+    fn default_method_sets_follow_the_mode() {
+        assert_eq!(
+            Scenario::serve(None, None, true).method_set(),
+            Method::SERVE_SET.to_vec()
+        );
+        assert_eq!(
+            Scenario::train(None, true).method_set(),
+            Method::TRAIN_SET.to_vec()
+        );
+    }
+
+    #[test]
+    fn from_json_rejects_bad_scenarios_with_pointed_errors() {
+        let bad = |patch: &str, needle: &str| {
+            let text = format!(
+                r#"{{"name": "bad", "mode": "serve", {patch}}}"#
+            );
+            let err = Scenario::from_json(&Json::parse(&text).unwrap())
+                .map(|_| ())
+                .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{patch}: {msg}");
+        };
+        bad(r#""methods": ["warp"]"#, "unknown method");
+        bad(r#""methods": ["flux"]"#, "baseline");
+        bad(
+            r#""methods": ["baseline", "flux", "baseline"]"#,
+            "duplicate",
+        );
+        bad(r#""methods": ["baseline", "medium"]"#, "flux");
+        bad(r#""topologies": ["warp-drive"]"#, "unknown topology");
+        bad(r#""topologies": []"#, "empty topology filter");
+        bad(r#""workload": "mystery""#, "unknown workload preset");
+        // Train mode takes no workload.
+        let text = r#"{"name": "bad", "mode": "train",
+                       "workload": "bursty-decode"}"#;
+        let err = Scenario::from_json(&Json::parse(text).unwrap())
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no workload"));
+        // Unknown mode.
+        let text = r#"{"name": "bad", "mode": "dream"}"#;
+        assert!(Scenario::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+}

@@ -18,6 +18,7 @@ pub mod cost {
 }
 
 pub mod collectives;
+pub mod exp;
 pub mod goldens;
 pub mod overlap;
 pub mod figures;

@@ -7,22 +7,31 @@
 //!   train        model-level training step comparison
 //!   serve        run the REAL tiny TP transformer on PJRT via the batcher
 //!   sweep-workloads  workload preset x topology serving matrix
+//!   scenario     run a declarative experiment file (exp::Scenario)
+//!   list         topologies, workload presets, methods, schemas
 //!   gen-goldens  emit artifacts/golden_swizzle.json hermetically (no JAX)
 //!   bench        run the pinned-seed suite; --json writes BENCH_<n>.json
+//!
+//! The sweep commands (`simulate --scale|--train`, `sweep-workloads`,
+//! `scenario`, `bench`) only parse flags here; `flux::exp` owns the
+//! scenario expansion, the (parallel, deterministic) execution and the
+//! report plumbing.
 //!
 //! Examples:
 //!   flux simulate --cluster "a100 nvlink" --op rs --m 4096
 //!   flux simulate --scale --workload bursty-decode --quick
 //!   flux simulate --scale --topo "1-node tp8" --trace trace.json
-//!   flux sweep-workloads --quick --json
+//!   flux sweep-workloads --quick --json --threads 4
+//!   flux scenario artifacts/scenario_h800_bursty.json --json
 //!   flux tune --cluster "a100 pcie" --op ag --m 8192
 //!   flux serve --requests 6 --gen 8
 //!   flux gen-goldens
 //!   flux bench --json --quick
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use flux::cost::arch::ClusterSpec;
+use flux::exp::{ExecOpts, Runner, Scenario};
 use flux::figures;
 use flux::model::configs::TransformerConfig;
 use flux::overlap::{baseline, medium, Problem};
@@ -54,15 +63,16 @@ COMMANDS:
                    the request source (arrival process, length mix,
                    routing, SLOs), [--trace <path>] (with --topo)
                    dumps the DES event stream as chrome://tracing
-                   JSON, [--json] writes the byte-stable
-                   flux-scale-v2 report ([--out <path>], default
-                   BENCH_<n>.json)
+                   JSON, [--threads <n>] caps the parallel cell
+                   workers (output is byte-identical at any count),
+                   [--json] writes the byte-stable flux-scale-v2
+                   report ([--out <path>], default BENCH_<n>.json)
                  --train: event-driven DP x PP x TP training sweep
                    (1F1B microbatch schedule on the DES, PP hops on
                    NIC links, DP all-reduce streamed behind backward;
                    megatron vs TE vs flux per topology); same
                    [--topo] [--quick] [--json] [--out] [--trace]
-                   flags, report schema flux-train-v1
+                   [--threads] flags, report schema flux-train-v1
     tune         auto-tune one problem, print the winning config
                    (same flags as simulate)
     train        model-level training-step comparison
@@ -75,14 +85,24 @@ COMMANDS:
                    steady/bursty-decode, open/closed-prefill,
                    diurnal-chat, long-context) on every serving
                    topology, flux vs decoupled; [--quick] trims
-                   request counts, [--json] writes the byte-stable
+                   request counts, [--threads <n>] caps the parallel
+                   cell workers, [--json] writes the byte-stable
                    flux-sweep-v1 report ([--out <path>])
+    scenario     run a declarative experiment file:
+                   flux scenario <file.json> [--quick] [--json]
+                   [--out <path>] [--trace <path>] [--threads <n>]
+                   (see `flux list` for the names a file can use and
+                   artifacts/scenario_*.json for checked-in examples)
+    list         print the registries scenarios draw from: serving +
+                   training topologies, workload presets, overlap
+                   methods, report schemas
     gen-goldens  emit the cross-language golden file from the Rust tile
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
     bench        pinned-seed benchmark suite
                    --json write BENCH_<n>.json (byte-stable) instead of
                           printing; [--out <path>] [--quick] [--wall]
+                          [--threads <n>]
 
 Clusters: \"a100 pcie\" | \"a100 nvlink\" | \"h800 nvlink\"
 ";
@@ -136,6 +156,10 @@ fn main() -> Result<()> {
             rest(),
             &["json", "quick"],
         )?),
+        "scenario" => {
+            cmd_scenario(&Args::parse(rest(), &["json", "quick"])?)
+        }
+        "list" => cmd_list(),
         "tune" => cmd_tune(&Args::parse(rest(), &["verbose"])?),
         "train" => cmd_train(&Args::parse(rest(), &["verbose"])?),
         "serve" => cmd_serve(&Args::parse(rest(), &["verbose"])?),
@@ -145,8 +169,8 @@ fn main() -> Result<()> {
         }
         other => bail!(
             "unknown command {other:?}; try figures|simulate|\
-             sweep-workloads|tune|train|serve|gen-goldens|bench \
-             (or --help)"
+             sweep-workloads|scenario|list|tune|train|serve|\
+             gen-goldens|bench (or --help)"
         ),
     }
 }
@@ -162,16 +186,32 @@ fn cmd_gen_goldens(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    if let Some(k) = args
+        .flags
+        .keys()
+        .find(|k| !matches!(k.as_str(), "out" | "threads"))
+    {
+        bail!(
+            "--{k} is not a bench flag (only --quick, --wall, --json, \
+             --threads, --out)"
+        );
+    }
     let quick = args.has("quick");
     let wall = args.has("wall");
-    // `--out` only makes sense for a file report: it implies `--json`.
-    let json = args.has("json") || args.get("out").is_some();
-    if json {
-        let out = args.get("out").map(std::path::Path::new);
-        let path = flux::report::write_bench(quick, wall, out)?;
+    let opts = exec_opts(args)?;
+    let runner = Runner::from_flag(opts.threads);
+    if opts.json {
+        let path = flux::report::write_bench(
+            quick,
+            wall,
+            opts.out.as_deref(),
+            &runner,
+        )?;
         println!("wrote bench report to {}", path.display());
     } else {
-        flux::report::print_bench(&flux::report::bench_doc(quick))?;
+        flux::report::print_bench(&flux::report::bench_doc_with(
+            quick, &runner,
+        ))?;
         if wall {
             // Bench::run prints one line per hotpath as it measures.
             println!("\nwall-clock hotpath timings (machine-local):");
@@ -179,6 +219,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// The shared output flags (`--json`/`--out`/`--trace`/`--threads`)
+/// as [`ExecOpts`]. `--out` implies a JSON file report.
+fn exec_opts(args: &Args) -> Result<ExecOpts> {
+    let out = args.get("out").map(std::path::PathBuf::from);
+    Ok(ExecOpts {
+        json: args.has("json") || out.is_some(),
+        out,
+        trace: args.get("trace").map(std::path::PathBuf::from),
+        threads: match args.get("threads") {
+            Some(s) => Some(
+                s.parse()
+                    .map_err(|e| anyhow!("--threads {s:?}: {e}"))?,
+            ),
+            None => None,
+        },
+    })
 }
 
 fn cluster_of(args: &Args) -> Result<&'static ClusterSpec> {
@@ -254,170 +312,132 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `flux simulate --scale`: the multi-node TP x DP serving sweep over
-/// every `ScaleTopology` (or one, with `--topo`), flux vs decoupled,
-/// with the request source swappable via `--workload`.
+/// `flux simulate --scale`: the multi-node TP x DP serving sweep as an
+/// anonymous [`Scenario`] — only flag parsing lives here;
+/// [`flux::exp::execute`] owns expansion, execution and emission.
 fn cmd_simulate_scale(args: &Args) -> Result<()> {
-    use flux::cost::arch::{ScaleTopology, ALL_SCALE_TOPOLOGIES};
     // The sweep is pinned (fixed seeds per topology) so the report
     // stays byte-stable: reject the op-level flags instead of silently
     // ignoring them.
     if let Some(k) = args.flags.keys().find(|k| {
-        !matches!(k.as_str(), "out" | "topo" | "workload" | "trace")
+        !matches!(
+            k.as_str(),
+            "out" | "topo" | "workload" | "trace" | "threads"
+        )
     }) {
         bail!("--{k} is not supported with --scale (only --topo, \
-               --workload, --trace, --quick, --json, --out)");
+               --workload, --trace, --threads, --quick, --json, --out)");
     }
-    let only = match args.get("topo") {
-        Some(name) => Some(ScaleTopology::by_name(name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown topology {name:?}; one of: {}",
-                ALL_SCALE_TOPOLOGIES
-                    .iter()
-                    .map(|t| t.name)
-                    .collect::<Vec<_>>()
-                    .join(" | ")
-            )
-        })?),
-        None => None,
-    };
     let quick = args.has("quick");
-    // A trace of the whole sweep would interleave topologies into one
-    // meaningless timeline; require the single-topology form up front.
-    if args.get("trace").is_some() && only.is_none() {
-        bail!("--trace needs --topo <name>: a trace is one \
-               topology's event stream");
-    }
     let workload = match args.get("workload") {
         Some(arg) => {
             Some(flux::workload::WorkloadSpec::resolve(arg, quick)?)
         }
         None => None,
     };
-    // `--out` implies a JSON file report, mirroring `flux bench`.
-    let json = args.has("json") || args.get("out").is_some();
-    if json {
-        let out = args.get("out").map(std::path::Path::new);
-        let path = flux::report::write_scale(
-            quick,
-            only,
-            workload.as_ref(),
-            out,
-        )?;
-        println!("wrote scale report to {}", path.display());
-    } else {
-        flux::report::print_scale(&flux::report::scale_doc_with(
-            quick,
-            only,
-            workload.as_ref(),
-        )?)?;
-    }
-    if let Some(trace_path) = args.get("trace") {
-        // Deliberately re-simulates the (seed-deterministic, quick)
-        // comparison rather than threading a Trace through the report
-        // emitters: the trace is identical either way and the report
-        // path stays untangled from tracing.
-        let topo = only.expect("checked above");
-        let wl = match &workload {
-            Some(wl) => wl.clone(),
-            None => flux::workload::preset("poisson-balanced", quick)
-                .expect("default preset exists"),
-        };
-        let sc = flux::serving::scale::ScaleScenario::with_workload(
-            topo, wl,
-        );
-        let mut trace = flux::sim::trace::Trace::new();
-        flux::serving::scale::compare_scale_traced(&sc, &mut trace)?;
-        let path = std::path::Path::new(trace_path);
-        trace.write(path)?;
-        println!(
-            "wrote chrome trace ({} events) to {trace_path}",
-            trace.len()
-        );
-    }
-    Ok(())
+    let scenario = Scenario::serve_cli(args.get("topo"), workload, quick)?;
+    flux::exp::execute(&scenario, &exec_opts(args)?)
 }
 
 /// `flux sweep-workloads`: every workload preset on every serving
-/// topology, flux vs decoupled (`flux-sweep-v1`).
+/// topology, flux vs decoupled (`flux-sweep-v1`), cells in parallel.
 fn cmd_sweep_workloads(args: &Args) -> Result<()> {
-    if let Some(k) =
-        args.flags.keys().find(|k| !matches!(k.as_str(), "out"))
-    {
-        bail!(
-            "--{k} is not a sweep-workloads flag (only --quick, \
-             --json, --out)"
-        );
-    }
-    let quick = args.has("quick");
-    let json = args.has("json") || args.get("out").is_some();
-    if json {
-        let out = args.get("out").map(std::path::Path::new);
-        let path = flux::report::write_sweep(quick, out)?;
-        println!("wrote workload sweep report to {}", path.display());
-    } else {
-        flux::report::print_sweep(&flux::report::sweep_doc(quick)?)?;
-    }
-    Ok(())
-}
-
-/// `flux simulate --train`: the event-driven DP x PP x TP training
-/// sweep over every `TrainTopology` (or one, with `--topo`), megatron
-/// vs TE vs flux.
-fn cmd_simulate_train(args: &Args) -> Result<()> {
-    use flux::cost::arch::{TrainTopology, ALL_TRAIN_TOPOLOGIES};
     if let Some(k) = args
         .flags
         .keys()
-        .find(|k| !matches!(k.as_str(), "out" | "topo" | "trace"))
+        .find(|k| !matches!(k.as_str(), "out" | "threads"))
     {
-        bail!("--{k} is not supported with --train (only --topo, \
-               --trace, --quick, --json, --out)");
-    }
-    let only = match args.get("topo") {
-        Some(name) => Some(TrainTopology::by_name(name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown topology {name:?}; one of: {}",
-                ALL_TRAIN_TOPOLOGIES
-                    .iter()
-                    .map(|t| t.name)
-                    .collect::<Vec<_>>()
-                    .join(" | ")
-            )
-        })?),
-        None => None,
-    };
-    let quick = args.has("quick");
-    if args.get("trace").is_some() && only.is_none() {
-        bail!("--trace needs --topo <name>: a trace is one \
-               topology's event stream");
-    }
-    // `--out` implies a JSON file report, mirroring `flux bench`.
-    let json = args.has("json") || args.get("out").is_some();
-    if json {
-        let out = args.get("out").map(std::path::Path::new);
-        let path = flux::report::write_train(quick, only, out)?;
-        println!("wrote train report to {}", path.display());
-    } else {
-        flux::report::print_train(&flux::report::train_doc_for(
-            quick, only,
-        )?)?;
-    }
-    if let Some(trace_path) = args.get("trace") {
-        let topo = only.expect("checked above");
-        let sc = if quick {
-            flux::training::TrainScenario::quick(topo)
-        } else {
-            flux::training::TrainScenario::full(topo)
-        };
-        let mut trace = flux::sim::trace::Trace::new();
-        flux::training::compare_train_traced(&sc, &mut trace)?;
-        let path = std::path::Path::new(trace_path);
-        trace.write(path)?;
-        println!(
-            "wrote chrome trace ({} events) to {trace_path}",
-            trace.len()
+        bail!(
+            "--{k} is not a sweep-workloads flag (only --quick, \
+             --json, --threads, --out)"
         );
+    }
+    flux::exp::execute_sweep(args.has("quick"), &exec_opts(args)?)
+}
+
+/// `flux simulate --train`: the event-driven DP x PP x TP training
+/// sweep as an anonymous [`Scenario`].
+fn cmd_simulate_train(args: &Args) -> Result<()> {
+    if let Some(k) = args.flags.keys().find(|k| {
+        !matches!(k.as_str(), "out" | "topo" | "trace" | "threads")
+    }) {
+        bail!("--{k} is not supported with --train (only --topo, \
+               --trace, --threads, --quick, --json, --out)");
+    }
+    let scenario =
+        Scenario::train_cli(args.get("topo"), args.has("quick"))?;
+    flux::exp::execute(&scenario, &exec_opts(args)?)
+}
+
+/// `flux scenario <file.json>`: run a checked-in declarative
+/// experiment.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    // The file owns topology/workload/method selection: reject the
+    // sweep flags instead of silently ignoring an attempted override.
+    if let Some(k) = args
+        .flags
+        .keys()
+        .find(|k| !matches!(k.as_str(), "out" | "trace" | "threads"))
+    {
+        bail!(
+            "--{k} is not a scenario flag (only --quick, --json, \
+             --out, --trace, --threads); topologies, workload and \
+             methods come from the file"
+        );
+    }
+    let path = match args.positional.as_slice() {
+        [p] => p,
+        _ => bail!(
+            "usage: flux scenario <file.json> [--quick] [--json] \
+             [--out <path>] [--trace <path>] [--threads <n>]"
+        ),
+    };
+    let mut scenario = Scenario::load(std::path::Path::new(path))?;
+    // `--quick` forces the CI-sized variant regardless of the file.
+    // (Preset workloads and the train plan resize; an inline workload
+    // spec carries explicit counts and runs as written.)
+    if args.has("quick") {
+        scenario.quick = true;
+    }
+    flux::exp::execute(&scenario, &exec_opts(args)?)
+}
+
+/// `flux list`: the registries scenarios (and the sweep flags) draw
+/// from — sourced from the same tables the runner resolves against.
+fn cmd_list() -> Result<()> {
+    use flux::cost::arch::{ALL_SCALE_TOPOLOGIES, ALL_TRAIN_TOPOLOGIES};
+    println!("serving topologies (simulate --scale --topo <name>):");
+    for t in ALL_SCALE_TOPOLOGIES {
+        println!(
+            "  {:<22} {} | {} node(s), TP{} x DP{}",
+            t.name, t.cluster.name, t.nodes, t.tp, t.dp
+        );
+    }
+    println!("\ntraining topologies (simulate --train --topo <name>):");
+    for t in ALL_TRAIN_TOPOLOGIES {
+        println!(
+            "  {:<22} {} | DP{} x PP{} x TP{} = {} GPUs",
+            t.name,
+            t.cluster.name,
+            t.dp,
+            t.pp,
+            t.tp,
+            t.gpus()
+        );
+    }
+    println!("\nworkload presets (--workload <name>, sweep-workloads):");
+    for name in flux::workload::PRESET_NAMES {
+        let wl = flux::workload::preset(name, true)
+            .expect("preset table is closed");
+        println!("  {:<18} {} arrivals", name, wl.arrival.kind());
+    }
+    println!("\noverlap methods (scenario \"methods\" keys):");
+    for m in Method::ALL {
+        println!("  {:<10} {:<12} {}", m.key(), m.name(), m.summary());
+    }
+    println!("\nreport schemas:");
+    for s in flux::report::SCHEMAS {
+        println!("  {:<15} {:<32} {}", s.name, s.command, s.summary);
     }
     Ok(())
 }

@@ -12,6 +12,12 @@
 //! Plus [`numeric`], the correctness twin that executes the same
 //! decompositions over real host buffers (and PJRT artifacts at the
 //! op level) and checks them against each other.
+//!
+//! [`Method`] is the registry over those strategies: serving, training
+//! and sweep experiments iterate a method *set* (`SERVE_SET` /
+//! `TRAIN_SET` or a scenario file's explicit list) instead of wiring a
+//! fixed pair, and `flux list` / scenario JSON address entries by
+//! [`Method::key`].
 
 pub mod baseline;
 pub mod flux;
@@ -24,6 +30,110 @@ use crate::cost::arch::ClusterSpec;
 use crate::cost::gemm::{gemm_time_ns, GemmShape};
 
 pub const BF16: f64 = 2.0;
+
+/// Which overlap system executes the TP ops — the method registry the
+/// serving, training and sweep paths iterate uniformly (historically
+/// each hard-coded its own flux-vs-decoupled pair). Scenario files and
+/// `flux list` address methods by [`Method::key`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Megatron-LM / vLLM: fastest GEMM + NCCL, no overlap.
+    NonOverlap,
+    /// TransformerEngine UserBuffer: medium-grained chunk overlap.
+    Medium,
+    /// FLUX fused fine-grained overlap (auto-tuned per shape).
+    Flux,
+}
+
+impl Method {
+    pub const ALL: [Method; 3] =
+        [Method::NonOverlap, Method::Medium, Method::Flux];
+
+    /// The pair every serving comparison runs (decoupled vs fused).
+    pub const SERVE_SET: [Method; 2] = [Method::NonOverlap, Method::Flux];
+
+    /// The three-way Fig. 16 training comparison.
+    pub const TRAIN_SET: [Method; 3] =
+        [Method::NonOverlap, Method::Medium, Method::Flux];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::NonOverlap => "non-overlap",
+            Method::Medium => "TE-medium",
+            Method::Flux => "Flux",
+        }
+    }
+
+    /// Stable registry key, the spelling scenario files and `flux list`
+    /// use.
+    pub fn key(self) -> &'static str {
+        match self {
+            Method::NonOverlap => "baseline",
+            Method::Medium => "medium",
+            Method::Flux => "flux",
+        }
+    }
+
+    /// Look a method up by its registry [`Method::key`].
+    pub fn by_key(key: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.key() == key)
+    }
+
+    /// Every registry key, in `ALL` order (error messages, `flux list`).
+    pub fn keys() -> Vec<&'static str> {
+        Method::ALL.iter().map(|m| m.key()).collect()
+    }
+
+    /// Key of this method's block in serving documents (the decoupled
+    /// GEMM-then-NCCL execution keeps its historical report name).
+    pub fn serve_label(self) -> &'static str {
+        match self {
+            Method::NonOverlap => "decoupled",
+            Method::Medium => "medium",
+            Method::Flux => "flux",
+        }
+    }
+
+    /// Key of this method's block in training documents (the system
+    /// names Fig. 16 compares).
+    pub fn train_label(self) -> &'static str {
+        match self {
+            Method::NonOverlap => "megatron",
+            Method::Medium => "te",
+            Method::Flux => "flux",
+        }
+    }
+
+    /// One-line description for `flux list`.
+    pub fn summary(self) -> &'static str {
+        match self {
+            Method::NonOverlap => {
+                "decoupled GEMM then NCCL collective, strictly serialized"
+            }
+            Method::Medium => {
+                "TransformerEngine-style chunked GEMM/P2P stream overlap"
+            }
+            Method::Flux => {
+                "fused tile-level overlap with signals and swizzling"
+            }
+        }
+    }
+
+    /// Simulated time of one TP op under this method.
+    pub fn op_ns(self, cluster: &ClusterSpec, p: &Problem, seed: u64) -> f64 {
+        match self {
+            Method::NonOverlap => baseline::simulate(cluster, p).overall_ns,
+            Method::Medium => medium::simulate(cluster, p, seed).overall_ns,
+            Method::Flux => {
+                // The tuned direction per interconnect; full tuning is
+                // tuner::tune (used by the benches); the training loop
+                // uses the converged config for speed.
+                let cfg = flux::FluxConfig::for_cluster(cluster);
+                flux::simulate(cluster, p, &cfg, seed).overall_ns
+            }
+        }
+    }
+}
 
 /// Which fused pattern (paper Fig. 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -153,5 +263,45 @@ mod tests {
         let p = Problem::ag(1024, 49152, 12288, 8);
         let t = p.gemm_nonsplit_ns(&A100_NVLINK);
         assert!(t > 0.0);
+    }
+
+    #[test]
+    fn method_keys_round_trip_and_are_unique() {
+        for m in Method::ALL {
+            assert_eq!(Method::by_key(m.key()), Some(m));
+        }
+        assert_eq!(Method::by_key("warp-speed"), None);
+        let keys = Method::keys();
+        assert_eq!(keys, vec!["baseline", "medium", "flux"]);
+        for (i, k) in keys.iter().enumerate() {
+            assert!(!keys[..i].contains(k), "duplicate key {k}");
+        }
+    }
+
+    #[test]
+    fn method_sets_and_labels_match_the_report_schemas() {
+        // The report keys the compat tests pin: serving documents carry
+        // decoupled/flux blocks, training documents megatron/te/flux.
+        let serve: Vec<&str> =
+            Method::SERVE_SET.iter().map(|m| m.serve_label()).collect();
+        assert_eq!(serve, vec!["decoupled", "flux"]);
+        let train: Vec<&str> =
+            Method::TRAIN_SET.iter().map(|m| m.train_label()).collect();
+        assert_eq!(train, vec!["megatron", "te", "flux"]);
+        for m in Method::ALL {
+            assert!(!m.summary().is_empty());
+            assert!(!m.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn method_op_ns_orders_like_the_strategies() {
+        // Flux (tuned default config) beats the serialized baseline on
+        // a comm-heavy shape; every method prices positive time.
+        let p = Problem::rs(4096, 12288, 49152, 8);
+        let base = Method::NonOverlap.op_ns(&A100_NVLINK, &p, 7);
+        let fx = Method::Flux.op_ns(&A100_NVLINK, &p, 7);
+        assert!(base > 0.0 && fx > 0.0);
+        assert!(fx < base, "flux {fx} vs baseline {base}");
     }
 }

@@ -15,47 +15,11 @@ use crate::model::analysis::{
     layer_attention_extra_ns, layer_bwd_ops, layer_fwd_ops,
 };
 use crate::model::configs::TransformerConfig;
-use crate::overlap::flux::{simulate as flux_sim, FluxConfig};
-use crate::overlap::{baseline, medium, Problem};
 
-/// Which overlap system executes the TP ops.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    /// Megatron-LM / vLLM: fastest GEMM + NCCL, no overlap.
-    NonOverlap,
-    /// TransformerEngine UserBuffer: medium-grained chunk overlap.
-    Medium,
-    /// FLUX fused fine-grained overlap (auto-tuned per shape).
-    Flux,
-}
-
-impl Method {
-    pub const ALL: [Method; 3] =
-        [Method::NonOverlap, Method::Medium, Method::Flux];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::NonOverlap => "non-overlap",
-            Method::Medium => "TE-medium",
-            Method::Flux => "Flux",
-        }
-    }
-
-    /// Simulated time of one TP op under this method.
-    pub fn op_ns(self, cluster: &ClusterSpec, p: &Problem, seed: u64) -> f64 {
-        match self {
-            Method::NonOverlap => baseline::simulate(cluster, p).overall_ns,
-            Method::Medium => medium::simulate(cluster, p, seed).overall_ns,
-            Method::Flux => {
-                // The tuned direction per interconnect; full tuning is
-                // tuner::tune (used by the benches); the training loop
-                // uses the converged config for speed.
-                let cfg = FluxConfig::for_cluster(cluster);
-                flux_sim(cluster, p, &cfg, seed).overall_ns
-            }
-        }
-    }
-}
+// `Method` — which overlap system executes the TP ops — lives in the
+// overlap method registry now; re-exported here because every training
+// call site (and the historical API) spells it `parallel::Method`.
+pub use crate::overlap::Method;
 
 /// The 128-GPU layout of §5.2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

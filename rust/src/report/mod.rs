@@ -1,0 +1,200 @@
+//! Report emission: every `flux` JSON document behind one
+//! schema-versioned, byte-stable writer.
+//!
+//! Each schema owns a submodule ([`bench`], [`scale`], [`sweep`],
+//! [`train`]); this module holds what they share — the schema
+//! registry, the `BENCH_<n>.json` trajectory path policy, the writer
+//! with pointed path errors, and the [`Summary`] projections every
+//! latency block uses.
+//!
+//! Two kinds of numbers, separated on purpose:
+//!
+//! * **Simulated** (default, always emitted): DES/op-suite runs with
+//!   pinned `util::prng` seeds. Fully deterministic — two consecutive
+//!   runs produce byte-identical files, *at any `--threads` count*
+//!   (cells execute through [`crate::exp::Runner`] and merge in fixed
+//!   scenario order) — so CI can diff them and regressions in the
+//!   model are attributable to code changes, never to noise.
+//! * **Wall-clock** (`flux bench --wall`, off by default): machine-
+//!   dependent hotpath timings, excluded from the byte-stability
+//!   contract and from CI diffing.
+//!
+//! Consumers must tolerate added keys; existing keys are stable.
+
+mod bench;
+mod scale;
+mod sweep;
+mod train;
+
+pub use bench::{
+    bench_doc, bench_doc_with, print_bench, wall_doc, write_bench,
+};
+pub use scale::{
+    print_scale, scale_doc, scale_doc_for, scale_doc_scenario,
+    scale_doc_with,
+};
+pub use sweep::{print_sweep, sweep_doc, sweep_doc_with};
+pub use train::{
+    print_train, train_doc, train_doc_for, train_doc_scenario,
+};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Schema of the `flux bench --json` report.
+pub const SCHEMA: &str = "flux-bench-v1";
+/// Schema of the `flux simulate --scale --json` report. v2 folds in
+/// the workload subsystem: a `workload` spec object per topology and
+/// per-method `slo` goodput/abandonment accounting. Every v1 field is
+/// preserved with identical values for the default Poisson workload
+/// (the coordinator replays PR-2's PRNG draw sequence bit-for-bit;
+/// `prompt`/`gen`/`arrival_mean_ns` remain emitted for fixed-mix
+/// Poisson workloads).
+pub const SCALE_SCHEMA: &str = "flux-scale-v2";
+/// Schema of the `flux simulate --train --json` report.
+pub const TRAIN_SCHEMA: &str = "flux-train-v1";
+/// Schema of the `flux sweep-workloads --json` report: the workload
+/// preset x topology matrix, flux vs decoupled.
+pub const SWEEP_SCHEMA: &str = "flux-sweep-v1";
+
+/// One emitted schema, for `flux list` discoverability.
+#[derive(Clone, Copy, Debug)]
+pub struct SchemaInfo {
+    pub name: &'static str,
+    /// The invocation that emits it.
+    pub command: &'static str,
+    pub summary: &'static str,
+}
+
+/// Every document schema the CLI can emit, in trajectory order.
+pub const SCHEMAS: [SchemaInfo; 4] = [
+    SchemaInfo {
+        name: SCHEMA,
+        command: "flux bench --json",
+        summary: "pinned-seed op suite (p50/p95, overlap eff, tiles/s)",
+    },
+    SchemaInfo {
+        name: SCALE_SCHEMA,
+        command: "flux simulate --scale --json",
+        summary: "TP x DP serving sweep (TTFT/latency, goodput)",
+    },
+    SchemaInfo {
+        name: TRAIN_SCHEMA,
+        command: "flux simulate --train --json",
+        summary: "event-driven 1F1B training sweep (step, bubble)",
+    },
+    SchemaInfo {
+        name: SWEEP_SCHEMA,
+        command: "flux sweep-workloads --json",
+        summary: "workload preset x topology serving matrix",
+    },
+];
+
+/// p50/p95/p99 projection of a [`Summary`] — the latency blocks of the
+/// scale and sweep documents. (One of three emitters that used to
+/// hand-roll sorting/percentile math; all now sit on `util::stats`.)
+pub(crate) fn latency_percentiles(s: &Summary) -> Json {
+    obj(vec![
+        ("p50_ns", Json::from(s.p50)),
+        ("p95_ns", Json::from(s.p95)),
+        ("p99_ns", Json::from(s.p99)),
+    ])
+}
+
+/// The `topo_filter` compat shape shared by the scale and train
+/// documents: a single name stays a string (the historical CLI form
+/// the trajectory tooling reads), multiple names become an array.
+pub(crate) fn topo_filter_json(names: &[&'static str]) -> Json {
+    match names {
+        [one] => Json::from(*one),
+        many => {
+            Json::Arr(many.iter().map(|&n| Json::from(n)).collect())
+        }
+    }
+}
+
+/// Full summary block (the wall-clock section).
+pub(crate) fn summary_json(s: &Summary) -> Json {
+    obj(vec![
+        ("mean_ns", Json::from(s.mean)),
+        ("p50_ns", Json::from(s.p50)),
+        ("p95_ns", Json::from(s.p95)),
+        ("p99_ns", Json::from(s.p99)),
+        ("n", Json::from(s.n)),
+    ])
+}
+
+/// Smallest-unused `BENCH_<n>.json` in `dir` — the perf trajectory is
+/// an append-only sequence of these.
+pub fn next_bench_path(dir: &Path) -> PathBuf {
+    for n in 0..10_000usize {
+        let p = dir.join(format!("BENCH_{n}.json"));
+        if !p.exists() {
+            return p;
+        }
+    }
+    dir.join("BENCH_overflow.json")
+}
+
+/// Shared trajectory writer: resolve `out` (default: the next free
+/// `BENCH_<n>.json`), create the parent dir, write the document. One
+/// path policy for every report; failures name the offending path
+/// (`util::fsio`).
+pub fn write_doc(doc: &Json, out: Option<&Path>) -> Result<PathBuf> {
+    let path = match out {
+        Some(p) => p.to_path_buf(),
+        None => next_bench_path(Path::new(".")),
+    };
+    crate::util::fsio::write_text(&path, &doc.to_string())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_bench_path_skips_existing() {
+        let dir = std::env::temp_dir().join("flux_bench_path_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(next_bench_path(&dir).ends_with("BENCH_0.json"));
+        std::fs::write(dir.join("BENCH_0.json"), "{}").unwrap();
+        assert!(next_bench_path(&dir).ends_with("BENCH_1.json"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_doc_errors_name_the_path() {
+        // Regression (satellite): `--out` under a non-directory parent
+        // must fail with the path, not a bare io error.
+        let dir = std::env::temp_dir().join("flux_write_doc_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "x").unwrap();
+        let bad = blocker.join("sub/report.json");
+        let err = format!(
+            "{:#}",
+            write_doc(&Json::Null, Some(&bad)).unwrap_err()
+        );
+        assert!(err.contains("blocker"), "must name the path: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_registry_matches_the_constants() {
+        let names: Vec<&str> = SCHEMAS.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec![SCHEMA, SCALE_SCHEMA, TRAIN_SCHEMA, SWEEP_SCHEMA]
+        );
+        for s in SCHEMAS {
+            assert!(!s.command.is_empty() && !s.summary.is_empty());
+        }
+    }
+}

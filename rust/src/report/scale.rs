@@ -1,0 +1,318 @@
+//! The serving-at-scale document (`flux simulate --scale --json`,
+//! schema `flux-scale-v2`): every selected topology under the
+//! scenario's method set, cells executed by the
+//! [`crate::exp::Runner`] at (topology, method) grain and merged in
+//! fixed order — byte-identical at any worker count.
+
+use anyhow::{ensure, Result};
+
+use crate::cost::arch::ScaleTopology;
+use crate::exp::{Mode, Runner, Scenario};
+use crate::overlap::Method;
+use crate::serving::scale::{
+    run_scale, ScaleComparison, ScaleReport, ScaleScenario,
+};
+use crate::util::json::{obj, Json};
+use crate::workload::WorkloadSpec;
+
+use super::{latency_percentiles, SCALE_SCHEMA};
+
+fn scale_method_json(r: &ScaleReport) -> Json {
+    let mut fields = vec![
+        ("completed", Json::from(r.completed)),
+        ("tokens", Json::from(r.tokens)),
+        ("makespan_ns", Json::from(r.makespan_ns)),
+        ("tokens_per_sec", Json::from(r.tokens_per_sec)),
+        ("overlap_eff_pct", Json::from(r.overlap_eff * 100.0)),
+        ("ttft_ns", latency_percentiles(&r.ttft)),
+        ("per_token_ns", latency_percentiles(&r.per_token)),
+        ("latency_ns", latency_percentiles(&r.latency)),
+    ];
+    if let Some(slo) = &r.slo {
+        fields.push(("slo", slo.to_json()));
+    }
+    obj(fields)
+}
+
+/// One topology's entry of the scale/sweep documents: legacy v1
+/// fields (`prompt`/`gen` for fixed mixes, `arrival_mean_ns` for
+/// Poisson arrivals, cluster-level), the workload spec, one block per
+/// method (keyed by [`Method::serve_label`]), and the comparative
+/// fields whenever the set contains both the decoupled baseline and
+/// flux.
+pub(super) fn scale_entry(
+    sc: &ScaleScenario,
+    methods: &[Method],
+    runs: &[ScaleReport],
+) -> Json {
+    use crate::workload::ArrivalSpec;
+    let topo = sc.topo;
+    let mut fields = vec![
+        ("topology", Json::from(topo.name)),
+        ("cluster", Json::from(topo.cluster.name)),
+        ("nodes", Json::from(topo.nodes)),
+        ("tp", Json::from(topo.tp)),
+        ("dp", Json::from(topo.dp)),
+        ("requests", Json::from(sc.n_requests())),
+    ];
+    if let Some(c) = sc.workload.mix.fixed() {
+        fields.push(("prompt", Json::from(c.prompt)));
+        fields.push(("gen", Json::from(c.gen)));
+    }
+    if let ArrivalSpec::Poisson { mean_ns } = sc.workload.arrival {
+        fields.push((
+            "arrival_mean_ns",
+            Json::from(mean_ns / topo.dp as f64),
+        ));
+    }
+    fields.push(("seed", Json::from(sc.seed as usize)));
+    fields.push(("workload", sc.workload.to_json()));
+    for (m, r) in methods.iter().zip(runs) {
+        fields.push((m.serve_label(), scale_method_json(r)));
+    }
+    if let Some(cmp) = ScaleComparison::from_runs(runs) {
+        fields.push(("speedup", Json::from(cmp.speedup())));
+        fields.push((
+            "latency_speedup",
+            Json::from(cmp.latency_speedup()),
+        ));
+        if let Some(delta) = cmp.goodput_delta() {
+            fields.push(("goodput_delta", Json::from(delta)));
+        }
+    }
+    obj(fields)
+}
+
+/// Run one list of serving cells under one method set through the
+/// runner, at (cell, method) grain; returns per-cell entry documents
+/// in cell order. Shared with the sweep document.
+pub(super) fn scale_entries(
+    cells: &[ScaleScenario],
+    methods: &[Method],
+    runner: &Runner,
+) -> Result<Vec<Json>> {
+    let runs: Vec<Vec<ScaleReport>> =
+        runner.run_product(cells, methods, |sc, &m| run_scale(sc, m))?;
+    Ok(cells
+        .iter()
+        .zip(&runs)
+        .map(|(sc, cell_runs)| scale_entry(sc, methods, cell_runs))
+        .collect())
+}
+
+/// The serving-at-scale document for one scenario, cells executed by
+/// `runner`.
+pub fn scale_doc_scenario(sc: &Scenario, runner: &Runner) -> Result<Json> {
+    ensure!(sc.mode == Mode::Serve, "not a serve scenario");
+    let methods = sc.method_set();
+    let cells = sc.serve_cells()?;
+    let topologies = scale_entries(&cells, &methods, runner)?;
+    let mut top = vec![
+        ("schema", Json::from(SCALE_SCHEMA)),
+        ("quick", Json::from(sc.quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("topologies", Json::Arr(topologies)),
+    ];
+    if let Some(names) = sc.topo_filter_names()? {
+        // A filtered doc must be distinguishable from a full sweep:
+        // the trajectory diffing contract compares like with like.
+        top.push(("topo_filter", super::topo_filter_json(&names)));
+    }
+    if let Some(name) = sc.workload_name() {
+        // Same contract for a swapped request source.
+        top.push(("workload_filter", Json::from(name)));
+    }
+    if !sc.name.is_empty() {
+        // Scenario files stamp their name; CLI-built anonymous
+        // scenarios keep the document's historical shape.
+        top.push(("scenario", Json::from(sc.name.as_str())));
+    }
+    Ok(obj(top))
+}
+
+/// The serving-at-scale document: every topology in
+/// `ALL_SCALE_TOPOLOGIES` under the decoupled and Flux executions.
+/// Deterministic for a given `quick` — byte-identical across reruns.
+pub fn scale_doc(quick: bool) -> Result<Json> {
+    scale_doc_for(quick, None)
+}
+
+/// Like [`scale_doc`], restricted to one topology when `only` is set
+/// (`flux simulate --scale --topo <name>`).
+pub fn scale_doc_for(
+    quick: bool,
+    only: Option<&'static ScaleTopology>,
+) -> Result<Json> {
+    scale_doc_with(quick, only, None)
+}
+
+/// Like [`scale_doc_for`], with the request source swapped for a
+/// custom workload (`flux simulate --scale --workload <preset|file>`).
+pub fn scale_doc_with(
+    quick: bool,
+    only: Option<&'static ScaleTopology>,
+    workload: Option<&WorkloadSpec>,
+) -> Result<Json> {
+    scale_doc_scenario(
+        &Scenario::serve(only, workload.cloned(), quick),
+        &Runner::new(),
+    )
+}
+
+/// Human-readable rendering of the scale document.
+pub fn print_scale(doc: &Json) -> Result<()> {
+    fn ms(j: &Json, k: &str) -> Result<String> {
+        Ok(format!("{:.1}", j.get(k)?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        let fx = e.get("flux")?;
+        let de = e.get("decoupled")?;
+        rows.push(vec![
+            e.get("topology")?.as_str()?.to_string(),
+            format!(
+                "{}x{}",
+                e.get("tp")?.as_usize()?,
+                e.get("dp")?.as_usize()?
+            ),
+            ms(fx.get("ttft_ns")?, "p50_ns")?,
+            ms(fx.get("ttft_ns")?, "p99_ns")?,
+            ms(fx.get("per_token_ns")?, "p50_ns")?,
+            format!("{:.1}", fx.get("tokens_per_sec")?.as_f64()?),
+            format!("{:.1}", de.get("tokens_per_sec")?.as_f64()?),
+            format!("{:.1}%", fx.get("overlap_eff_pct")?.as_f64()?),
+            format!("{:.2}x", e.get("speedup")?.as_f64()?),
+        ]);
+    }
+    crate::util::bench::table(
+        "serving at scale (flux vs decoupled, pinned seeds)",
+        &[
+            "topology",
+            "tp x dp",
+            "ttft p50 ms",
+            "ttft p99 ms",
+            "tok p50 ms",
+            "flux tok/s",
+            "dec tok/s",
+            "flux eff",
+            "speedup",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::ALL_SCALE_TOPOLOGIES;
+
+    #[test]
+    fn scale_doc_is_byte_stable_and_well_formed() {
+        let a = scale_doc(true).unwrap().to_string();
+        let b = scale_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "scale doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            SCALE_SCHEMA
+        );
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), ALL_SCALE_TOPOLOGIES.len());
+        for t in topos {
+            for k in [
+                "topology", "cluster", "nodes", "tp", "dp", "requests",
+                "prompt", "gen", "arrival_mean_ns", "workload",
+                "decoupled", "flux", "speedup", "goodput_delta",
+            ] {
+                assert!(t.opt(k).is_some(), "missing key {k}");
+            }
+            let fx = t.get("flux").unwrap();
+            let ttft = fx.get("ttft_ns").unwrap();
+            assert!(
+                ttft.get("p99_ns").unwrap().as_f64().unwrap()
+                    >= ttft.get("p50_ns").unwrap().as_f64().unwrap()
+            );
+            assert!(
+                fx.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0
+            );
+            // v2: the default preset defines SLOs, so both methods
+            // carry goodput accounting.
+            let slo = fx.get("slo").unwrap();
+            let g = slo.get("goodput").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&g), "goodput {g}");
+            // The workload spec round-trips from the report itself.
+            let wl = crate::workload::WorkloadSpec::from_json(
+                t.get("workload").unwrap(),
+            )
+            .unwrap();
+            assert_eq!(wl.name, "poisson-balanced");
+        }
+    }
+
+    #[test]
+    fn scale_doc_with_workload_marks_the_document() {
+        let wl =
+            crate::workload::preset("bursty-decode", true).unwrap();
+        use crate::cost::arch::SCALE_TP8;
+        let doc =
+            scale_doc_with(true, Some(&SCALE_TP8), Some(&wl)).unwrap();
+        assert_eq!(
+            doc.get("workload_filter").unwrap().as_str().unwrap(),
+            "bursty-decode"
+        );
+        assert_eq!(
+            doc.get("topo_filter").unwrap().as_str().unwrap(),
+            SCALE_TP8.name
+        );
+        // Anonymous CLI scenarios carry no scenario stamp.
+        assert!(doc.opt("scenario").is_none());
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), 1);
+        // Two-point mix + MMPP arrivals: no fixed prompt/gen, no
+        // Poisson mean — the v1 compat fields are honestly absent.
+        assert!(topos[0].opt("prompt").is_none());
+        assert!(topos[0].opt("arrival_mean_ns").is_none());
+    }
+
+    #[test]
+    fn named_scenario_with_custom_methods_extends_the_document() {
+        use crate::exp::WorkloadRef;
+        let sc = Scenario {
+            name: "three-way".into(),
+            mode: Mode::Serve,
+            topos: Some(vec!["1-node tp8".into()]),
+            workload: Some(WorkloadRef::Preset("steady-decode".into())),
+            methods: Some(vec![
+                Method::NonOverlap,
+                Method::Medium,
+                Method::Flux,
+            ]),
+            quick: true,
+        };
+        let doc =
+            scale_doc_scenario(&sc, &Runner::with_threads(2)).unwrap();
+        assert_eq!(
+            doc.get("scenario").unwrap().as_str().unwrap(),
+            "three-way"
+        );
+        let t = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+        // All three method blocks exist; flux still beats the
+        // decoupled baseline on NVLink (the pinned sweep invariant).
+        let span = |key: &str| {
+            t.get(key).unwrap().get("makespan_ns").unwrap().as_f64()
+        };
+        let de = span("decoupled").unwrap();
+        let md = span("medium").unwrap();
+        let fx = span("flux").unwrap();
+        assert!(md > 0.0, "medium block missing a makespan");
+        assert!(fx <= de, "flux {fx} vs decoupled {de}");
+        // Comparative fields still present (both references in set).
+        assert!(t.get("speedup").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn print_scale_renders_without_error() {
+        print_scale(&scale_doc(true).unwrap()).unwrap();
+    }
+}

@@ -1,0 +1,183 @@
+//! The workload-sweep document (`flux sweep-workloads --json`, schema
+//! `flux-sweep-v1`): every built-in preset
+//! ([`crate::workload::all_presets`]) on every
+//! [`crate::cost::arch::ALL_SCALE_TOPOLOGIES`] entry, flux vs
+//! decoupled — the matrix that shows where the speedup and goodput
+//! gaps diverge (burst backlog widens them, closed-loop think pauses
+//! compress them, the H800 narrow-store cliff turns decode-heavy cells
+//! against Flux).
+//!
+//! The whole preset x topology x method matrix is flattened into one
+//! [`crate::exp::Runner`] job list, so a slow preset never serializes
+//! behind a fast one and `--quick` wall time drops roughly with core
+//! count; the merge is in fixed preset-then-topology order, so the
+//! document stays byte-identical at any worker count.
+
+use anyhow::Result;
+
+use crate::cost::arch::ALL_SCALE_TOPOLOGIES;
+use crate::exp::Runner;
+use crate::overlap::Method;
+use crate::serving::scale::ScaleScenario;
+use crate::util::json::{obj, Json};
+
+use super::scale::scale_entries;
+use super::SWEEP_SCHEMA;
+
+/// Build the sweep document with the default runner. Deterministic
+/// for a given `quick`, same byte-stability contract as
+/// [`super::bench_doc`].
+pub fn sweep_doc(quick: bool) -> Result<Json> {
+    sweep_doc_with(quick, &Runner::new())
+}
+
+/// Like [`sweep_doc`], with the cell matrix executed by `runner`.
+pub fn sweep_doc_with(quick: bool, runner: &Runner) -> Result<Json> {
+    let presets = crate::workload::all_presets(quick);
+    // Flatten the matrix: preset-major, topology-minor — the order the
+    // document has always emitted.
+    let mut cells: Vec<ScaleScenario> = Vec::new();
+    for wl in &presets {
+        for topo in ALL_SCALE_TOPOLOGIES {
+            cells.push(ScaleScenario::with_workload(topo, wl.clone()));
+        }
+    }
+    let entries =
+        scale_entries(&cells, &Method::SERVE_SET, runner)?;
+    let per_preset = ALL_SCALE_TOPOLOGIES.len();
+    let preset_docs: Vec<Json> = presets
+        .iter()
+        .zip(entries.chunks(per_preset))
+        .map(|(wl, topologies)| {
+            obj(vec![
+                ("name", Json::from(wl.name.as_str())),
+                ("workload", wl.to_json()),
+                ("topologies", Json::Arr(topologies.to_vec())),
+            ])
+        })
+        .collect();
+    Ok(obj(vec![
+        ("schema", Json::from(SWEEP_SCHEMA)),
+        ("quick", Json::from(quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("presets", Json::Arr(preset_docs)),
+    ]))
+}
+
+/// Human-readable rendering of the sweep document.
+pub fn print_sweep(doc: &Json) -> Result<()> {
+    let mut rows = Vec::new();
+    for p in doc.get("presets")?.as_arr()? {
+        let name = p.get("name")?.as_str()?;
+        for e in p.get("topologies")?.as_arr()? {
+            let fx = e.get("flux")?;
+            let de = e.get("decoupled")?;
+            let goodput = |m: &Json| -> String {
+                match m.opt("slo") {
+                    Some(s) => s
+                        .get("goodput")
+                        .and_then(|g| g.as_f64())
+                        .map(|g| format!("{:.0}%", g * 100.0))
+                        .unwrap_or_else(|_| "-".to_string()),
+                    None => "-".to_string(),
+                }
+            };
+            rows.push(vec![
+                name.to_string(),
+                e.get("topology")?.as_str()?.to_string(),
+                format!(
+                    "{:.1}",
+                    fx.get("ttft_ns")?.get("p99_ns")?.as_f64()? / 1e6
+                ),
+                format!("{:.1}", fx.get("tokens_per_sec")?.as_f64()?),
+                goodput(fx),
+                goodput(de),
+                format!("{:.2}x", e.get("speedup")?.as_f64()?),
+                format!(
+                    "{:.2}x",
+                    e.get("latency_speedup")?.as_f64()?
+                ),
+            ]);
+        }
+    }
+    crate::util::bench::table(
+        "workload sweep (presets x topologies, flux vs decoupled)",
+        &[
+            "workload",
+            "topology",
+            "ttft p99 ms",
+            "flux tok/s",
+            "flux goodput",
+            "dec goodput",
+            "speedup",
+            "lat speedup",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_doc_is_byte_stable_and_covers_the_matrix() {
+        let a = sweep_doc(true).unwrap().to_string();
+        let b = sweep_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "sweep doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            SWEEP_SCHEMA
+        );
+        let presets = doc.get("presets").unwrap().as_arr().unwrap();
+        assert_eq!(presets.len(), crate::workload::PRESET_NAMES.len());
+        for (p, name) in
+            presets.iter().zip(crate::workload::PRESET_NAMES)
+        {
+            assert_eq!(p.get("name").unwrap().as_str().unwrap(), name);
+            let topos = p.get("topologies").unwrap().as_arr().unwrap();
+            assert_eq!(topos.len(), ALL_SCALE_TOPOLOGIES.len());
+            for t in topos {
+                let speedup =
+                    t.get("speedup").unwrap().as_f64().unwrap();
+                let nvlink = t
+                    .get("cluster")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .contains("NVLink");
+                // The acceptance bar: flux >= decoupled end to end on
+                // every NVLink topology, for every preset.
+                if nvlink {
+                    assert!(
+                        speedup >= 1.0,
+                        "{name} on {}: speedup {speedup}",
+                        t.get("topology").unwrap().as_str().unwrap()
+                    );
+                }
+                // Goodput: flux meets at least as many SLOs as the
+                // decoupled execution, everywhere.
+                let goodput = |m: &Json| {
+                    m.get("slo")
+                        .unwrap()
+                        .get("goodput")
+                        .unwrap()
+                        .as_f64()
+                        .unwrap()
+                };
+                let gfx = goodput(t.get("flux").unwrap());
+                let gde = goodput(t.get("decoupled").unwrap());
+                assert!(
+                    gfx >= gde,
+                    "{name} on {}: flux goodput {gfx} < decoupled {gde}",
+                    t.get("topology").unwrap().as_str().unwrap()
+                );
+            }
+        }
+        // The human rendering consumes the same document (checked here
+        // rather than in its own test to avoid a third full sweep).
+        print_sweep(&doc).unwrap();
+    }
+}

@@ -1,0 +1,266 @@
+//! The event-driven training document (`flux simulate --train --json`,
+//! schema `flux-train-v1`): every selected topology under the
+//! scenario's method set (default: the Megatron-LM, TransformerEngine
+//! and Flux executions of the 1F1B step), executed by the
+//! [`crate::exp::Runner`] at (topology, method) grain — plus one
+//! comm-free ideal-floor cell per topology — and merged in registry
+//! order, byte-identical at any worker count.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cost::arch::TrainTopology;
+use crate::exp::{Mode, Runner, Scenario};
+use crate::overlap::Method;
+use crate::parallel::schedule;
+use crate::training::{
+    ideal_step_ns, overlap_efficiency_vs_ideal, run_train, TrainRun,
+    TrainScenario,
+};
+use crate::util::json::{obj, Json};
+
+use super::TRAIN_SCHEMA;
+
+/// One topology's entry: the scenario plan, one block per method
+/// (keyed by [`Method::train_label`]), Eq. 2 against the precomputed
+/// comm-free ideal, and the comparative speedups when flux (and TE)
+/// are in the set.
+fn train_entry(
+    sc: &TrainScenario,
+    methods: &[Method],
+    runs: &[TrainRun],
+    ideal: f64,
+) -> Result<Json> {
+    let topo = sc.topo;
+    let base = methods
+        .iter()
+        .position(|&m| m == Method::NonOverlap)
+        .context("train scenarios always include the baseline method")?;
+    let base_step = runs[base].step_ns;
+    let method_json = |r: &TrainRun| {
+        obj(vec![
+            ("step_ns", Json::from(r.step_ns)),
+            ("analytic_ns", Json::from(r.analytic_ns)),
+            ("pipe_ns", Json::from(r.pipe_ns)),
+            (
+                "bubble_fraction_pct",
+                Json::from(r.bubble_fraction * 100.0),
+            ),
+            ("dp_exposed_ns", Json::from(r.dp_exposed_ns)),
+            ("opt_ns", Json::from(r.opt_ns)),
+            (
+                "overlap_eff_pct",
+                Json::from(
+                    overlap_efficiency_vs_ideal(
+                        base_step, r.step_ns, ideal,
+                    ) * 100.0,
+                ),
+            ),
+            (
+                "des_vs_analytic",
+                Json::from(r.step_ns / r.analytic_ns),
+            ),
+            ("events", Json::from(r.events)),
+        ])
+    };
+    let mut fields = vec![
+        ("topology", Json::from(topo.name)),
+        ("cluster", Json::from(topo.cluster.name)),
+        ("dp", Json::from(topo.dp)),
+        ("pp", Json::from(topo.pp)),
+        ("tp", Json::from(topo.tp)),
+        ("gpus", Json::from(topo.gpus())),
+        ("microbatches", Json::from(sc.microbatches)),
+        ("micro_tokens", Json::from(sc.micro_tokens)),
+        ("seq", Json::from(sc.seq)),
+        ("seed", Json::from(sc.seed as usize)),
+        (
+            "bubble_analytic_pct",
+            Json::from(
+                schedule::bubble_fraction(topo.pp, sc.microbatches)
+                    * 100.0,
+            ),
+        ),
+        ("ideal_step_ns", Json::from(ideal)),
+    ];
+    for (m, r) in methods.iter().zip(runs) {
+        fields.push((m.train_label(), method_json(r)));
+    }
+    if let Some(fx) = methods.iter().position(|&m| m == Method::Flux) {
+        fields.push((
+            "speedup",
+            Json::from(base_step / runs[fx].step_ns),
+        ));
+        if let Some(te) =
+            methods.iter().position(|&m| m == Method::Medium)
+        {
+            fields.push((
+                "speedup_vs_te",
+                Json::from(runs[te].step_ns / runs[fx].step_ns),
+            ));
+        }
+    }
+    Ok(obj(fields))
+}
+
+/// The training document for one scenario, cells executed by `runner`
+/// at (topology, method) grain so even a single-topology run spreads
+/// its method set (and ideal floor) across workers.
+pub fn train_doc_scenario(sc: &Scenario, runner: &Runner) -> Result<Json> {
+    ensure!(sc.mode == Mode::Train, "not a train scenario");
+    let methods = sc.method_set();
+    let cells = sc.train_cells()?;
+    let runs: Vec<Vec<TrainRun>> = runner.run_product(
+        &cells,
+        &methods,
+        |tc, &m| run_train(tc, m),
+    )?;
+    let ideals: Vec<f64> = runner.run_matrix(&cells, ideal_step_ns)?;
+    let mut topologies = Vec::new();
+    for ((tc, cell_runs), ideal) in
+        cells.iter().zip(&runs).zip(&ideals)
+    {
+        topologies.push(train_entry(tc, &methods, cell_runs, *ideal)?);
+    }
+    let mut top = vec![
+        ("schema", Json::from(TRAIN_SCHEMA)),
+        ("quick", Json::from(sc.quick)),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("topologies", Json::Arr(topologies)),
+    ];
+    if let Some(names) = sc.topo_filter_names()? {
+        // Same contract as the scale doc: a filtered report must be
+        // distinguishable from a full sweep when diffing trajectories.
+        top.push(("topo_filter", super::topo_filter_json(&names)));
+    }
+    if !sc.name.is_empty() {
+        top.push(("scenario", Json::from(sc.name.as_str())));
+    }
+    Ok(obj(top))
+}
+
+/// The training document: every topology in `ALL_TRAIN_TOPOLOGIES`
+/// under the Megatron-LM (non-overlap), TransformerEngine and Flux
+/// executions of the 1F1B step. Deterministic for a given `quick`.
+pub fn train_doc(quick: bool) -> Result<Json> {
+    train_doc_for(quick, None)
+}
+
+/// Like [`train_doc`], restricted to one topology when `only` is set
+/// (`flux simulate --train --topo <name>`).
+pub fn train_doc_for(
+    quick: bool,
+    only: Option<&'static TrainTopology>,
+) -> Result<Json> {
+    train_doc_scenario(&Scenario::train(only, quick), &Runner::new())
+}
+
+/// Human-readable rendering of the training document.
+pub fn print_train(doc: &Json) -> Result<()> {
+    fn ms(j: &Json, k: &str) -> Result<String> {
+        Ok(format!("{:.1}", j.get(k)?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        let fx = e.get("flux")?;
+        rows.push(vec![
+            e.get("topology")?.as_str()?.to_string(),
+            format!(
+                "{}x{}x{}",
+                e.get("dp")?.as_usize()?,
+                e.get("pp")?.as_usize()?,
+                e.get("tp")?.as_usize()?
+            ),
+            ms(e.get("megatron")?, "step_ns")?,
+            ms(e.get("te")?, "step_ns")?,
+            ms(fx, "step_ns")?,
+            format!(
+                "{:.1}%",
+                fx.get("bubble_fraction_pct")?.as_f64()?
+            ),
+            format!("{:.1}%", fx.get("overlap_eff_pct")?.as_f64()?),
+            ms(fx, "dp_exposed_ns")?,
+            format!("{:.2}x", e.get("speedup")?.as_f64()?),
+            format!("{:.2}x", e.get("speedup_vs_te")?.as_f64()?),
+        ]);
+    }
+    crate::util::bench::table(
+        "training at scale (event-driven 1F1B, flux vs Megatron-LM/TE)",
+        &[
+            "topology",
+            "dp x pp x tp",
+            "megatron ms",
+            "TE ms",
+            "flux ms",
+            "bubble",
+            "flux eff",
+            "dp tail ms",
+            "vs megatron",
+            "vs TE",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::ALL_TRAIN_TOPOLOGIES;
+
+    #[test]
+    fn train_doc_is_byte_stable_and_well_formed() {
+        let a = train_doc(true).unwrap().to_string();
+        let b = train_doc(true).unwrap().to_string();
+        assert_eq!(a, b, "train doc must be deterministic");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            TRAIN_SCHEMA
+        );
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), ALL_TRAIN_TOPOLOGIES.len());
+        for t in topos {
+            for k in [
+                "topology", "cluster", "dp", "pp", "tp", "gpus",
+                "microbatches", "megatron", "te", "flux", "speedup",
+                "speedup_vs_te", "ideal_step_ns",
+            ] {
+                assert!(t.opt(k).is_some(), "missing key {k}");
+            }
+            let fx = t.get("flux").unwrap();
+            let step = fx.get("step_ns").unwrap().as_f64().unwrap();
+            let pipe = fx.get("pipe_ns").unwrap().as_f64().unwrap();
+            assert!(step > pipe && pipe > 0.0);
+            let bubble = fx
+                .get("bubble_fraction_pct")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(bubble > 0.0 && bubble < 100.0);
+            assert!(
+                t.get("speedup").unwrap().as_f64().unwrap() > 1.0,
+                "flux must beat megatron on {}",
+                t.get("topology").unwrap().as_str().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn train_doc_topo_filter_marks_the_document() {
+        use crate::cost::arch::TRAIN_NVLINK_128;
+        let doc = train_doc_for(true, Some(&TRAIN_NVLINK_128)).unwrap();
+        assert_eq!(
+            doc.get("topo_filter").unwrap().as_str().unwrap(),
+            TRAIN_NVLINK_128.name
+        );
+        assert_eq!(
+            doc.get("topologies").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn print_train_renders_without_error() {
+        print_train(&train_doc(true).unwrap()).unwrap();
+    }
+}

@@ -41,7 +41,7 @@ use anyhow::{ensure, Context, Result};
 use crate::cost::arch::ScaleTopology;
 use crate::model::analysis::{layer_attention_extra_ns, layer_fwd_ops};
 use crate::model::configs::TransformerConfig;
-use crate::parallel::Method;
+use crate::overlap::Method;
 use crate::serving::batcher::{Batcher, BatcherConfig, Work};
 use crate::serving::kvcache::KvCacheManager;
 use crate::serving::request::Request;
@@ -514,6 +514,18 @@ pub fn run_scale_traced(
     })
 }
 
+/// Run one scenario under every method in `methods`, sequentially and
+/// in order — the uniform method-set entry for in-process callers
+/// (comparisons, tests). The report layer reaches the same `run_scale`
+/// runs through `exp::Runner::run_product` instead, so the method set
+/// spreads across workers there.
+pub fn run_scale_methods(
+    sc: &ScaleScenario,
+    methods: &[Method],
+) -> Result<Vec<ScaleReport>> {
+    methods.iter().map(|&m| run_scale(sc, m)).collect()
+}
+
 /// The Fig. 16/17-shaped comparison: the same scenario under the
 /// decoupled (vLLM-style) and Flux executions.
 pub struct ScaleComparison {
@@ -522,6 +534,18 @@ pub struct ScaleComparison {
 }
 
 impl ScaleComparison {
+    /// Assemble the flux-vs-decoupled comparison out of a method-set
+    /// run, when both reference methods are present.
+    pub fn from_runs(runs: &[ScaleReport]) -> Option<ScaleComparison> {
+        let find = |m: Method| {
+            runs.iter().find(|r| r.method == m).cloned()
+        };
+        Some(ScaleComparison {
+            decoupled: find(Method::NonOverlap)?,
+            flux: find(Method::Flux)?,
+        })
+    }
+
     /// Throughput speedup of Flux over the decoupled execution.
     pub fn speedup(&self) -> f64 {
         self.decoupled.makespan_ns / self.flux.makespan_ns
@@ -543,10 +567,9 @@ impl ScaleComparison {
 }
 
 pub fn compare_scale(sc: &ScaleScenario) -> Result<ScaleComparison> {
-    Ok(ScaleComparison {
-        decoupled: run_scale(sc, Method::NonOverlap)?,
-        flux: run_scale(sc, Method::Flux)?,
-    })
+    let runs = run_scale_methods(sc, &Method::SERVE_SET)?;
+    Ok(ScaleComparison::from_runs(&runs)
+        .expect("SERVE_SET contains both reference methods"))
 }
 
 /// Both methods with the DES streams captured side by side in one
@@ -670,6 +693,28 @@ mod tests {
             pcie.speedup(),
             nvl.speedup()
         );
+    }
+
+    #[test]
+    fn method_set_runs_match_the_pairwise_comparison() {
+        // run_scale_methods is the uniform entry the experiment layer
+        // iterates; the historical pairwise comparison must be exactly
+        // its SERVE_SET projection.
+        let sc = ScaleScenario::quick(&SCALE_TP8);
+        let runs =
+            run_scale_methods(&sc, &Method::SERVE_SET).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].method, Method::NonOverlap);
+        assert_eq!(runs[1].method, Method::Flux);
+        let cmp = compare_scale(&sc).unwrap();
+        assert_eq!(cmp.decoupled.makespan_ns, runs[0].makespan_ns);
+        assert_eq!(cmp.flux.makespan_ns, runs[1].makespan_ns);
+        // from_runs needs both references.
+        assert!(ScaleComparison::from_runs(&runs[..1]).is_none());
+        // A wider set still projects to the same pair.
+        let all = run_scale_methods(&sc, &Method::ALL).unwrap();
+        let cmp2 = ScaleComparison::from_runs(&all).unwrap();
+        assert_eq!(cmp2.speedup(), cmp.speedup());
     }
 
     #[test]

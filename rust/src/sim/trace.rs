@@ -108,15 +108,12 @@ impl Trace {
         ])
     }
 
-    /// Write the document to `path`.
+    /// Write the document to `path`. Failures name the path (a
+    /// `--trace` argument under a missing or read-only parent used to
+    /// surface as a bare io error).
     pub fn write(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
-            }
-        }
-        std::fs::write(path, self.to_json().to_string())
-            .with_context(|| format!("writing trace {}", path.display()))
+        crate::util::fsio::write_text(path, &self.to_json().to_string())
+            .context("writing chrome trace")
     }
 }
 

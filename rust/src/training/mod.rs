@@ -492,11 +492,24 @@ impl TrainComparison {
     }
 }
 
+/// Run one scenario under every method in `methods`, sequentially and
+/// in order — the uniform method-set entry for in-process callers
+/// (comparisons, tests). The report layer reaches the same `run_train`
+/// runs through `exp::Runner::run_product` instead, so the method set
+/// spreads across workers there.
+pub fn run_train_methods(
+    sc: &TrainScenario,
+    methods: &[Method],
+) -> Result<Vec<TrainRun>> {
+    methods.iter().map(|&m| run_train(sc, m)).collect()
+}
+
 pub fn compare_train(sc: &TrainScenario) -> Result<TrainComparison> {
+    let runs = run_train_methods(sc, &Method::TRAIN_SET)?;
     Ok(TrainComparison {
-        megatron: run_train(sc, Method::NonOverlap)?,
-        te: run_train(sc, Method::Medium)?,
-        flux: run_train(sc, Method::Flux)?,
+        megatron: runs[0],
+        te: runs[1],
+        flux: runs[2],
     })
 }
 
@@ -642,6 +655,20 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn method_set_runs_match_the_three_way_comparison() {
+        let sc = TrainScenario::quick(&TRAIN_NVLINK_128);
+        let runs =
+            run_train_methods(&sc, &Method::TRAIN_SET).unwrap();
+        assert_eq!(runs.len(), 3);
+        let cmp = compare_train(&sc).unwrap();
+        assert_eq!(runs[0].step_ns, cmp.megatron.step_ns);
+        assert_eq!(runs[1].step_ns, cmp.te.step_ns);
+        assert_eq!(runs[2].step_ns, cmp.flux.step_ns);
+        assert_eq!(runs[0].method, Method::NonOverlap);
+        assert_eq!(runs[2].method, Method::Flux);
     }
 
     #[test]

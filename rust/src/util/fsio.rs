@@ -1,0 +1,70 @@
+//! Filesystem helpers with pointed error context.
+//!
+//! `--out` and `--trace` paths come straight from the command line, so
+//! they routinely point at missing, read-only or non-directory parents.
+//! A bare `io::Error` ("Not a directory (os error 20)") does not say
+//! *which* path was bad; every writer in the crate goes through
+//! [`write_text`] so the failure always names the offending path.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write `text` to `path`, creating missing parent directories. Both
+/// failure modes (un-creatable parent, unwritable file) produce an
+/// error naming the path.
+pub fn write_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| {
+                format!(
+                    "creating parent directory {} for {}",
+                    dir.display(),
+                    path.display()
+                )
+            })?;
+        }
+    }
+    std::fs::write(path, text)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("flux_fsio_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_creates_missing_parents() {
+        let dir = tmp("ok");
+        let path = dir.join("a/b/out.json");
+        write_text(&path, "{}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{}");
+        // Existing parents are fine too (idempotent).
+        write_text(&path, "[]").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "[]");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn error_names_the_offending_path() {
+        // A parent that is a *file* cannot become a directory — the
+        // error must name the path instead of surfacing a bare io code.
+        let dir = tmp("err");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "x").unwrap();
+        let bad = blocker.join("sub/out.json");
+        let err = format!("{:#}", write_text(&bad, "{}").unwrap_err());
+        assert!(
+            err.contains("blocker") && err.contains("out.json"),
+            "error must name the path: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

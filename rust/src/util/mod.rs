@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

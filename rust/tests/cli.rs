@@ -37,6 +37,132 @@ fn unknown_command_fails() {
 }
 
 #[test]
+fn list_prints_every_registry() {
+    // CLI discoverability: topologies, workload presets, overlap
+    // methods and report schemas, sourced from the registries the
+    // scenario runner resolves against.
+    let out = flux_bin().arg("list").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for t in flux::cost::arch::ALL_SCALE_TOPOLOGIES {
+        assert!(text.contains(t.name), "missing topology {}", t.name);
+    }
+    for t in flux::cost::arch::ALL_TRAIN_TOPOLOGIES {
+        assert!(text.contains(t.name), "missing topology {}", t.name);
+    }
+    for name in flux::workload::PRESET_NAMES {
+        assert!(text.contains(name), "missing preset {name}");
+    }
+    for m in flux::overlap::Method::ALL {
+        assert!(text.contains(m.key()), "missing method {}", m.key());
+    }
+    for s in flux::report::SCHEMAS {
+        assert!(text.contains(s.name), "missing schema {}", s.name);
+    }
+}
+
+#[test]
+fn scenario_subcommand_runs_the_checked_in_file() {
+    let dir = tmp_dir("scenario");
+    let file = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts/scenario_h800_bursty.json"
+    );
+    let run = |name: &str, threads: &str| -> String {
+        let path = dir.join(name);
+        let out = flux_bin()
+            .args(["scenario", file, "--json", "--threads", threads])
+            .arg("--out")
+            .arg(&path)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&path).unwrap()
+    };
+    // Parallel and sequential scenario runs are byte-identical (the
+    // run_matrix determinism contract, at the CLI surface).
+    let a = run("seq.json", "1");
+    let b = run("par.json", "3");
+    assert_eq!(a, b, "scenario runs must not depend on --threads");
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::SCALE_SCHEMA
+    );
+    assert_eq!(
+        doc.get("scenario").unwrap().as_str().unwrap(),
+        "h800-bursty"
+    );
+    let t = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+    for key in ["decoupled", "medium", "flux"] {
+        assert!(t.opt(key).is_some(), "missing method block {key}");
+    }
+
+    // Missing files and broken scenarios fail with the path named.
+    let out = flux_bin()
+        .args(["scenario", "no-such-scenario.json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr)
+        .contains("no-such-scenario.json"));
+
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        r#"{"name": "bad", "mode": "serve", "methods": ["flux"]}"#,
+    )
+    .unwrap();
+    let out = flux_bin()
+        .arg("scenario")
+        .arg(&bad)
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("baseline"), "pointed error expected: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_out_and_trace_paths_fail_with_the_path_named() {
+    // Regression (satellite): --out/--trace under a non-directory
+    // parent must produce an error naming the path, not a bare io
+    // error.
+    let dir = tmp_dir("badpaths");
+    let blocker = dir.join("blocker");
+    std::fs::write(&blocker, "x").unwrap();
+    let out = flux_bin()
+        .args([
+            "simulate", "--scale", "--quick", "--json",
+            "--topo", "1-node-tp8", "--out",
+        ])
+        .arg(blocker.join("sub/report.json"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("blocker"), "must name the path: {err}");
+
+    let out = flux_bin()
+        .args([
+            "simulate", "--scale", "--quick",
+            "--topo", "1-node-tp8", "--trace",
+        ])
+        .arg(blocker.join("sub/trace.json"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("blocker"), "must name the path: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn gen_goldens_writes_the_golden_document() {
     let dir = tmp_dir("goldens");
     let path = dir.join("golden_swizzle.json");

@@ -1,0 +1,124 @@
+//! Experiment-layer integration: the parallel `Runner` must be
+//! byte-identical to the sequential path across every preset x
+//! topology cell, and scenario files must round-trip and reject
+//! nonsense with pointed errors.
+
+use flux::exp::{Mode, Runner, Scenario, WorkloadRef};
+use flux::overlap::Method;
+use flux::report;
+use flux::util::json::Json;
+use flux::util::propcheck::{forall_gen, usize_in};
+
+#[test]
+fn sweep_matrix_is_byte_identical_at_any_thread_count() {
+    // THE determinism-under-parallelism contract (and the CI
+    // BENCH_4 byte-compare): the full preset x topology x method
+    // matrix, sequential vs drawn worker counts.
+    let seq = report::sweep_doc_with(true, &Runner::with_threads(1))
+        .unwrap()
+        .to_string();
+    assert!(seq.contains("flux-sweep-v1"));
+    forall_gen(3, 0xF1A7, usize_in(2, 9), |&threads| {
+        let par =
+            report::sweep_doc_with(true, &Runner::with_threads(threads))
+                .unwrap()
+                .to_string();
+        assert_eq!(par, seq, "{threads} threads diverged");
+    });
+}
+
+#[test]
+fn scale_and_train_docs_are_byte_identical_across_thread_counts() {
+    // Acceptance: parallel == sequential across >= 2 thread counts,
+    // for both DES document families.
+    let serve = Scenario::serve(None, None, true);
+    let train = Scenario::train(None, true);
+    let seq_scale =
+        report::scale_doc_scenario(&serve, &Runner::with_threads(1))
+            .unwrap()
+            .to_string();
+    let seq_train =
+        report::train_doc_scenario(&train, &Runner::with_threads(1))
+            .unwrap()
+            .to_string();
+    for threads in [2, 5] {
+        let runner = Runner::with_threads(threads);
+        assert_eq!(
+            report::scale_doc_scenario(&serve, &runner)
+                .unwrap()
+                .to_string(),
+            seq_scale,
+            "scale doc at {threads} threads"
+        );
+        assert_eq!(
+            report::train_doc_scenario(&train, &runner)
+                .unwrap()
+                .to_string(),
+            seq_train,
+            "train doc at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn checked_in_scenario_file_loads_and_runs() {
+    let path = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts/scenario_h800_bursty.json"
+    ));
+    let sc = Scenario::load(path).unwrap();
+    assert_eq!(sc.name, "h800-bursty");
+    assert_eq!(sc.mode, Mode::Serve);
+    assert_eq!(
+        sc.workload,
+        Some(WorkloadRef::Preset("bursty-decode".into()))
+    );
+    assert_eq!(sc.method_set().len(), 3);
+    assert_eq!(sc.topo_count().unwrap(), 1);
+    // It runs end to end and stamps the document.
+    let doc =
+        report::scale_doc_scenario(&sc, &Runner::with_threads(2))
+            .unwrap();
+    assert_eq!(
+        doc.get("scenario").unwrap().as_str().unwrap(),
+        "h800-bursty"
+    );
+    assert_eq!(
+        doc.get("workload_filter").unwrap().as_str().unwrap(),
+        "bursty-decode"
+    );
+    let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+    assert_eq!(topos.len(), 1);
+    // All three registry methods emitted their blocks.
+    for key in ["decoupled", "medium", "flux"] {
+        assert!(topos[0].opt(key).is_some(), "missing method {key}");
+    }
+    // H800 + bursty traffic: the port-calibrated band says flux wins
+    // end to end (burst backlog widens the gap, PR-4).
+    assert!(
+        topos[0].get("speedup").unwrap().as_f64().unwrap() >= 1.0
+    );
+}
+
+#[test]
+fn scenario_json_round_trips_through_the_cli_surface() {
+    let sc = Scenario {
+        name: "roundtrip".into(),
+        mode: Mode::Serve,
+        topos: Some(vec!["2-node tp8 dp2".into()]),
+        workload: Some(WorkloadRef::Preset("diurnal-chat".into())),
+        methods: Some(vec![Method::NonOverlap, Method::Flux]),
+        quick: true,
+    };
+    let text = sc.to_json().to_string();
+    let parsed = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, sc);
+    assert_eq!(parsed.to_json().to_string(), text);
+}
+
+#[test]
+fn runner_default_uses_every_core_and_flag_overrides() {
+    assert!(Runner::new().threads() >= 1);
+    assert_eq!(Runner::from_flag(Some(7)).threads(), 7);
+    assert_eq!(Runner::with_threads(0).threads(), 1, "clamped");
+}
