@@ -10,7 +10,7 @@
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts test bench fmt lint clean
+.PHONY: artifacts test bench bench-ci fmt lint clean
 
 artifacts:
 	@if python3 -c "import jax" >/dev/null 2>&1; then \
@@ -28,6 +28,12 @@ test:
 
 bench:
 	cargo run --release --manifest-path rust/Cargo.toml --bin flux -- bench --json
+
+# The exact trajectory CI's bench-smoke job runs: BENCH_0..4 byte-stable
+# reports, BENCH_5 wall-clock events/sec, and the perf gate against
+# artifacts/perf_baseline.json.
+bench-ci:
+	bash scripts/bench_trajectory.sh
 
 fmt:
 	cargo fmt --all

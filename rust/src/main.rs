@@ -99,7 +99,10 @@ COMMANDS:
     gen-goldens  emit the cross-language golden file from the Rust tile
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
-    bench        pinned-seed benchmark suite
+    bench        pinned-seed benchmark suite, incl. the DES-engine
+                   events_per_sec hold workload (deterministic counts;
+                   wall-clock throughput + heap-queue comparison with
+                   --wall)
                    --json write BENCH_<n>.json (byte-stable) instead of
                           printing; [--out <path>] [--quick] [--wall]
                           [--threads <n>]
@@ -216,6 +219,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
             // Bench::run prints one line per hotpath as it measures.
             println!("\nwall-clock hotpath timings (machine-local):");
             let _ = flux::report::wall_doc();
+            let eps = flux::report::events_per_sec_doc(
+                quick, true, &runner,
+            );
+            println!(
+                "DES engine: {:.2e} events/s (heap queue {:.2e}, \
+                 speedup {:.2}x)",
+                eps.get("events_per_sec")?.as_f64()?,
+                eps.get("heap_events_per_sec")?.as_f64()?,
+                eps.get("speedup_vs_heap")?.as_f64()?,
+            );
         }
     }
     Ok(())

@@ -12,6 +12,7 @@ use crate::cost::gemm::tile_grid;
 use crate::exp::Runner;
 use crate::figures::{ag_problem, rs_problem};
 use crate::overlap::{baseline, medium, Problem};
+use crate::sim::engine::{hold_workload, hold_workload_heap, HoldRun};
 use crate::tuner::TunerCache;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
@@ -25,6 +26,14 @@ const SEEDS_QUICK: [u64; 2] = [7, 11];
 /// GEMM m sweep (full / quick); GPT-3 op shapes, 8-way TP.
 const MS_FULL: [usize; 3] = [512, 2048, 8192];
 const MS_QUICK: [usize; 1] = [2048];
+
+/// Pinned seed and sizes for the DES-engine hold workload behind the
+/// `events_per_sec` section (full / quick resident populations).
+const HOLD_SEED: u64 = 0x0E5C;
+const HOLD_RESIDENT_FULL: [usize; 3] = [256, 4096, 65536];
+const HOLD_RESIDENT_QUICK: [usize; 1] = [4096];
+const HOLD_OPS_FULL: usize = 2_000_000;
+const HOLD_OPS_QUICK: usize = 200_000;
 
 /// One suite entry: a (cluster, op, m) cell with per-method metrics.
 /// Cells never share tuner state: every (cluster, problem) pair is
@@ -130,7 +139,103 @@ pub fn bench_doc_with(quick: bool, runner: &Runner) -> Json {
             ),
         ),
         ("suite", Json::Arr(suite)),
+        // Additive on flux-bench-v1 (consumers tolerate added keys):
+        // deterministic engine-throughput workload counters. Wall-clock
+        // throughput lives under `wall.events_per_sec` (--wall only) so
+        // this document stays byte-stable across reruns and machines.
+        ("events_per_sec", events_per_sec_doc(quick, false, runner)),
     ])
+}
+
+/// Hold-workload sizes for the given mode.
+fn hold_cells(quick: bool) -> (&'static [usize], usize) {
+    if quick {
+        (&HOLD_RESIDENT_QUICK, HOLD_OPS_QUICK)
+    } else {
+        (&HOLD_RESIDENT_FULL, HOLD_OPS_FULL)
+    }
+}
+
+/// The `events_per_sec` section: the DES engine driven through the
+/// pinned-seed hold workload (see [`hold_workload`]), one cell per
+/// resident-population size, cells spread across `runner`'s workers.
+///
+/// With `wall = false` every emitted key is a pure function of
+/// `(quick,)` — pop/schedule counts and the pop-sequence checksum — so
+/// the section is safe inside the byte-compared base document. With
+/// `wall = true` each cell gains `wall_ns`/`events_per_sec`, the
+/// section gains the aggregate throughput, and the same workload is
+/// replayed through the reference
+/// [`HeapEventQueue`](crate::sim::engine::HeapEventQueue) to report
+/// `heap_events_per_sec` and `speedup_vs_heap` — the calendar queue's
+/// win as a measured number on this machine.
+pub fn events_per_sec_doc(quick: bool, wall: bool, runner: &Runner) -> Json {
+    let (residents, ops) = hold_cells(quick);
+    let runs: Vec<HoldRun> = runner
+        .run_matrix(residents, |&resident| {
+            Ok(hold_workload(resident, ops, HOLD_SEED))
+        })
+        .expect("hold cells are infallible");
+    let heap_runs: Option<Vec<HoldRun>> = wall.then(|| {
+        runner
+            .run_matrix(residents, |&resident| {
+                Ok(hold_workload_heap(resident, ops, HOLD_SEED))
+            })
+            .expect("hold cells are infallible")
+    });
+
+    let events_of = |r: &HoldRun| r.pops + r.schedules;
+    let mut cells = Vec::new();
+    let mut total_events = 0u64;
+    let mut total_wall_ns = 0.0;
+    for run in &runs {
+        total_events += events_of(run);
+        total_wall_ns += run.wall_ns;
+        let mut kv = vec![
+            ("resident", Json::from(run.resident)),
+            ("ops", Json::from(run.ops)),
+            ("pops", Json::from(run.pops as usize)),
+            ("schedules", Json::from(run.schedules as usize)),
+            ("checksum", Json::from(format!("{:016x}", run.checksum))),
+        ];
+        if wall {
+            kv.push(("wall_ns", Json::from(run.wall_ns)));
+            kv.push((
+                "events_per_sec",
+                Json::from(events_of(run) as f64 / (run.wall_ns * 1e-9)),
+            ));
+        }
+        cells.push(obj(kv));
+    }
+
+    let mut kv = vec![
+        ("workload", Json::from("hold")),
+        ("seed", Json::from(HOLD_SEED as usize)),
+        ("ops_per_cell", Json::from(ops)),
+        ("cells", Json::Arr(cells)),
+        ("total_events", Json::from(total_events as usize)),
+    ];
+    if let Some(heap_runs) = heap_runs {
+        let mut heap_wall_ns = 0.0;
+        for (cal, heap) in runs.iter().zip(&heap_runs) {
+            // Same seed, same admission rules, same total order: a
+            // checksum mismatch would mean the two queues disagreed on
+            // pop order, which the differential tests forbid.
+            assert_eq!(
+                cal.checksum, heap.checksum,
+                "calendar and heap queues diverged on the hold workload \
+                 (resident={})",
+                cal.resident
+            );
+            heap_wall_ns += heap.wall_ns;
+        }
+        let cal_eps = total_events as f64 / (total_wall_ns * 1e-9);
+        let heap_eps = total_events as f64 / (heap_wall_ns * 1e-9);
+        kv.push(("events_per_sec", Json::from(cal_eps)));
+        kv.push(("heap_events_per_sec", Json::from(heap_eps)));
+        kv.push(("speedup_vs_heap", Json::from(cal_eps / heap_eps)));
+    }
+    obj(kv)
 }
 
 /// Wall-clock hotpath timings (NOT byte-stable; appended only on
@@ -187,7 +292,17 @@ pub fn write_bench(
     let mut doc = bench_doc_with(quick, runner);
     if wall {
         if let Json::Obj(m) = &mut doc {
-            m.insert("wall".to_string(), wall_doc());
+            let mut w = wall_doc();
+            if let Json::Obj(wm) = &mut w {
+                // Machine-local engine throughput (and the heap-queue
+                // comparison) ride under `wall`, never in the
+                // byte-compared base document.
+                wm.insert(
+                    "events_per_sec".to_string(),
+                    events_per_sec_doc(quick, true, runner),
+                );
+            }
+            m.insert("wall".to_string(), w);
         }
     }
     write_doc(&doc, out)
@@ -223,6 +338,27 @@ pub fn print_bench(doc: &Json) -> Result<()> {
         ],
         &rows,
     );
+    if let Some(eps) = doc.opt("events_per_sec") {
+        let mut rows = Vec::new();
+        for c in eps.get("cells")?.as_arr()? {
+            let mut row = vec![
+                c.get("resident")?.as_usize()?.to_string(),
+                c.get("ops")?.as_usize()?.to_string(),
+                c.get("pops")?.as_usize()?.to_string(),
+                c.get("checksum")?.as_str()?.to_string(),
+            ];
+            row.push(match c.opt("events_per_sec") {
+                Some(v) => format!("{:.2e}", v.as_f64()?),
+                None => "- (--wall)".to_string(),
+            });
+            rows.push(row);
+        }
+        crate::util::bench::table(
+            "DES engine hold workload (pinned seed)",
+            &["resident", "ops", "pops", "checksum", "events/s"],
+            &rows,
+        );
+    }
     Ok(())
 }
 
@@ -271,6 +407,33 @@ mod tests {
                     >= fx.get("p50_ns").unwrap().as_f64().unwrap()
             );
             assert!(fx.get("tiles_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // The additive engine-throughput section: deterministic keys
+        // only (no wall_ns / events_per_sec in the base document).
+        let eps = parsed.get("events_per_sec").unwrap();
+        assert_eq!(eps.get("workload").unwrap().as_str().unwrap(), "hold");
+        let cells = eps.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.get("resident").unwrap().as_usize().unwrap(), 4096);
+        assert!(c.get("pops").unwrap().as_usize().unwrap() > 0);
+        assert!(c.opt("wall_ns").is_none());
+        assert!(c.opt("events_per_sec").is_none());
+        assert!(eps.opt("events_per_sec").is_none());
+    }
+
+    #[test]
+    fn wall_section_reports_throughput_and_heap_comparison() {
+        let doc = events_per_sec_doc(true, true, &Runner::with_threads(1));
+        let eps = doc.get("events_per_sec").unwrap().as_f64().unwrap();
+        assert!(eps > 0.0, "events_per_sec must be positive: {eps}");
+        let heap =
+            doc.get("heap_events_per_sec").unwrap().as_f64().unwrap();
+        assert!(heap > 0.0);
+        let speedup = doc.get("speedup_vs_heap").unwrap().as_f64().unwrap();
+        assert!(speedup > 0.0);
+        for c in doc.get("cells").unwrap().as_arr().unwrap() {
+            assert!(c.get("wall_ns").unwrap().as_f64().unwrap() > 0.0);
         }
     }
 

@@ -1,8 +1,8 @@
 //! Report emission: every `flux` JSON document behind one
 //! schema-versioned, byte-stable writer.
 //!
-//! Each schema owns a submodule ([`bench`], [`scale`], [`sweep`],
-//! [`train`]); this module holds what they share — the schema
+//! Each schema owns a (private) submodule — `bench`, `scale`, `sweep`,
+//! `train` — and this module holds what they share: the schema
 //! registry, the `BENCH_<n>.json` trajectory path policy, the writer
 //! with pointed path errors, and the [`Summary`] projections every
 //! latency block uses.
@@ -27,7 +27,8 @@ mod sweep;
 mod train;
 
 pub use bench::{
-    bench_doc, bench_doc_with, print_bench, wall_doc, write_bench,
+    bench_doc, bench_doc_with, events_per_sec_doc, print_bench, wall_doc,
+    write_bench,
 };
 pub use scale::{
     print_scale, scale_doc, scale_doc_for, scale_doc_scenario,

@@ -51,7 +51,7 @@ use crate::serving::simulate::{
 use crate::sim::engine::EventQueue;
 use crate::sim::trace::Trace;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{Streaming, Summary};
 use crate::workload::{Routing, SloReport, WorkloadSpec};
 
 /// One serving-at-scale experiment: a topology, a model, an engine
@@ -197,14 +197,20 @@ pub fn scale_overlap_efficiency(sc: &ScaleScenario, method: Method) -> f64 {
     (base - t) / exposed
 }
 
-/// One replica's runtime state inside the coordinator.
-struct Replica {
-    batcher: Batcher,
-    kv: KvCacheManager,
+/// Per-replica runtime state, struct-of-arrays.
+///
+/// The DES hot loop touches one or two fields of one replica per event
+/// (a routing scan reads only outstanding counts, a step completion
+/// only that replica's batch bookkeeping); splitting the arrays keeps
+/// each scan contiguous in memory instead of striding over whole
+/// replica records. Index `r` across all vectors is one replica.
+struct Replicas {
+    batchers: Vec<Batcher>,
+    kvs: Vec<KvCacheManager>,
     /// Ids of the batch currently executing (empty when idle).
-    in_flight: Vec<u64>,
-    in_flight_is_prefill: bool,
-    busy_ns: f64,
+    in_flight: Vec<Vec<u64>>,
+    in_flight_is_prefill: Vec<bool>,
+    busy_ns: Vec<f64>,
 }
 
 /// DES events. Arrivals carry the request index; step completions the
@@ -251,21 +257,30 @@ pub fn run_scale_traced(
         }
     }
 
-    let mut replicas: Vec<Replica> = (0..dp)
-        .map(|_| Replica {
-            batcher: Batcher::new(BatcherConfig {
-                max_prefill_batch: sc.max_prefill_batch,
-                max_decode_batch: sc.max_decode_batch,
-                max_prompt,
-                max_seq: max_total + 1,
-                max_prefill_tokens,
-            }),
-            kv: KvCacheManager::new(sc.kv_seqs * blocks_per_seq, block_tokens),
-            in_flight: Vec::new(),
-            in_flight_is_prefill: false,
-            busy_ns: 0.0,
-        })
-        .collect();
+    let mut reps = Replicas {
+        batchers: (0..dp)
+            .map(|_| {
+                Batcher::new(BatcherConfig {
+                    max_prefill_batch: sc.max_prefill_batch,
+                    max_decode_batch: sc.max_decode_batch,
+                    max_prompt,
+                    max_seq: max_total + 1,
+                    max_prefill_tokens,
+                })
+            })
+            .collect(),
+        kvs: (0..dp)
+            .map(|_| {
+                KvCacheManager::new(
+                    sc.kv_seqs * blocks_per_seq,
+                    block_tokens,
+                )
+            })
+            .collect(),
+        in_flight: vec![Vec::new(); dp],
+        in_flight_is_prefill: vec![false; dp],
+        busy_ns: vec![0.0; dp],
+    };
 
     // Step-time cache: (phase, batch, padded-seq | mean-cache-len) →
     // ns. Identical across replicas (same spec/model/method/seed), so
@@ -335,7 +350,7 @@ pub fn run_scale_traced(
                     // index for determinism.
                     Routing::LeastOutstanding => (0..dp)
                         .min_by_key(|&j| {
-                            (replicas[j].batcher.outstanding(), j)
+                            (reps.batchers[j].outstanding(), j)
                         })
                         .expect("dp >= 1"),
                 };
@@ -349,7 +364,7 @@ pub fn run_scale_traced(
                         vec![("req", Json::from(i))],
                     );
                 }
-                replicas[r].batcher.submit(Request::new(
+                reps.batchers[r].submit(Request::new(
                     i as u64,
                     now,
                     vec![1; len.prompt],
@@ -358,18 +373,17 @@ pub fn run_scale_traced(
                 r
             }
             Ev::StepDone(r) => {
-                let rep = &mut replicas[r];
-                let ids = std::mem::take(&mut rep.in_flight);
-                if rep.in_flight_is_prefill {
+                let ids = std::mem::take(&mut reps.in_flight[r]);
+                if reps.in_flight_is_prefill[r] {
                     // Prefill emits each sequence's first token.
                     for &id in &ids {
-                        rep.batcher.get_mut(id).prefill_done_ns = Some(now);
+                        reps.batchers[r].get_mut(id).prefill_done_ns =
+                            Some(now);
                     }
                 }
                 let toks = vec![0i32; ids.len()];
-                let finished = rep
-                    .batcher
-                    .complete_decode(&ids, &toks, &mut rep.kv, now)
+                let finished = reps.batchers[r]
+                    .complete_decode(&ids, &toks, &mut reps.kvs[r], now)
                     .with_context(|| format!("replica {r} step at {now}"))?;
                 // Closed loop: each completion frees a user, who
                 // thinks, then issues the next request.
@@ -388,9 +402,8 @@ pub fn run_scale_traced(
             }
         };
         // Try to start the next step on the touched replica.
-        let rep = &mut replicas[r];
-        if rep.in_flight.is_empty() {
-            let work = rep.batcher.next_work(&mut rep.kv)?;
+        if reps.in_flight[r].is_empty() {
+            let work = reps.batchers[r].next_work(&mut reps.kvs[r])?;
             let (ids, is_prefill) = match work {
                 Work::Prefill(ids) => (ids, true),
                 Work::Decode(ids) => (ids, false),
@@ -402,13 +415,13 @@ pub fn run_scale_traced(
             // single-group loop uses).
             let len = if is_prefill {
                 ids.iter()
-                    .map(|&id| rep.batcher.get(id).prompt.len())
+                    .map(|&id| reps.batchers[r].get(id).prompt.len())
                     .max()
                     .expect("non-empty batch")
             } else {
                 ids.iter()
                     .map(|&id| {
-                        let req = rep.batcher.get(id);
+                        let req = reps.batchers[r].get(id);
                         decode_cache_len(
                             req.prompt.len(),
                             req.max_new_tokens,
@@ -434,9 +447,9 @@ pub fn run_scale_traced(
                     ],
                 );
             }
-            rep.in_flight = ids;
-            rep.in_flight_is_prefill = is_prefill;
-            rep.busy_ns += t;
+            reps.in_flight[r] = ids;
+            reps.in_flight_is_prefill[r] = is_prefill;
+            reps.busy_ns[r] += t;
             q.schedule(now + t, Ev::StepDone(r));
         }
     }
@@ -444,20 +457,23 @@ pub fn run_scale_traced(
     // All requests were issued and every generation is finite, so a
     // drained queue means a drained cluster.
     ensure!(issued == n, "closed loop stalled at {issued}/{n} issued");
-    for (r, rep) in replicas.iter().enumerate() {
+    for (r, batcher) in reps.batchers.iter().enumerate() {
         ensure!(
-            rep.batcher.all_done(),
+            batcher.all_done(),
             "replica {r} stalled with work left (KV pool too small?)"
         );
     }
 
-    let mut ttft = Vec::with_capacity(n);
-    let mut per_token = Vec::with_capacity(n);
-    let mut latency = Vec::with_capacity(n);
+    // Streaming accumulators in the same replica-major visit order the
+    // collected Vecs used: running sums in push order are bit-identical
+    // to the old collect-then-`Summary::of` path.
+    let mut ttft = Streaming::with_capacity(n);
+    let mut per_token = Streaming::with_capacity(n);
+    let mut latency = Streaming::with_capacity(n);
     let mut makespan: f64 = 0.0;
     let mut slo_report = sc.workload.slo.map(|_| SloReport::default());
-    for rep in &replicas {
-        for req in &rep.batcher.requests {
+    for batcher in &reps.batchers {
+        for req in &batcher.requests {
             let t = req
                 .ttft_ns()
                 .context("request finished without a prefill timestamp")?;
@@ -477,24 +493,24 @@ pub fn run_scale_traced(
         }
     }
 
-    let replica_reports: Vec<ReplicaReport> = replicas
+    let replica_reports: Vec<ReplicaReport> = reps
+        .batchers
         .iter()
-        .map(|rep| ReplicaReport {
-            completed: rep
-                .batcher
+        .zip(&reps.busy_ns)
+        .map(|(batcher, &busy_ns)| ReplicaReport {
+            completed: batcher
                 .requests
                 .iter()
                 .filter(|r| r.finished_ns.is_some())
                 .count(),
-            tokens: rep
-                .batcher
+            tokens: batcher
                 .requests
                 .iter()
                 .map(|r| r.generated.len())
                 .sum(),
-            prefill_batches: rep.batcher.prefill_batches,
-            decode_steps: rep.batcher.decode_steps,
-            busy_ns: rep.busy_ns,
+            prefill_batches: batcher.prefill_batches,
+            decode_steps: batcher.decode_steps,
+            busy_ns,
         })
         .collect();
 
@@ -504,9 +520,9 @@ pub fn run_scale_traced(
         completed: replica_reports.iter().map(|r| r.completed).sum(),
         tokens,
         makespan_ns: makespan,
-        ttft: Summary::of(&ttft),
-        per_token: Summary::of(&per_token),
-        latency: Summary::of(&latency),
+        ttft: ttft.finalize(),
+        per_token: per_token.finalize(),
+        latency: latency.finalize(),
         tokens_per_sec: tokens as f64 / (makespan * 1e-9),
         overlap_eff: scale_overlap_efficiency(sc, method),
         slo: slo_report,

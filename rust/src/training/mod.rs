@@ -124,27 +124,50 @@ enum Ev {
     AllReduceDone(usize),
 }
 
-struct Stage {
+/// Per-stage 1F1B state, struct-of-arrays: every DES event touches one
+/// or two counters of one stage, and the dispatch predicate reads four
+/// of them — splitting the arrays keeps those reads on a handful of
+/// cache lines across all stages instead of striding over full stage
+/// records. Index `s` across all vectors is one pipeline stage.
+struct Stages {
     /// Activations delivered (stage 0: all microbatches at t=0).
-    fwd_avail: usize,
+    fwd_avail: Vec<usize>,
     /// Output gradients delivered (last stage: own forwards).
-    bwd_avail: usize,
-    fwd_done: usize,
-    bwd_done: usize,
-    busy: bool,
-    busy_ns: f64,
-    last_bwd_end: f64,
-    /// This stage's DP all-reduce stream (its own NIC queue pair;
+    bwd_avail: Vec<usize>,
+    fwd_done: Vec<usize>,
+    bwd_done: Vec<usize>,
+    busy: Vec<bool>,
+    busy_ns: Vec<f64>,
+    last_bwd_end: Vec<f64>,
+    /// Each stage's DP all-reduce stream (its own NIC queue pair;
     /// Megatron pins DP traffic off the PP path, and the analytic twin
     /// ignores PP/DP contention the same way).
-    dp_link: Serial,
-    ar_end: f64,
+    dp_link: Vec<Serial>,
+    ar_end: Vec<f64>,
+}
+
+impl Stages {
+    fn new(pp: usize, m: usize) -> Stages {
+        let mut fwd_avail = vec![0; pp];
+        fwd_avail[0] = m;
+        Stages {
+            fwd_avail,
+            bwd_avail: vec![0; pp],
+            fwd_done: vec![0; pp],
+            bwd_done: vec![0; pp],
+            busy: vec![false; pp],
+            busy_ns: vec![0.0; pp],
+            last_bwd_end: vec![0.0; pp],
+            dp_link: (0..pp).map(|_| Serial::new()).collect(),
+            ar_end: vec![0.0; pp],
+        }
+    }
 }
 
 /// 1F1B dispatch for one stage: backward priority under the
 /// `pp - s` in-flight cap.
 fn try_start(
-    stages: &mut [Stage],
+    stages: &mut Stages,
     q: &mut EventQueue<Ev>,
     s: usize,
     m: usize,
@@ -152,22 +175,21 @@ fn try_start(
     costs: &StepCosts,
 ) {
     let now = q.now();
-    let st = &mut stages[s];
-    if st.busy {
+    if stages.busy[s] {
         return;
     }
-    let in_flight = st.fwd_done - st.bwd_done;
-    let can_bwd = st.bwd_done < st.bwd_avail;
-    let can_fwd = st.fwd_done < m
-        && st.fwd_done < st.fwd_avail
+    let in_flight = stages.fwd_done[s] - stages.bwd_done[s];
+    let can_bwd = stages.bwd_done[s] < stages.bwd_avail[s];
+    let can_fwd = stages.fwd_done[s] < m
+        && stages.fwd_done[s] < stages.fwd_avail[s]
         && in_flight < pp - s;
     if can_bwd {
-        st.busy = true;
-        st.busy_ns += costs.stage.bwd_ns;
+        stages.busy[s] = true;
+        stages.busy_ns[s] += costs.stage.bwd_ns;
         q.schedule(now + costs.stage.bwd_ns, Ev::BwdDone(s));
     } else if can_fwd {
-        st.busy = true;
-        st.busy_ns += costs.stage.fwd_ns;
+        stages.busy[s] = true;
+        stages.busy_ns[s] += costs.stage.fwd_ns;
         q.schedule(now + costs.stage.fwd_ns, Ev::FwdDone(s));
     }
 }
@@ -295,19 +317,7 @@ fn simulate_with_costs(
     let mut net = Net::new(topo.cluster, pp * topo.cluster.gpus_per_node);
     let rank_of = |s: usize| s * topo.cluster.gpus_per_node;
 
-    let mut stages: Vec<Stage> = (0..pp)
-        .map(|s| Stage {
-            fwd_avail: if s == 0 { m } else { 0 },
-            bwd_avail: 0,
-            fwd_done: 0,
-            bwd_done: 0,
-            busy: false,
-            busy_ns: 0.0,
-            last_bwd_end: 0.0,
-            dp_link: Serial::new(),
-            ar_end: 0.0,
-        })
-        .collect();
+    let mut stages = Stages::new(pp, m);
 
     // Gradient buckets: each backward microbatch unlocks 1/m of the
     // all-reduce wire, but nothing streams before 20% of the backwards
@@ -325,8 +335,8 @@ fn simulate_with_costs(
         events += 1;
         match ev {
             Ev::FwdDone(s) => {
-                stages[s].busy = false;
-                stages[s].fwd_done += 1;
+                stages.busy[s] = false;
+                stages.fwd_done[s] += 1;
                 if let Some((tr, pid0)) = trace.as_mut() {
                     tr.span(
                         *pid0 + s,
@@ -336,7 +346,7 @@ fn simulate_with_costs(
                         costs.stage.fwd_ns,
                         vec![(
                             "micro",
-                            Json::from(stages[s].fwd_done - 1),
+                            Json::from(stages.fwd_done[s] - 1),
                         )],
                     );
                 }
@@ -360,14 +370,14 @@ fn simulate_with_costs(
                     q.schedule(end, Ev::ActArrive(s + 1));
                 } else {
                     // The last stage turns around in place.
-                    stages[s].bwd_avail += 1;
+                    stages.bwd_avail[s] += 1;
                 }
                 try_start(&mut stages, &mut q, s, m, pp, costs);
             }
             Ev::BwdDone(s) => {
-                stages[s].busy = false;
-                stages[s].bwd_done += 1;
-                stages[s].last_bwd_end = now;
+                stages.busy[s] = false;
+                stages.bwd_done[s] += 1;
+                stages.last_bwd_end[s] = now;
                 if let Some((tr, pid0)) = trace.as_mut() {
                     tr.span(
                         *pid0 + s,
@@ -377,7 +387,7 @@ fn simulate_with_costs(
                         costs.stage.bwd_ns,
                         vec![(
                             "micro",
-                            Json::from(stages[s].bwd_done - 1),
+                            Json::from(stages.bwd_done[s] - 1),
                         )],
                     );
                 }
@@ -400,7 +410,7 @@ fn simulate_with_costs(
                     }
                     q.schedule(end, Ev::GradArrive(s - 1));
                 }
-                let done = stages[s].bwd_done;
+                let done = stages.bwd_done[s];
                 if topo.dp > 1 && done > k0 {
                     // First post-window backward releases the deferred
                     // buckets too.
@@ -408,7 +418,7 @@ fn simulate_with_costs(
                     let mut ar_end = 0.0;
                     for _ in 0..release {
                         let (b_start, b_end) =
-                            stages[s].dp_link.acquire(now, bucket_ns);
+                            stages.dp_link[s].acquire(now, bucket_ns);
                         if let Some((tr, pid0)) = trace.as_mut() {
                             tr.span(
                                 *pid0 + s,
@@ -425,41 +435,42 @@ fn simulate_with_costs(
                         q.schedule(ar_end, Ev::AllReduceDone(s));
                     }
                 } else if topo.dp == 1 && done == m {
-                    stages[s].ar_end = now;
+                    stages.ar_end[s] = now;
                 }
                 try_start(&mut stages, &mut q, s, m, pp, costs);
             }
             Ev::ActArrive(s) => {
-                stages[s].fwd_avail += 1;
+                stages.fwd_avail[s] += 1;
                 try_start(&mut stages, &mut q, s, m, pp, costs);
             }
             Ev::GradArrive(s) => {
-                stages[s].bwd_avail += 1;
+                stages.bwd_avail[s] += 1;
                 try_start(&mut stages, &mut q, s, m, pp, costs);
             }
             Ev::AllReduceDone(s) => {
-                stages[s].ar_end = now;
+                stages.ar_end[s] = now;
             }
         }
     }
 
-    for (s, st) in stages.iter().enumerate() {
+    for s in 0..pp {
         ensure!(
-            st.fwd_done == m && st.bwd_done == m,
+            stages.fwd_done[s] == m && stages.bwd_done[s] == m,
             "stage {s} stalled at fwd {}/{m} bwd {}/{m} \
              (1F1B scheduling bug)",
-            st.fwd_done,
-            st.bwd_done
+            stages.fwd_done[s],
+            stages.bwd_done[s]
         );
     }
 
     let pipe_ns = stages
+        .last_bwd_end
         .iter()
-        .map(|s| s.last_bwd_end)
+        .copied()
         .fold(0.0f64, f64::max);
     let ar_max =
-        stages.iter().map(|s| s.ar_end).fold(0.0f64, f64::max);
-    let busy: f64 = stages.iter().map(|s| s.busy_ns).sum();
+        stages.ar_end.iter().copied().fold(0.0f64, f64::max);
+    let busy: f64 = stages.busy_ns.iter().sum();
     let step_ns = pipe_ns.max(ar_max) + costs.opt_ns;
     Ok(TrainRun {
         method: Method::NonOverlap, // overwritten by run_train

@@ -32,28 +32,94 @@ impl Summary {
     /// mean/std) hid where it came from. Callers with legitimately
     /// partial data (e.g. unfinished requests) must filter before
     /// summarizing.
+    ///
+    /// Implemented over [`Streaming`]; the accumulator is bit-identical
+    /// to the old two-pass slice code by construction (see its docs), so
+    /// every pinned report f64 survives the switch unchanged.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty sample");
-        if let Some((i, x)) =
-            xs.iter().enumerate().find(|(_, x)| !x.is_finite())
-        {
-            panic!("Summary::of: non-finite sample {x} at index {i}");
+        let mut acc = Streaming::with_capacity(xs.len());
+        for &x in xs {
+            acc.push(x);
         }
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        acc.finalize()
+    }
+}
+
+/// Streaming [`Summary`] accumulator: `push` observations one at a time,
+/// `finalize` once at the end.
+///
+/// The running sum (→ mean) is accumulated online in push order —
+/// float-identical to `xs.iter().sum::<f64>()` over a collected slice —
+/// and min/max fall out of the final sort, so callers no longer build
+/// their *own* sample `Vec` just to hand it to [`Summary::of`] (which
+/// then cloned it again to sort): one buffer inside the accumulator
+/// replaces two caller-side allocations per metric.
+///
+/// The buffer itself cannot be dropped: the schemas pin **exact**
+/// linear-interpolated percentiles, and exact order statistics need the
+/// whole sample (constant space would force an approximate sketch like
+/// P²/t-digest, which would change pinned report bytes). The variance
+/// pass runs over the buffer in push order *before* sorting, exactly as
+/// the old code read its input slice, so `std` is also bit-identical.
+#[derive(Clone, Debug, Default)]
+pub struct Streaming {
+    sum: f64,
+    buf: Vec<f64>,
+}
+
+impl Streaming {
+    pub fn new() -> Streaming {
+        Streaming { sum: 0.0, buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Streaming {
+        Streaming { sum: 0.0, buf: Vec::with_capacity(n) }
+    }
+
+    /// Number of observations pushed so far.
+    pub fn n(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Record one observation. Panics on NaN/infinite input, naming the
+    /// value and its index — same contract as [`Summary::of`].
+    pub fn push(&mut self, x: f64) {
+        assert!(
+            x.is_finite(),
+            "non-finite sample {x} at index {}",
+            self.buf.len()
+        );
+        self.sum += x;
+        self.buf.push(x);
+    }
+
+    /// Consume the accumulator into a [`Summary`]. Panics if nothing was
+    /// pushed.
+    pub fn finalize(mut self) -> Summary {
+        assert!(!self.buf.is_empty(), "Streaming::finalize on empty sample");
+        let n = self.buf.len();
+        let mean = self.sum / n as f64;
+        let var = self
+            .buf
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
             / n as f64;
-        let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.total_cmp(b));
+        self.buf.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
             std: var.sqrt(),
-            min: s[0],
-            p50: percentile(&s, 0.50),
-            p95: percentile(&s, 0.95),
-            p99: percentile(&s, 0.99),
-            max: s[n - 1],
+            min: self.buf[0],
+            p50: percentile(&self.buf, 0.50),
+            p95: percentile(&self.buf, 0.95),
+            p99: percentile(&self.buf, 0.99),
+            max: self.buf[n - 1],
         }
     }
 }
@@ -124,6 +190,37 @@ mod tests {
     #[should_panic(expected = "non-finite sample")]
     fn rejects_infinite_sample() {
         Summary::of(&[1.0, f64::INFINITY]);
+    }
+
+    #[test]
+    fn streaming_matches_collected_bit_for_bit() {
+        // Same observations, push-at-a-time vs slice: every field equal
+        // by `==` (not tolerance) — the accumulator must be a pure
+        // refactor of the two-pass code.
+        let xs: Vec<f64> = (0..257)
+            .map(|i| ((i * 2654435761_u64 as usize) % 1000) as f64 * 0.37)
+            .collect();
+        let mut acc = Streaming::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert_eq!(acc.n(), xs.len());
+        assert_eq!(acc.finalize(), Summary::of(&xs));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample inf at index 2")]
+    fn streaming_rejects_non_finite_with_index() {
+        let mut acc = Streaming::new();
+        acc.push(1.0);
+        acc.push(2.0);
+        acc.push(f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn streaming_finalize_rejects_empty() {
+        Streaming::new().finalize();
     }
 
     #[test]

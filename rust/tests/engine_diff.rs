@@ -1,0 +1,193 @@
+//! Differential property tests pinning the calendar [`EventQueue`] to
+//! the reference [`HeapEventQueue`] (the pre-calendar `BinaryHeap`
+//! semantics): identical streams must drain pop-for-pop identically —
+//! exact ties, `-0.0`, bucket-boundary times, far-future jumps and
+//! interleaved schedule/pop included — plus the streaming-vs-collecting
+//! [`Summary`] equivalence on pinned seeds. Together these are the
+//! proof obligation of the engine rewrite: same results, only faster.
+
+use flux::sim::engine::{
+    hold_workload, hold_workload_heap, EventQueue, HeapEventQueue,
+};
+use flux::util::propcheck::{
+    f64_in, forall_gen, map, one_of, usize_in, vec_of, zip,
+};
+use flux::util::stats::{Streaming, Summary};
+
+/// Pop both queues to exhaustion, requiring identical `(time, payload)`
+/// sequences and identical clock positions at every step.
+fn drain_compare(cal: &mut EventQueue<usize>, heap: &mut HeapEventQueue<usize>) {
+    loop {
+        let a = cal.next();
+        let b = heap.next();
+        assert_eq!(a, b, "pop diverged (calendar vs heap)");
+        if a.is_none() {
+            break;
+        }
+        assert_eq!(cal.now(), heap.now(), "clock diverged");
+    }
+}
+
+/// Event times mixing exact-tie lattices at several magnitudes, zeros of
+/// both signs, continuous draws and far-future outliers (which push the
+/// calendar through its overflow/rebuild path).
+fn adversarial_times() -> impl Fn(&mut flux::util::prng::Rng) -> Vec<f64> {
+    vec_of(
+        usize_in(1, 120),
+        map(
+            zip(
+                zip(usize_in(0, 10), one_of(vec![1.0, 1.0e3, 1.0e9])),
+                f64_in(0.0, 100.0),
+            ),
+            |((kind, scale), x)| match kind {
+                0 | 1 | 2 => (x / 10.0).floor() * 10.0 * scale,
+                3 => 0.0,
+                4 => -0.0,
+                5 => x * scale * 1.0e6,
+                _ => x * scale,
+            },
+        ),
+    )
+}
+
+#[test]
+fn batch_drain_is_identical_to_heap() {
+    forall_gen(96, 0xD1F_0001, adversarial_times(), |times| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            cal.schedule(t, i);
+            heap.schedule(t, i);
+        }
+        assert_eq!(cal.len(), heap.len());
+        drain_compare(&mut cal, &mut heap);
+    });
+}
+
+#[test]
+fn interleaved_schedule_and_pop_is_identical_to_heap() {
+    // Open-loop usage: delays relative to the moving clock, including
+    // zero delays (exact ties at `now`), tie lattices and huge jumps,
+    // with pops mixed in — the access pattern of the serving/training
+    // sims.
+    let gen = vec_of(
+        usize_in(1, 150),
+        zip(usize_in(0, 5), f64_in(0.0, 50.0)),
+    );
+    forall_gen(96, 0xD1F_0002, gen, |ops| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let mut i = 0usize;
+        for &(kind, x) in ops {
+            match kind {
+                0 | 1 => {
+                    let a = cal.next();
+                    let b = heap.next();
+                    assert_eq!(a, b, "interleaved pop diverged");
+                }
+                2 => {
+                    let d = (x / 10.0).floor() * 10.0;
+                    cal.schedule_in(d, i);
+                    heap.schedule_in(d, i);
+                    i += 1;
+                }
+                3 => {
+                    cal.schedule_in(x * 1.0e7, i);
+                    heap.schedule_in(x * 1.0e7, i);
+                    i += 1;
+                }
+                _ => {
+                    cal.schedule_in(x, i);
+                    heap.schedule_in(x, i);
+                    i += 1;
+                }
+            }
+        }
+        drain_compare(&mut cal, &mut heap);
+    });
+}
+
+#[test]
+fn bucket_boundary_times_are_identical_to_heap() {
+    // Aim events at the *exact* edges of the calendar's live buckets
+    // (where a `(at - start) / width` rounding slip would misfile an
+    // event), after enough random traffic to force grow rebuilds.
+    let gen = vec_of(usize_in(40, 200), f64_in(0.0, 1000.0));
+    forall_gen(48, 0xD1F_0003, gen, |times| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            cal.schedule(t, i);
+            heap.schedule(t, i);
+        }
+        let (start, width, nb) = cal.bucket_params();
+        let mut i = times.len();
+        for k in 0..(2 * nb + 3) {
+            let t = start + width * k as f64;
+            if t.is_finite() && t >= cal.now() {
+                cal.schedule(t, i);
+                heap.schedule(t, i);
+                i += 1;
+            }
+            if k % 7 == 0 {
+                assert_eq!(cal.next(), heap.next(), "boundary pop");
+            }
+        }
+        drain_compare(&mut cal, &mut heap);
+    });
+}
+
+#[test]
+fn hold_workload_counters_and_checksums_match_heap() {
+    // The bench workload itself, across sizes: the pop-sequence
+    // checksum certifies identical order without storing the sequence.
+    let gen = zip(usize_in(1, 400), usize_in(0, 3000));
+    forall_gen(12, 0xD1F_0004, gen, |&(resident, ops)| {
+        let seed = (resident * 31 + ops) as u64;
+        let a = hold_workload(resident, ops, seed);
+        let b = hold_workload_heap(resident, ops, seed);
+        assert_eq!(a.checksum, b.checksum, "pop sequences diverged");
+        assert_eq!(a.pops, b.pops);
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.pops, (resident + ops) as u64, "hold conservation");
+    });
+}
+
+#[test]
+fn past_float_sliver_clamps_identically() {
+    // The admission bugfix, differentially: an event in the 1e-9 float
+    // noise sliver below `now` fires *at* `now` in both queues (it used
+    // to rewind the clock), and the clamped event still ties FIFO
+    // against one scheduled exactly at `now`.
+    let mut cal = EventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    cal.schedule(10.0, 0);
+    heap.schedule(10.0, 0);
+    assert_eq!(cal.next(), heap.next());
+    cal.schedule(10.0 - 1e-10, 1);
+    heap.schedule(10.0 - 1e-10, 1);
+    cal.schedule(10.0, 2);
+    heap.schedule(10.0, 2);
+    drain_compare(&mut cal, &mut heap);
+    assert_eq!(cal.now(), 10.0, "clock must not rewind");
+}
+
+#[test]
+fn streaming_summary_equals_collecting_on_pinned_seeds() {
+    // Push-at-a-time must reproduce collect-then-summarize *bit for
+    // bit* — the guarantee that lets the serving report switch to
+    // streaming accumulators without moving a single pinned f64.
+    let gen = vec_of(usize_in(1, 300), f64_in(-1.0e12, 1.0e12));
+    forall_gen(128, 0xD1F_0005, gen, |xs| {
+        let mut acc = Streaming::with_capacity(xs.len());
+        for &x in xs {
+            acc.push(x);
+        }
+        let a = acc.finalize();
+        let b = Summary::of(xs);
+        assert_eq!(a, b);
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "mean drifted");
+        assert_eq!(a.std.to_bits(), b.std.to_bits(), "std drifted");
+        assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "p99 drifted");
+    });
+}

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# The bench trajectory: every deterministic report the repo ships, each
+# written twice and byte-compared (`cmp`), plus the wall-clock engine
+# throughput point and its perf gate. CI's bench-smoke job runs exactly
+# this script; run it locally with `make bench-ci`.
+#
+# Outputs (uploaded as the CI artifact):
+#   BENCH_0.json  op-level bench suite        (flux-bench-v1, byte-stable)
+#   BENCH_1.json  serving-at-scale scenario   (flux-scale-v2, byte-stable)
+#   BENCH_2.json  1F1B training sweep         (flux-train-v1, byte-stable)
+#   BENCH_3.json  workload preset sweep       (flux-sweep-v1, byte-stable)
+#   BENCH_4.json  sweep, 1 thread vs default  (parallel determinism)
+#   BENCH_5.json  bench --wall: events/sec    (machine-local, NOT compared)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+flux() {
+  cargo run --release --manifest-path rust/Cargo.toml --bin flux -- "$@"
+}
+
+# stable <out.json> <flux args...>: write the report, rerun it, and
+# require the two runs to be byte-identical.
+stable() {
+  local out=$1
+  shift
+  flux "$@" --out "$out"
+  head -c 2000 "$out"
+  echo
+  flux "$@" --out "$out.repro"
+  cmp "$out" "$out.repro"
+  rm -f "$out.repro"
+}
+
+echo "== BENCH_0: op-level bench suite (flux-bench-v1) =="
+stable BENCH_0.json bench --json --quick
+
+echo "== BENCH_1: serving-at-scale scenario (flux-scale-v2) =="
+stable BENCH_1.json simulate --scale --json --quick
+
+echo "== BENCH_2: 1F1B training sweep (flux-train-v1) =="
+stable BENCH_2.json simulate --train --json --quick
+
+echo "== BENCH_3: workload preset sweep (flux-sweep-v1) =="
+stable BENCH_3.json sweep-workloads --json --quick
+
+echo "== BENCH_4: parallel determinism (1 worker vs one-per-core) =="
+flux sweep-workloads --json --quick --threads 1 --out BENCH_4.json
+flux sweep-workloads --json --quick --out BENCH_4_par.json
+cmp BENCH_4.json BENCH_4_par.json
+rm -f BENCH_4_par.json
+
+echo "== BENCH_5: DES engine events/sec (wall clock; not byte-compared) =="
+flux bench --json --quick --wall --out BENCH_5.json
+
+echo "== perf gate: events/sec vs checked-in baseline =="
+python3 scripts/perf_gate.py BENCH_5.json artifacts/perf_baseline.json

@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Events/sec perf gate: fail CI when the measured DES-engine throughput
+in a `flux bench --json --wall` report drops below the checked-in
+baseline times its tolerance.
+
+Usage: perf_gate.py <BENCH_5.json> <artifacts/perf_baseline.json>
+
+The tolerance is deliberately generous (default 0.5x): shared CI runners
+are noisy, and the gate exists to catch order-of-magnitude regressions
+(an accidental O(log n) -> O(n) slip in the queue, a debug build), not
+5% drift. Ratchet `events_per_sec` in the baseline upward as real CI
+numbers accumulate — see README "Performance".
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    bench_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+
+    schema = base.get("schema")
+    if schema != "flux-perf-baseline-v1":
+        print(f"{baseline_path}: unexpected schema {schema!r}", file=sys.stderr)
+        return 2
+    try:
+        measured = bench["wall"]["events_per_sec"]["events_per_sec"]
+    except KeyError:
+        print(
+            f"{bench_path}: no wall.events_per_sec.events_per_sec -- "
+            "was the report written with --wall?",
+            file=sys.stderr,
+        )
+        return 2
+
+    baseline = float(base["events_per_sec"])
+    tolerance = float(base["tolerance"])
+    floor = baseline * tolerance
+    print(
+        f"measured {measured:.3e} events/s; baseline {baseline:.3e} "
+        f"x tolerance {tolerance} -> floor {floor:.3e}"
+    )
+    if measured < floor:
+        print(
+            f"FAIL: events/sec regressed below the baseline floor "
+            f"({measured:.3e} < {floor:.3e}). If this machine is simply "
+            f"slower than the baseline assumes, lower "
+            f"{baseline_path}; otherwise find the regression.",
+            file=sys.stderr,
+        )
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
