@@ -38,8 +38,13 @@ bench-ci:
 fmt:
 	cargo fmt --all
 
+# clippy (incl. the clippy.toml mirror of the mechanical flux-lint
+# rules) plus the full flux-lint pass: determinism rules D001-D005 over
+# rust/src, pragma audit, panic-budget ratchet. See README "Determinism
+# discipline".
 lint:
 	cargo clippy --all-targets -- -D warnings
+	cargo run --release -p flux-lint
 
 clean:
 	cargo clean

@@ -10,9 +10,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
-use std::time::Instant;
-
 use flux::runtime::Runtime;
+use flux::util::bench::Stopwatch;
 use flux::serving::batcher::Work;
 use flux::serving::engine::{argmax, Engine};
 use flux::serving::kvcache::KvCacheManager;
@@ -97,8 +96,8 @@ fn main() -> anyhow::Result<()> {
         batcher.submit(Request::new(i, 0.0, prompt, gen_len));
     }
 
-    let t0 = Instant::now();
-    let now_ns = |t0: &Instant| t0.elapsed().as_nanos() as f64;
+    let t0 = Stopwatch::start();
+    let now_ns = |t0: &Stopwatch| t0.elapsed_ns();
     let mut last_tok = vec![0i32; eng.b];
     let mut slot_of = std::collections::BTreeMap::new();
     let mut prefill_batches = 0usize;

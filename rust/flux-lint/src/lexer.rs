@@ -1,0 +1,330 @@
+//! Lexical front end: blank comments/strings/char literals out of Rust
+//! source (preserving the char-for-char line layout) and cut the
+//! remainder into identifier/number/punct tokens.
+//!
+//! This is deliberately a lexer, not a parser: every rule flux-lint
+//! enforces is decidable from the token stream plus a little lookback/
+//! lookahead, and a lexer cannot be wedged by code that does not parse
+//! yet. A bit-exact Python mirror lives in `scripts/lint_budget.py`
+//! (it generates `artifacts/lint_budget.json`); keep the two in sync.
+
+/// `strip()` output: the source with every comment, string literal and
+/// char literal replaced by spaces (newlines preserved, so line/column
+/// positions survive), plus each `//` comment's text for pragma
+/// parsing.
+pub struct Stripped {
+    pub blanked: String,
+    /// `(line, text)` per line comment, text after the `//`.
+    pub comments: Vec<(usize, String)>,
+}
+
+pub fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank non-code out of `text`. Handles nested block comments, string
+/// escapes incl. `\<newline>` continuations, raw (and byte) strings
+/// with any `#` count, byte chars, and the char-literal/lifetime
+/// ambiguity (`'a'` vs `'a`).
+pub fn strip(text: &str) -> Stripped {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<char> = vec![' '; n];
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out[i] = '\n';
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let body: String = chars[i + 2..j].iter().collect();
+            comments.push((line, body));
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    out[i] = '\n';
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/'
+                    && i + 1 < n
+                    && chars[i + 1] == '*'
+                {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*'
+                    && i + 1 < n
+                    && chars[i + 1] == '/'
+                {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '"' {
+            let (ni, nl) = skip_string(&chars, i + 1, line, &mut out);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Raw/byte strings — but not raw identifiers (`r#foo`) and not
+        // an `r`/`b` that is the tail of a longer identifier.
+        if (c == 'r' || c == 'b')
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+        {
+            let mut j = i + 1;
+            if c == 'b' && j < n && chars[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                let (ni, nl) =
+                    skip_raw_string(&chars, j + 1, hashes, line, &mut out);
+                i = ni;
+                line = nl;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                i = skip_char_literal(&chars, i + 2);
+                continue;
+            }
+        }
+        if c == '\'' {
+            let nxt = if i + 1 < n { chars[i + 1] } else { ' ' };
+            let nxt2 = if i + 2 < n { chars[i + 2] } else { ' ' };
+            if nxt == '\\' {
+                i = skip_char_literal(&chars, i + 1);
+                continue;
+            }
+            if is_ident_start(nxt) && nxt2 != '\'' {
+                // Lifetime: blank the quote, keep the name as code.
+                i += 1;
+                continue;
+            }
+            if nxt2 == '\'' {
+                i += 3; // 'x'
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        out[i] = c;
+        i += 1;
+    }
+    Stripped { blanked: out.iter().collect(), comments }
+}
+
+fn skip_string(
+    chars: &[char],
+    mut i: usize,
+    mut line: usize,
+    out: &mut [char],
+) -> (usize, usize) {
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out[i] = '\n';
+            line += 1;
+            i += 1;
+        } else if c == '\\' {
+            // `\<newline>` is a line continuation: the newline is
+            // still a source line boundary.
+            if i + 1 < n && chars[i + 1] == '\n' {
+                out[i + 1] = '\n';
+                line += 1;
+            }
+            i += 2;
+        } else if c == '"' {
+            return (i + 1, line);
+        } else {
+            i += 1;
+        }
+    }
+    (i, line)
+}
+
+fn skip_raw_string(
+    chars: &[char],
+    mut i: usize,
+    hashes: usize,
+    mut line: usize,
+    out: &mut [char],
+) -> (usize, usize) {
+    let n = chars.len();
+    while i < n {
+        if chars[i] == '\n' {
+            out[i] = '\n';
+            line += 1;
+            i += 1;
+        } else if chars[i] == '"' && closes_raw(chars, i + 1, hashes) {
+            return (i + 1 + hashes, line);
+        } else {
+            i += 1;
+        }
+    }
+    (i, line)
+}
+
+fn closes_raw(chars: &[char], start: usize, hashes: usize) -> bool {
+    start + hashes <= chars.len()
+        && chars[start..start + hashes].iter().all(|&c| c == '#')
+}
+
+fn skip_char_literal(chars: &[char], mut i: usize) -> usize {
+    // `i` points at the backslash (or first interior char); scan to
+    // the closing quote. For `'\''` the escaped char is consumed
+    // first so its quote does not terminate early; `'\u{..}'` ends at
+    // the next quote either way.
+    let n = chars.len();
+    if i < n && chars[i] == '\\' {
+        i += 2;
+    }
+    while i < n && chars[i] != '\'' {
+        i += 1;
+    }
+    i + 1
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Id,
+    Num,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: Kind,
+    pub s: String,
+}
+
+impl Tok {
+    pub fn is_id(&self, s: &str) -> bool {
+        self.kind == Kind::Id && self.s == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        // Punct tokens are single-char by construction.
+        self.kind == Kind::Punct && self.s.chars().next() == Some(c)
+    }
+}
+
+/// Cut blanked source into tokens. Numbers are lexed as one
+/// `[0-9][A-Za-z0-9_]*` run (enough to keep `0x1b3` from reading as a
+/// byte-string start); every other non-space char is a 1-char punct.
+pub fn tokenize(blanked: &str) -> Vec<Tok> {
+    let chars: Vec<char> = blanked.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: Kind::Id,
+                s: chars[i..j].iter().collect(),
+            });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                line,
+                kind: Kind::Num,
+                s: chars[i..j].iter().collect(),
+            });
+            i = j;
+        } else {
+            toks.push(Tok { line, kind: Kind::Punct, s: c.to_string() });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// Token-index spans `[start, end)` covered by `#[cfg(test)]` items
+/// (the attribute tokens included). The guarded item ends at the
+/// matching brace of its first block, or at a `;` if brace-less.
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let is_attr = toks[i].is_punct('#')
+            && i + 6 < n
+            && toks[i + 1].is_punct('[')
+            && toks[i + 2].is_id("cfg")
+            && toks[i + 3].is_punct('(')
+            && toks[i + 4].is_id("test")
+            && toks[i + 5].is_punct(')')
+            && toks[i + 6].is_punct(']');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        while j < n && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+            j += 1;
+        }
+        if j < n && toks[j].is_punct('{') {
+            let mut depth = 1usize;
+            j += 1;
+            while j < n && depth > 0 {
+                if toks[j].is_punct('{') {
+                    depth += 1;
+                } else if toks[j].is_punct('}') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+        } else {
+            j = (j + 1).min(n);
+        }
+        spans.push((i, j));
+        i = j;
+    }
+    spans
+}
+
+pub fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|&(s, e)| s <= idx && idx < e)
+}

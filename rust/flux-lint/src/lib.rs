@@ -1,0 +1,860 @@
+//! flux-lint — determinism & byte-stability static analysis for the
+//! FLUX tree.
+//!
+//! Every result the repo ships rests on byte-stable reports: the
+//! flux-vs-decoupled speedup bands, the parallel runner's
+//! byte-identical-at-any-thread-count guarantee, the CI trajectory
+//! diffs. This pass encodes the rules that keep them stable as named
+//! diagnostics over `rust/src/**`, so a determinism break is caught at
+//! the source line instead of as an unexplained BENCH diff three jobs
+//! later:
+//!
+//! * **D001** no `HashMap`/`HashSet` — hash iteration order is
+//!   nondeterministic; use `BTreeMap`/`BTreeSet` or a `Vec`.
+//! * **D002** no `partial_cmp` — not total on floats (NaN panics
+//!   `sort`/`min_by` unwraps or poisons them); `f64::total_cmp` is the
+//!   law. `fn partial_cmp` (a `PartialOrd` impl) is a definition, not
+//!   a use, and is exempt.
+//! * **D003** no `Instant`/`SystemTime` outside `util/bench.rs` — wall
+//!   clock may only feed `--wall` report sections, via
+//!   `util::bench::Stopwatch`.
+//! * **D004** no OS-entropy RNG construction (`thread_rng`, `OsRng`,
+//!   `RandomState`, ...) — randomness comes from the seeded
+//!   `util::prng::Rng` entry points.
+//! * **D005** panic-budget ratchet — `unwrap()`/`expect()`/`panic!`
+//!   counts per module (non-test code) are pinned in
+//!   `artifacts/lint_budget.json` and may only go down.
+//! * **D000** pragma hygiene — a malformed or unused allow pragma is
+//!   itself a finding.
+//!
+//! Justified exceptions carry an escape pragma naming the rule and the
+//! reason, on the offending line or a standalone comment line directly
+//! above it:
+//!
+//! ```text
+//! // flux-lint: allow(D002) -- admit() rejects non-finite times
+//! ```
+//!
+//! The scanner is a lexer, not a parser (`lexer` module); rules are
+//! token matches with one token of context. `scripts/lint_budget.py`
+//! is a bit-exact Python mirror used to (re)generate the budget file;
+//! keep the two in sync.
+
+pub mod lexer;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use lexer::{in_spans, strip, test_regions, tokenize, Kind, Tok};
+
+/// Schema of the `flux-lint --json` document.
+pub const SCHEMA: &str = "flux-lint-v1";
+/// Schema of `artifacts/lint_budget.json` (the D005 ratchet).
+pub const BUDGET_SCHEMA: &str = "flux-lint-budget-v1";
+/// Where the budget lives, relative to the repo root.
+pub const BUDGET_PATH: &str = "artifacts/lint_budget.json";
+
+/// One named diagnostic, for `flux list` and the README.
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// What the rule protects, one line.
+    pub protects: &'static str,
+}
+
+pub const RULES: [Rule; 6] = [
+    Rule {
+        id: "D000",
+        title: "pragma hygiene",
+        protects: "allow pragmas stay well-formed and load-bearing",
+    },
+    Rule {
+        id: "D001",
+        title: "hash-order collections",
+        protects: "report iteration order (BTreeMap/Vec, never Hash*)",
+    },
+    Rule {
+        id: "D002",
+        title: "float ordering",
+        protects: "NaN-safe total order (f64::total_cmp everywhere)",
+    },
+    Rule {
+        id: "D003",
+        title: "wall clock",
+        protects: "deterministic sections never read Instant/SystemTime",
+    },
+    Rule {
+        id: "D004",
+        title: "OS entropy",
+        protects: "all randomness flows from seeded util::prng",
+    },
+    Rule {
+        id: "D005",
+        title: "panic budget",
+        protects: "unwrap/expect/panic! sites only ratchet down",
+    },
+];
+
+/// Rules an allow pragma may name (D000/D005 are not line-scoped).
+const PRAGMA_RULES: [&str; 4] = ["D001", "D002", "D003", "D004"];
+
+/// File-scope allowlist: D003 is legal in the bench harness, the one
+/// sanctioned wall-clock source.
+const D003_FILE_ALLOW: [&str; 1] = ["util/bench.rs"];
+
+const D004_IDENTS: [&str; 7] = [
+    "thread_rng",
+    "ThreadRng",
+    "OsRng",
+    "StdRng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+];
+
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A finding suppressed by a pragma — kept for the audit trail.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Allowed {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub reason: String,
+}
+
+/// Non-test `unwrap()`/`expect()`/`panic!` sites in one module.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanicCounts {
+    pub unwrap: usize,
+    pub expect: usize,
+    pub panic: usize,
+}
+
+impl PanicCounts {
+    pub fn total(&self) -> usize {
+        self.unwrap + self.expect + self.panic
+    }
+}
+
+/// The D005 ratchet: pinned per-module panic counts.
+#[derive(Clone, Debug, Default)]
+pub struct Budget {
+    pub modules: BTreeMap<String, PanicCounts>,
+}
+
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<Allowed>,
+    pub counts: PanicCounts,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<Allowed>,
+    /// Per-module panic sites (modules with at least one site).
+    pub panic_sites: BTreeMap<String, PanicCounts>,
+    /// Budget headroom per module (budget minus count, where
+    /// positive) — the slack `lint_budget.json` should ratchet away.
+    pub budget_slack: BTreeMap<String, PanicCounts>,
+    pub files_scanned: usize,
+}
+
+struct Pragma {
+    line: usize,
+    /// The code line the pragma covers (`None`: nothing to cover).
+    target: Option<usize>,
+    rules: Vec<String>,
+    reason: String,
+}
+
+fn parse_pragmas(
+    comments: &[(usize, String)],
+    blanked_lines: &[&str],
+) -> (Vec<Pragma>, Vec<(usize, String)>) {
+    let mut pragmas = Vec::new();
+    let mut malformed = Vec::new();
+    for (line, text) in comments {
+        // Only `// flux-lint: ...` is a pragma attempt; prose mentions
+        // ("flux-lint rule D003 bans ...") are ordinary comments.
+        let t = text.trim();
+        let Some(rest) = t.strip_prefix("flux-lint:") else {
+            continue;
+        };
+        let parsed = parse_allow(rest.trim());
+        let Some((rules, reason)) = parsed else {
+            malformed.push((
+                *line,
+                "malformed flux-lint pragma: expected `// flux-lint: \
+                 allow(D001[,D002...]) -- reason` (rules D001-D004)"
+                    .to_string(),
+            ));
+            continue;
+        };
+        let code = blanked_lines.get(line - 1).copied().unwrap_or("");
+        let target = if code.trim().is_empty() {
+            // Standalone comment line: covers the next code line.
+            blanked_lines
+                .iter()
+                .enumerate()
+                .skip(*line)
+                .find(|(_, l)| !l.trim().is_empty())
+                .map(|(idx, _)| idx + 1)
+        } else {
+            Some(*line)
+        };
+        pragmas.push(Pragma { line: *line, target, rules, reason });
+    }
+    (pragmas, malformed)
+}
+
+fn parse_allow(rest: &str) -> Option<(Vec<String>, String)> {
+    let inner_tail = rest.strip_prefix("allow(")?;
+    let (inner, tail) = inner_tail.split_once(')')?;
+    let rules: Vec<String> =
+        inner.split(',').map(|r| r.trim().to_string()).collect();
+    if rules.is_empty()
+        || !rules.iter().all(|r| PRAGMA_RULES.contains(&r.as_str()))
+    {
+        return None;
+    }
+    let reason = tail.trim().strip_prefix("--")?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    Some((rules, reason.to_string()))
+}
+
+/// Scan one file. `rel` is the path relative to `rust/src` with `/`
+/// separators (it selects file-scope allowlists and becomes the budget
+/// module key); reported paths are prefixed `rust/src/`.
+pub fn scan_source(rel: &str, text: &str) -> FileScan {
+    let stripped = strip(text);
+    let blanked_lines: Vec<&str> = stripped.blanked.split('\n').collect();
+    let toks = tokenize(&stripped.blanked);
+    let spans = test_regions(&toks);
+    let (pragmas, malformed) =
+        parse_pragmas(&stripped.comments, &blanked_lines);
+    let path = format!("rust/src/{rel}");
+
+    // Raw rule hits, before pragma suppression.
+    let mut raw: Vec<(usize, &'static str, String)> = Vec::new();
+    let mut counts = PanicCounts::default();
+    for (idx, tok) in toks.iter().enumerate() {
+        if tok.kind != Kind::Id {
+            continue;
+        }
+        let prev: Option<&Tok> =
+            if idx > 0 { Some(&toks[idx - 1]) } else { None };
+        let next: Option<&Tok> = toks.get(idx + 1);
+        let id = tok.s.as_str();
+        if id == "HashMap" || id == "HashSet" {
+            raw.push((
+                tok.line,
+                "D001",
+                format!(
+                    "{id} iterates in hash order; use BTreeMap/BTreeSet \
+                     or a Vec so report bytes stay stable"
+                ),
+            ));
+        } else if id == "partial_cmp"
+            && !prev.is_some_and(|p| p.is_id("fn"))
+        {
+            raw.push((
+                tok.line,
+                "D002",
+                "partial_cmp is not total on floats (NaN); use \
+                 f64::total_cmp"
+                    .to_string(),
+            ));
+        } else if (id == "Instant" || id == "SystemTime")
+            && !D003_FILE_ALLOW.contains(&rel)
+        {
+            raw.push((
+                tok.line,
+                "D003",
+                format!(
+                    "std::time::{id} is wall clock; deterministic paths \
+                     must route timing through util::bench (Stopwatch)"
+                ),
+            ));
+        } else if D004_IDENTS.contains(&id) {
+            raw.push((
+                tok.line,
+                "D004",
+                format!(
+                    "{id} draws OS entropy; construct RNGs via the \
+                     seeded util::prng::Rng entry points"
+                ),
+            ));
+        } else if (id == "unwrap" || id == "expect")
+            && prev.is_some_and(|p| p.is_punct('.'))
+            && next.is_some_and(|x| x.is_punct('('))
+            && !in_spans(&spans, idx)
+        {
+            if id == "unwrap" {
+                counts.unwrap += 1;
+            } else {
+                counts.expect += 1;
+            }
+        } else if id == "panic"
+            && next.is_some_and(|x| x.is_punct('!'))
+            && !in_spans(&spans, idx)
+        {
+            counts.panic += 1;
+        }
+    }
+
+    let mut findings: Vec<Finding> = malformed
+        .into_iter()
+        .map(|(line, message)| Finding {
+            path: path.clone(),
+            line,
+            rule: "D000",
+            message,
+        })
+        .collect();
+    let mut allowed = Vec::new();
+    let mut used = vec![false; pragmas.len()];
+    for (line, rule, message) in raw {
+        let hit = pragmas.iter().position(|p| {
+            p.target == Some(line) && p.rules.iter().any(|r| r == rule)
+        });
+        match hit {
+            Some(pi) => {
+                used[pi] = true;
+                allowed.push(Allowed {
+                    path: path.clone(),
+                    line,
+                    rule,
+                    reason: pragmas[pi].reason.clone(),
+                });
+            }
+            None => {
+                findings.push(Finding {
+                    path: path.clone(),
+                    line,
+                    rule,
+                    message,
+                });
+            }
+        }
+    }
+    for (pi, p) in pragmas.iter().enumerate() {
+        if !used[pi] {
+            findings.push(Finding {
+                path: path.clone(),
+                line: p.line,
+                rule: "D000",
+                message: "unused flux-lint allow pragma (suppresses \
+                          nothing on its target line)"
+                    .to_string(),
+            });
+        }
+    }
+    FileScan { findings, allowed, counts }
+}
+
+/// Walk `src_root` (normally `<repo>/rust/src`) and scan every `.rs`
+/// file, in sorted relative-path order.
+pub fn scan_tree(src_root: &Path) -> Result<Report> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut report = Report { files_scanned: files.len(), ..Default::default() };
+    for (rel, path) in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let scan = scan_source(rel, &text);
+        report.findings.extend(scan.findings);
+        report.allowed.extend(scan.allowed);
+        if scan.counts.total() > 0 {
+            report.panic_sites.insert(rel.clone(), scan.counts);
+        }
+    }
+    report.findings.sort();
+    report.allowed.sort();
+    Ok(report)
+}
+
+fn collect_rs(
+    dir: &Path,
+    base: &Path,
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<()> {
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("read dir {}", dir.display()))?;
+    let mut entries: Vec<PathBuf> =
+        rd.map(|e| Ok(e?.path())).collect::<Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, base, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(base)
+                .expect("walk stays under base")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Check the D005 ratchet: every module's non-test panic count must
+/// stay within `budget`; headroom is reported as slack to ratchet away.
+pub fn apply_budget(report: &mut Report, budget: &Budget) {
+    let mut modules: Vec<&String> = report.panic_sites.keys().collect();
+    for m in budget.modules.keys() {
+        if !report.panic_sites.contains_key(m) {
+            modules.push(m);
+        }
+    }
+    let mut findings = Vec::new();
+    for module in modules {
+        let count = report
+            .panic_sites
+            .get(module)
+            .copied()
+            .unwrap_or_default();
+        let cap = budget
+            .modules
+            .get(module)
+            .copied()
+            .unwrap_or_default();
+        let mut over = Vec::new();
+        for (kind, have, allow) in [
+            ("unwrap", count.unwrap, cap.unwrap),
+            ("expect", count.expect, cap.expect),
+            ("panic!", count.panic, cap.panic),
+        ] {
+            if have > allow {
+                over.push(format!("{kind} {have} > {allow}"));
+            }
+        }
+        let slack = PanicCounts {
+            unwrap: cap.unwrap.saturating_sub(count.unwrap),
+            expect: cap.expect.saturating_sub(count.expect),
+            panic: cap.panic.saturating_sub(count.panic),
+        };
+        if !over.is_empty() {
+            findings.push(Finding {
+                path: format!("rust/src/{module}"),
+                line: 0,
+                rule: "D005",
+                message: format!(
+                    "panic budget exceeded: {} — remove sites; {} only \
+                     ratchets down",
+                    over.join(", "),
+                    BUDGET_PATH
+                ),
+            });
+        }
+        if slack.total() > 0 {
+            report.budget_slack.insert(module.clone(), slack);
+        }
+    }
+    report.findings.extend(findings);
+    report.findings.sort();
+}
+
+impl Budget {
+    pub fn load(path: &Path) -> Result<Budget> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!(
+                "read {} (the D005 panic-budget ratchet; regenerate \
+                 with scripts/lint_budget.py)",
+                path.display()
+            )
+        })?;
+        Budget::parse(&text)
+            .with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Budget> {
+        let doc = json::parse(text)?;
+        let schema = doc
+            .get("schema")
+            .and_then(json::Value::as_str)
+            .ok_or_else(|| anyhow!("budget missing \"schema\""))?;
+        if schema != BUDGET_SCHEMA {
+            bail!("budget schema {schema:?}, expected {BUDGET_SCHEMA:?}");
+        }
+        let mods = doc
+            .get("modules")
+            .and_then(json::Value::as_obj)
+            .ok_or_else(|| anyhow!("budget missing \"modules\""))?;
+        let mut modules = BTreeMap::new();
+        for (module, v) in mods {
+            let counts = v
+                .as_obj()
+                .ok_or_else(|| anyhow!("budget[{module:?}] not an object"))?;
+            let mut c = PanicCounts::default();
+            for (kind, n) in counts {
+                let n = n.as_usize().ok_or_else(|| {
+                    anyhow!("budget[{module:?}][{kind:?}] not a count")
+                })?;
+                match kind.as_str() {
+                    "unwrap" => c.unwrap = n,
+                    "expect" => c.expect = n,
+                    "panic" => c.panic = n,
+                    other => {
+                        bail!("budget[{module:?}]: unknown kind {other:?}")
+                    }
+                }
+            }
+            modules.insert(module.clone(), c);
+        }
+        Ok(Budget { modules })
+    }
+}
+
+/// Walk upward from `start` to the first directory containing
+/// `rust/src` — the repo root, from wherever the binary is invoked.
+pub fn find_root(start: &Path) -> Result<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!(
+                "no rust/src above {} (pass --root <repo>)",
+                start.display()
+            );
+        }
+    }
+}
+
+/// Scan the tree under `root` and, when a budget is given, check the
+/// D005 ratchet against it.
+pub fn run(root: &Path, budget: Option<&Budget>) -> Result<Report> {
+    let mut report = scan_tree(&root.join("rust").join("src"))?;
+    if let Some(b) = budget {
+        apply_budget(&mut report, b);
+    }
+    Ok(report)
+}
+
+impl Report {
+    /// The `flux-lint-v1` document: one line, keys in fixed
+    /// (alphabetical) order, byte-identical across runs.
+    pub fn to_json(&self) -> String {
+        let mut o = String::from("{\"allowed\":[");
+        for (i, a) in self.allowed.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(
+                o,
+                "{{\"line\":{},\"path\":{},\"reason\":{},\"rule\":{}}}",
+                a.line,
+                json::esc(&a.path),
+                json::esc(&a.reason),
+                json::esc(a.rule)
+            );
+        }
+        o.push_str("],\"budget_slack\":");
+        push_counts_map(&mut o, &self.budget_slack);
+        let _ = write!(o, ",\"files_scanned\":{}", self.files_scanned);
+        o.push_str(",\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            let _ = write!(
+                o,
+                "{{\"line\":{},\"message\":{},\"path\":{},\"rule\":{}}}",
+                f.line,
+                json::esc(&f.message),
+                json::esc(&f.path),
+                json::esc(f.rule)
+            );
+        }
+        o.push_str("],\"panic_sites\":");
+        push_counts_map(&mut o, &self.panic_sites);
+        let _ = write!(o, ",\"schema\":{}}}", json::esc(SCHEMA));
+        o
+    }
+
+    /// Human-readable rendering: findings (file:line, clickable),
+    /// the pragma audit trail, and the ratchet state.
+    pub fn render_human(&self) -> String {
+        let mut o = String::new();
+        for f in &self.findings {
+            let _ = writeln!(
+                o,
+                "{} {}:{}: {}",
+                f.rule, f.path, f.line, f.message
+            );
+        }
+        for a in &self.allowed {
+            let _ = writeln!(
+                o,
+                "allowed {} {}:{} -- {}",
+                a.rule, a.path, a.line, a.reason
+            );
+        }
+        let mut sites = PanicCounts::default();
+        for c in self.panic_sites.values() {
+            sites.unwrap += c.unwrap;
+            sites.expect += c.expect;
+            sites.panic += c.panic;
+        }
+        let _ = writeln!(
+            o,
+            "panic sites (non-test): {} across {} modules (unwrap {}, \
+             expect {}, panic! {})",
+            sites.total(),
+            self.panic_sites.len(),
+            sites.unwrap,
+            sites.expect,
+            sites.panic
+        );
+        for (module, s) in &self.budget_slack {
+            let _ = writeln!(
+                o,
+                "budget slack: {module} (unwrap {}, expect {}, panic! \
+                 {}) — ratchet {} down",
+                s.unwrap, s.expect, s.panic, BUDGET_PATH
+            );
+        }
+        if self.findings.is_empty() {
+            let _ = writeln!(
+                o,
+                "flux-lint: clean ({} files, {} pragma-allowed)",
+                self.files_scanned,
+                self.allowed.len()
+            );
+        } else {
+            let _ = writeln!(
+                o,
+                "flux-lint: {} finding(s) in {} files",
+                self.findings.len(),
+                self.files_scanned
+            );
+        }
+        o
+    }
+}
+
+fn push_counts_map(o: &mut String, map: &BTreeMap<String, PanicCounts>) {
+    o.push('{');
+    for (i, (module, c)) in map.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str(&json::esc(module));
+        o.push_str(":{");
+        let mut first = true;
+        for (kind, n) in
+            [("expect", c.expect), ("panic", c.panic), ("unwrap", c.unwrap)]
+        {
+            if n > 0 {
+                if !first {
+                    o.push(',');
+                }
+                first = false;
+                let _ = write!(o, "\"{kind}\":{n}");
+            }
+        }
+        o.push('}');
+    }
+    o.push('}');
+}
+
+/// Minimal JSON reader/escaper for the budget file and the report
+/// writer. flux-lint stays dependency-free (the main crate's
+/// `util::json` lives on the other side of the `flux -> flux-lint`
+/// edge), so it carries this ~100-line subset: objects, strings,
+/// non-negative integers — everything `lint_budget.json` contains.
+mod json {
+    use std::collections::BTreeMap;
+
+    use anyhow::{anyhow, bail, Result};
+
+    #[derive(Clone, Debug)]
+    pub enum Value {
+        Str(String),
+        Num(f64),
+        Obj(BTreeMap<String, Value>),
+    }
+
+    impl Value {
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(m) => m.get(key),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+            match self {
+                Value::Obj(m) => Some(m),
+                _ => None,
+            }
+        }
+
+        pub fn as_usize(&self) -> Option<usize> {
+            match self {
+                Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => {
+                    Some(*x as usize)
+                }
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let b = text.as_bytes();
+        let mut i = 0usize;
+        let v = value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            bail!("trailing JSON at byte {i}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len()
+            && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            *i += 1;
+        }
+    }
+
+    fn value(b: &[u8], i: &mut usize) -> Result<Value> {
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b'{') => {
+                *i += 1;
+                let mut m = BTreeMap::new();
+                skip_ws(b, i);
+                if b.get(*i) == Some(&b'}') {
+                    *i += 1;
+                    return Ok(Value::Obj(m));
+                }
+                loop {
+                    skip_ws(b, i);
+                    let k = string(b, i)?;
+                    skip_ws(b, i);
+                    if b.get(*i) != Some(&b':') {
+                        bail!("expected ':' at byte {i}");
+                    }
+                    *i += 1;
+                    m.insert(k, value(b, i)?);
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b'}') => {
+                            *i += 1;
+                            return Ok(Value::Obj(m));
+                        }
+                        _ => bail!("expected ',' or '}}' at byte {i}"),
+                    }
+                }
+            }
+            Some(b'"') => Ok(Value::Str(string(b, i)?)),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => {
+                let start = *i;
+                while *i < b.len()
+                    && matches!(b[*i],
+                        b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    *i += 1;
+                }
+                let s = std::str::from_utf8(&b[start..*i])?;
+                Ok(Value::Num(s.parse()?))
+            }
+            _ => bail!("unsupported JSON value at byte {i}"),
+        }
+    }
+
+    fn string(b: &[u8], i: &mut usize) -> Result<String> {
+        if b.get(*i) != Some(&b'"') {
+            bail!("expected string at byte {i}");
+        }
+        *i += 1;
+        let mut s = String::new();
+        loop {
+            let c = *b
+                .get(*i)
+                .ok_or_else(|| anyhow!("unterminated string"))?;
+            *i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = *b
+                        .get(*i)
+                        .ok_or_else(|| anyhow!("truncated escape"))?;
+                    *i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        other => {
+                            bail!("unsupported escape \\{}", other as char)
+                        }
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: re-decode from the raw slice.
+                    let start = *i - 1;
+                    let mut end = *i;
+                    while end < b.len() && (b[end] & 0xC0) == 0x80 {
+                        end += 1;
+                    }
+                    s.push_str(std::str::from_utf8(&b[start..end])?);
+                    *i = end;
+                }
+            }
+        }
+    }
+
+    /// JSON-escape a string, with quotes.
+    pub fn esc(s: &str) -> String {
+        let mut o = String::with_capacity(s.len() + 2);
+        o.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => o.push_str("\\\""),
+                '\\' => o.push_str("\\\\"),
+                '\n' => o.push_str("\\n"),
+                '\r' => o.push_str("\\r"),
+                '\t' => o.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    o.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => o.push(c),
+            }
+        }
+        o.push('"');
+        o
+    }
+}

@@ -1,0 +1,97 @@
+//! `flux-lint` binary: scan `rust/src/**` for determinism-rule
+//! violations (D001-D005) and report them human-readably or as the
+//! byte-stable `flux-lint-v1` JSON document.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use flux_lint::{find_root, run, Budget, BUDGET_PATH, RULES};
+
+const USAGE: &str = "\
+flux-lint — determinism & byte-stability lint for the FLUX tree
+
+USAGE:
+    flux-lint [--json] [--root DIR] [--budget FILE] [--list]
+
+OPTIONS:
+    --json         emit the byte-stable flux-lint-v1 JSON document
+    --root DIR     repo root (default: walk up from cwd to rust/src)
+    --budget FILE  D005 panic-budget file
+                   (default: <root>/artifacts/lint_budget.json)
+    --list         print the rule table and exit
+";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("flux-lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<ExitCode> {
+    let mut json = false;
+    let mut list = false;
+    let mut root: Option<PathBuf> = None;
+    let mut budget_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--list" => list = true,
+            "--root" => {
+                root = Some(PathBuf::from(
+                    args.next()
+                        .ok_or_else(|| anyhow::anyhow!("--root needs DIR"))?,
+                ));
+            }
+            "--budget" => {
+                budget_path = Some(PathBuf::from(args.next().ok_or_else(
+                    || anyhow::anyhow!("--budget needs FILE"),
+                )?));
+            }
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => {
+                eprintln!("flux-lint: unknown argument {other:?}\n");
+                eprint!("{USAGE}");
+                return Ok(ExitCode::from(2));
+            }
+        }
+    }
+    if list {
+        for r in RULES {
+            println!("{}  {:<22} {}", r.id, r.title, r.protects);
+        }
+        return Ok(ExitCode::SUCCESS);
+    }
+    let root = match root {
+        Some(r) => r,
+        None => find_root(&std::env::current_dir()?)?,
+    };
+    let budget_path =
+        budget_path.unwrap_or_else(|| root.join(BUDGET_PATH));
+    let budget = if budget_path.exists() {
+        Some(Budget::load(&budget_path)?)
+    } else {
+        // No ratchet file: D005 is skipped (fixture trees, bring-up).
+        None
+    };
+    let report = run(&root, budget.as_ref())?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    Ok(if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    })
+}

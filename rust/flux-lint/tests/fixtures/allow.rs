@@ -1,0 +1,11 @@
+// flux-lint test fixture: allow pragma, standalone-line form (covers
+// the next code line) and same-line form.
+
+fn lt(a: f64, b: f64) -> bool {
+    // flux-lint: allow(D002) -- fixture: callers reject NaN upstream
+    matches!(a.partial_cmp(&b), Some(std::cmp::Ordering::Less))
+}
+
+fn probe(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).is_some() // flux-lint: allow(D002) -- same line
+}

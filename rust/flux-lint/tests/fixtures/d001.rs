@@ -1,0 +1,10 @@
+// flux-lint test fixture: D001 (hash-order collections).
+use std::collections::HashMap;
+
+fn count(xs: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

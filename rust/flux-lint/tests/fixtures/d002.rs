@@ -1,0 +1,15 @@
+// flux-lint test fixture: D002 (partial_cmp on floats). The use on
+// line 5 is a violation; the `fn partial_cmp` PartialOrd impl below is
+// a definition and must NOT be flagged.
+
+fn smallest(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+struct T(f64);
+
+impl PartialOrd for T {
+    fn partial_cmp(&self, _other: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}

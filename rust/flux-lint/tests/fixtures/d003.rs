@@ -1,0 +1,7 @@
+// flux-lint test fixture: D003 (wall clock).
+use std::time::Instant;
+
+fn wall() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as f64
+}

@@ -1,0 +1,6 @@
+// flux-lint test fixture: D004 (OS entropy).
+
+fn roll() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

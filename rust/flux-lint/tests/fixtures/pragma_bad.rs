@@ -1,0 +1,13 @@
+// flux-lint test fixture: D000 (pragma hygiene). Unknown rule id,
+// missing reason, and an allow that suppresses nothing.
+
+// flux-lint: allow(D999) -- not a real rule
+fn unknown_rule() {}
+
+// flux-lint: allow(D001)
+fn reasonless() {}
+
+// flux-lint: allow(D001) -- suppresses nothing below
+fn clean() -> u32 {
+    7
+}

@@ -106,6 +106,11 @@ COMMANDS:
                    --json write BENCH_<n>.json (byte-stable) instead of
                           printing; [--out <path>] [--quick] [--wall]
                           [--threads <n>]
+    lint         determinism & byte-stability lint over rust/src
+                   (rules D001-D005; `flux list` prints the table,
+                   README \"Determinism discipline\" has the details);
+                   [--json] emits the byte-stable flux-lint-v1
+                   document; exits nonzero on any finding
 
 Clusters: \"a100 pcie\" | \"a100 nvlink\" | \"h800 nvlink\"
 ";
@@ -170,10 +175,11 @@ fn main() -> Result<()> {
         "bench" => {
             cmd_bench(&Args::parse(rest(), &["json", "quick", "wall"])?)
         }
+        "lint" => cmd_lint(&Args::parse(rest(), &["json"])?),
         other => bail!(
             "unknown command {other:?}; try figures|simulate|\
              sweep-workloads|scenario|list|tune|train|serve|\
-             gen-goldens|bench (or --help)"
+             gen-goldens|bench|lint (or --help)"
         ),
     }
 }
@@ -452,6 +458,32 @@ fn cmd_list() -> Result<()> {
     for s in flux::report::SCHEMAS {
         println!("  {:<15} {:<32} {}", s.name, s.command, s.summary);
     }
+    println!(
+        "\nlint rules (flux lint [--json], schema {}):",
+        flux_lint::SCHEMA
+    );
+    for r in flux_lint::RULES {
+        println!("  {}  {:<22} {}", r.id, r.title, r.protects);
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = flux_lint::find_root(&std::env::current_dir()?)?;
+    let budget_path = root.join(flux_lint::BUDGET_PATH);
+    // The checked-in ratchet is required here (unlike the standalone
+    // binary, which tolerates its absence for fixture trees): `flux
+    // lint` is the CI entry point and D005 must not silently skip.
+    let budget = flux_lint::Budget::load(&budget_path)?;
+    let report = flux_lint::run(&root, Some(&budget))?;
+    if args.has("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if !report.findings.is_empty() {
+        bail!("flux lint: {} finding(s)", report.findings.len());
+    }
     Ok(())
 }
 
@@ -528,7 +560,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect();
         batcher.submit(Request::new(i, 0.0, prompt, gen));
     }
-    let t0 = std::time::Instant::now();
+    // Wall clock on purpose: `flux serve` measures the real PJRT
+    // execution; nothing here feeds a deterministic report.
+    let t0 = flux::util::bench::Stopwatch::start();
     let mut last_tok = vec![0i32; eng.b];
     let mut slot_of = std::collections::BTreeMap::new();
     loop {

@@ -315,13 +315,13 @@ fn simulate_ag(c: &mut Cluster, p: &Problem, cfg: &FluxConfig) -> f64 {
         // K-way merge: advance the chain whose next transfer is ready
         // earliest so link FIFO order matches simulated time order.
         loop {
-            let Some(ci) = chains
-                .iter()
-                .enumerate()
-                .filter(|(_, ch)| ch.next < ch.items.len())
-                .min_by(|a, b| a.1.ready.partial_cmp(&b.1.ready).unwrap())
-                .map(|(i, _)| i)
-            else {
+            let Some(ci) = earliest_ready(
+                chains
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, ch)| ch.next < ch.items.len())
+                    .map(|(i, ch)| (i, ch.ready)),
+            ) else {
                 break;
             };
             let (t, ready) = {
@@ -403,6 +403,18 @@ fn simulate_ag(c: &mut Cluster, p: &Problem, cfg: &FluxConfig) -> f64 {
     overall
 }
 
+/// Index of the earliest-ready chain among `(index, ready)` pairs.
+/// `total_cmp` keeps the k-way merge total even for a non-finite
+/// `ready` (NaN sorts after every real time) — the old
+/// `partial_cmp().unwrap()` panicked there (flux-lint rule D002). For
+/// the finite times the transfer model produces, the order (and every
+/// pinned report byte) is identical.
+fn earliest_ready(
+    ready: impl Iterator<Item = (usize, f64)>,
+) -> Option<usize> {
+    ready.min_by(|a, b| a.1.total_cmp(&b.1)).map(|(i, _)| i)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +431,36 @@ mod tests {
         -> OpTiming
     {
         simulate(cluster, p, &FluxConfig::for_cluster(cluster), 1)
+    }
+
+    #[test]
+    fn earliest_ready_is_nan_safe() {
+        // Regression: a non-finite `ready` used to panic the NVLink
+        // k-way merge via `partial_cmp().unwrap()`. Under `total_cmp`
+        // NaN orders after every finite time, so the merge keeps
+        // draining the well-formed chains deterministically.
+        let nan = f64::NAN;
+        assert_eq!(
+            earliest_ready([(0, nan), (1, 1.0)].into_iter()),
+            Some(1)
+        );
+        assert_eq!(
+            earliest_ready([(0, 2.0), (1, nan), (2, 0.5)].into_iter()),
+            Some(2)
+        );
+        // All-NaN still selects something instead of panicking.
+        assert_eq!(
+            earliest_ready([(0, nan), (1, nan)].into_iter()),
+            Some(0)
+        );
+        assert_eq!(earliest_ready(std::iter::empty()), None);
+        // Finite ties keep `min_by`'s first-minimum choice — the same
+        // chain the pre-fix code advanced, so pinned report bytes are
+        // unchanged.
+        assert_eq!(
+            earliest_ready([(0, 3.0), (1, 3.0)].into_iter()),
+            Some(0)
+        );
     }
 
     #[test]

@@ -142,7 +142,9 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
         let path = self.dir.join(file);
-        let t0 = std::time::Instant::now();
+        // Wall clock on purpose: `compile_ns` is PJRT diagnostics, not
+        // a deterministic report field (flux-lint D003 via Stopwatch).
+        let t0 = crate::util::bench::Stopwatch::start();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);

@@ -236,9 +236,11 @@ impl<E> EventQueue<E> {
     }
 
     #[inline]
+    #[allow(clippy::disallowed_methods)] // see the flux-lint pragma
     fn key_lt(a: (Time, u64), b: (Time, u64)) -> bool {
         // Stored times are finite and -0.0-normalized, so IEEE compare
         // plus the seq tie-break is the same total order as `total_cmp`.
+        // flux-lint: allow(D002) -- admit() rejects non-finite times
         match a.0.partial_cmp(&b.0) {
             Some(Ordering::Less) => true,
             Some(Ordering::Greater) => false,
@@ -621,7 +623,7 @@ fn run_hold<Q: DesQueue<u64>>(
     assert!(resident > 0, "hold workload needs a resident population");
     let mut rng = Rng::new(seed);
     let mut checksum = 0xcbf2_9ce4_8422_2325u64;
-    let start = std::time::Instant::now();
+    let start = crate::util::bench::Stopwatch::start();
     for i in 0..resident {
         q.schedule(rng.f64() * 1e6, i as u64);
     }
@@ -643,7 +645,7 @@ fn run_hold<Q: DesQueue<u64>>(
         pops += 1;
         checksum = fnv_fold(checksum, t.to_bits() ^ p);
     }
-    let wall_ns = start.elapsed().as_nanos() as f64;
+    let wall_ns = start.elapsed_ns();
     HoldRun { resident, ops, pops, schedules, checksum, wall_ns }
 }
 

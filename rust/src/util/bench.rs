@@ -4,10 +4,45 @@
 //! this instead (they are `harness = false` binaries). It does warmup,
 //! adaptive iteration-count selection, and prints a stable one-line
 //! summary per benchmark plus any figure tables the bench emits.
+//!
+//! This module is also the repo's only sanctioned wall-clock source:
+//! flux-lint rule D003 bans `Instant`/`SystemTime` everywhere else in
+//! `rust/src`, so code that genuinely needs wall time (`--wall` report
+//! sections, PJRT compile accounting, the serve loop) routes through
+//! [`Stopwatch`]. Wall-clock numbers are machine-local and stay outside
+//! the byte-stability contract.
+
+// The clippy mirror of D003 (clippy.toml disallowed-methods) is
+// file-allowed here for the same reason flux-lint allowlists this file.
+#![allow(clippy::disallowed_methods)]
 
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{fmt_ns, Summary};
+
+/// Wall-clock stopwatch — the one `Instant` entry point outside this
+/// module's bench harness (flux-lint rule D003). Keeping every caller
+/// on this type makes the wall-clock surface greppable: a `Stopwatch`
+/// reading may feed `--wall` report sections, throughput prints and
+/// diagnostics, never a deterministic report field.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Elapsed wall time in f64 nanoseconds — the unit the `wall`
+    /// report sections carry.
+    pub fn elapsed_ns(&self) -> f64 {
+        self.0.elapsed().as_nanos() as f64
+    }
+}
 
 pub struct Bench {
     /// Target measurement time per benchmark.

@@ -21,7 +21,9 @@ fn help_exits_zero_and_lists_subcommands() {
     let out = flux_bin().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["figures", "simulate", "tune", "gen-goldens", "bench"] {
+    for cmd in
+        ["figures", "simulate", "tune", "gen-goldens", "bench", "lint"]
+    {
         assert!(text.contains(cmd), "--help must mention {cmd}");
     }
     // `--help` after a subcommand also prints usage (not a parse error).
@@ -58,6 +60,9 @@ fn list_prints_every_registry() {
     }
     for s in flux::report::SCHEMAS {
         assert!(text.contains(s.name), "missing schema {}", s.name);
+    }
+    for r in flux_lint::RULES {
+        assert!(text.contains(r.id), "missing lint rule {}", r.id);
     }
 }
 

@@ -1,0 +1,462 @@
+#!/usr/bin/env python3
+"""Bit-exact Python mirror of rust/flux-lint's scanner.
+
+Two jobs:
+
+  1. Regenerate the D005 panic-budget ratchet after panic sites are
+     removed (never to raise it):
+
+         python3 scripts/lint_budget.py rust/src artifacts/lint_budget.json
+
+  2. Cross-check the Rust scanner: rules D001-D004, pragma handling and
+     the per-module panic counts below are the executable spec that
+     rust/flux-lint/src/{lexer,lib}.rs ports line for line. A change to
+     either side must land in both, and `flux lint` / this script must
+     keep printing identical findings for the same tree.
+
+See README "Determinism discipline" for the rule table and the pragma
+grammar.
+"""
+import json
+import os
+import sys
+
+PRAGMA_RULES = {"D001", "D002", "D003", "D004"}
+
+# file-scope allowlists, keyed by rule, values are paths relative to
+# rust/src with forward slashes.
+FILE_ALLOW = {
+    "D003": {"util/bench.rs"},
+}
+
+D004_IDENTS = {
+    "thread_rng", "ThreadRng", "OsRng", "StdRng", "from_entropy",
+    "getrandom", "RandomState",
+}
+
+
+def strip(text):
+    """Blank comments, strings and char literals.
+
+    Returns (blanked, line_comments) where `blanked` has the same
+    char-for-char layout as `text` (non-code chars replaced by spaces,
+    newlines preserved) and `line_comments` is a list of
+    (line_no, comment_text) for every `//` comment (text after the
+    slashes, up to but excluding the newline).
+    """
+    chars = list(text)
+    n = len(chars)
+    out = [" "] * n
+    comments = []
+    i = 0
+    line = 1
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            out[i] = "\n"
+            line += 1
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and chars[i + 1] == "/":
+            # line comment: record text, blank to end of line
+            j = i + 2
+            while j < n and chars[j] != "\n":
+                j += 1
+            comments.append((line, "".join(chars[i + 2:j])))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and chars[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if chars[i] == "\n":
+                    out[i] = "\n"
+                    line += 1
+                    i += 1
+                elif chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            continue
+        if c == '"':
+            i, line = skip_string(chars, i + 1, line, out)
+            continue
+        # raw strings r"..." / r#"..."# and byte strings b"..", br#".."#,
+        # but NOT raw identifiers (r#foo) or plain idents ending in r/b.
+        if c in ("r", "b") and not is_ident_char(chars[i - 1] if i else " "):
+            j = i + 1
+            if c == "b" and j < n and chars[j] == "r":
+                j += 1
+            hashes = 0
+            while j < n and chars[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and chars[j] == '"':
+                if c == "b" and hashes == 0 and chars[i + 1] != '"' \
+                        and chars[i + 1] != "r":
+                    pass  # unreachable: j advanced only past r/#
+                i, line = skip_raw_string(chars, j + 1, hashes, line, out)
+                continue
+            if c == "b" and i + 1 < n and chars[i + 1] == "'":
+                # byte char literal b'x'
+                i, line = skip_char_literal(chars, i + 2, line, out)
+                continue
+            # not a literal: fall through as code
+        if c == "'":
+            nxt = chars[i + 1] if i + 1 < n else " "
+            nxt2 = chars[i + 2] if i + 2 < n else " "
+            if nxt == "\\":
+                i, line = skip_char_literal(chars, i + 1, line, out)
+                continue
+            if is_ident_start(nxt) and nxt2 != "'":
+                # lifetime: blank the quote, keep the name as code
+                i += 1
+                continue
+            if nxt2 == "'":
+                i += 3  # 'x'
+                continue
+            i += 1  # stray quote (shouldn't happen in valid Rust)
+            continue
+        out[i] = c
+        i += 1
+    return "".join(out), comments
+
+
+def skip_string(chars, i, line, out):
+    n = len(chars)
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            out[i] = "\n"
+            line += 1
+            i += 1
+        elif c == "\\":
+            # `\<newline>` is a line continuation: the newline is still
+            # a source line boundary.
+            if i + 1 < n and chars[i + 1] == "\n":
+                out[i + 1] = "\n"
+                line += 1
+            i += 2
+        elif c == '"':
+            return i + 1, line
+        else:
+            i += 1
+    return i, line
+
+
+def skip_raw_string(chars, i, hashes, line, out):
+    n = len(chars)
+    closing = '"' + "#" * hashes
+    while i < n:
+        if chars[i] == "\n":
+            out[i] = "\n"
+            line += 1
+            i += 1
+        elif chars[i] == '"' and "".join(chars[i:i + 1 + hashes]) == closing:
+            return i + 1 + hashes, line
+        else:
+            i += 1
+    return i, line
+
+
+def skip_char_literal(chars, i, line, out):
+    # i points at the backslash (or first interior char); scan to the
+    # closing quote. Escapes like '\'' put the quote right after the
+    # escaped char, '\u{..}' ends at the next quote either way.
+    n = len(chars)
+    if i < n and chars[i] == "\\":
+        i += 2  # skip backslash + escaped char
+    while i < n and chars[i] != "'":
+        i += 1
+    return i + 1, line
+
+
+def is_ident_start(c):
+    return c.isascii() and (c.isalpha() or c == "_")
+
+
+def is_ident_char(c):
+    return c.isascii() and (c.isalnum() or c == "_")
+
+
+def tokenize(blanked):
+    """[(line, kind, text)] with kind in {id, num, punct}."""
+    toks = []
+    line = 1
+    i = 0
+    n = len(blanked)
+    while i < n:
+        c = blanked[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c.isspace():
+            i += 1
+        elif is_ident_start(c):
+            j = i
+            while j < n and is_ident_char(blanked[j]):
+                j += 1
+            toks.append((line, "id", blanked[i:j]))
+            i = j
+        elif c.isascii() and c.isdigit():
+            j = i
+            while j < n and is_ident_char(blanked[j]):
+                j += 1
+            toks.append((line, "num", blanked[i:j]))
+            i = j
+        else:
+            toks.append((line, "punct", c))
+            i += 1
+    return toks
+
+
+def test_regions(toks):
+    """Token-index spans [start, end) covered by #[cfg(test)] items."""
+    spans = []
+    n = len(toks)
+    i = 0
+    while i < n:
+        if (
+            toks[i][1:] == ("punct", "#")
+            and i + 6 < n
+            and toks[i + 1][1:] == ("punct", "[")
+            and toks[i + 2][1:] == ("id", "cfg")
+            and toks[i + 3][1:] == ("punct", "(")
+            and toks[i + 4][1:] == ("id", "test")
+            and toks[i + 5][1:] == ("punct", ")")
+            and toks[i + 6][1:] == ("punct", "]")
+        ):
+            j = i + 7
+            # the guarded item ends at the matching brace of its first
+            # block, or at a semicolon if brace-less (e.g. a `use`).
+            while j < n and toks[j][1:] not in (
+                ("punct", "{"),
+                ("punct", ";"),
+            ):
+                j += 1
+            if j < n and toks[j][1:] == ("punct", "{"):
+                depth = 1
+                j += 1
+                while j < n and depth > 0:
+                    if toks[j][1:] == ("punct", "{"):
+                        depth += 1
+                    elif toks[j][1:] == ("punct", "}"):
+                        depth -= 1
+                    j += 1
+            else:
+                j = min(j + 1, n)
+            spans.append((i, j))
+            i = j
+        else:
+            i += 1
+    return spans
+
+
+def in_spans(spans, idx):
+    return any(s <= idx < e for s, e in spans)
+
+
+def parse_pragmas(comments, blanked_lines):
+    """-> (pragmas, malformed) where pragmas are dicts with
+    {line, target, rules, reason} and malformed is [(line, message)]."""
+    pragmas = []
+    malformed = []
+    for line, text in comments:
+        # Only `// flux-lint: ...` is a pragma attempt; prose mentions
+        # ("flux-lint rule D003 bans ...") are ordinary comments.
+        t = text.strip()
+        if not t.startswith("flux-lint:"):
+            continue
+        ok = False
+        rules = []
+        reason = ""
+        rest = t[len("flux-lint:"):].strip()
+        if rest.startswith("allow(") and ")" in rest:
+            inner, _, tail = rest[len("allow("):].partition(")")
+            rules = [r.strip() for r in inner.split(",")]
+            tail = tail.strip()
+            if (
+                rules
+                and all(r in PRAGMA_RULES for r in rules)
+                and tail.startswith("--")
+                and tail[2:].strip()
+            ):
+                ok = True
+                reason = tail[2:].strip()
+        if not ok:
+            malformed.append((
+                line,
+                "malformed flux-lint pragma: expected `// flux-lint: "
+                "allow(D001[,D002...]) -- reason` (rules D001-D004)",
+            ))
+            continue
+        code = blanked_lines[line - 1] if line - 1 < len(blanked_lines) else ""
+        if code.strip() == "":
+            # standalone comment line: applies to the next code line
+            target = None
+            for ln in range(line, len(blanked_lines)):
+                if blanked_lines[ln].strip() != "":
+                    target = ln + 1
+                    break
+        else:
+            target = line
+        pragmas.append({
+            "line": line,
+            "target": target,
+            "rules": rules,
+            "reason": reason,
+        })
+    return pragmas, malformed
+
+
+def scan_file(rel, text):
+    """-> (findings, allowed, counts)
+
+    findings: [(rule, line, message)]
+    allowed:  [(rule, line, reason)]
+    counts:   {"unwrap": n, "expect": n, "panic": n}  (non-test code)
+    """
+    blanked, comments = strip(text)
+    blanked_lines = blanked.split("\n")
+    toks = tokenize(blanked)
+    spans = test_regions(toks)
+    pragmas, malformed = parse_pragmas(comments, blanked_lines)
+
+    raw = []  # (rule, line, message) before pragma suppression
+    counts = {"unwrap": 0, "expect": 0, "panic": 0}
+    for idx, (line, kind, tok) in enumerate(toks):
+        if kind != "id":
+            continue
+        prev = toks[idx - 1][1:] if idx > 0 else ("punct", " ")
+        nxt = toks[idx + 1][1:] if idx + 1 < len(toks) else ("punct", " ")
+        if tok in ("HashMap", "HashSet"):
+            raw.append((
+                "D001", line,
+                f"{tok} iterates in hash order; use BTreeMap/BTreeSet "
+                "or a Vec so report bytes stay stable",
+            ))
+        elif tok == "partial_cmp" and prev != ("id", "fn"):
+            raw.append((
+                "D002", line,
+                "partial_cmp is not total on floats (NaN); use "
+                "f64::total_cmp",
+            ))
+        elif tok in ("Instant", "SystemTime") and rel not in FILE_ALLOW["D003"]:
+            raw.append((
+                "D003", line,
+                f"std::time::{tok} is wall clock; deterministic paths "
+                "must route timing through util::bench (Stopwatch)",
+            ))
+        elif tok in D004_IDENTS:
+            raw.append((
+                "D004", line,
+                f"{tok} draws OS entropy; construct RNGs via the "
+                "seeded util::prng::Rng entry points",
+            ))
+        elif (
+            tok in ("unwrap", "expect")
+            and prev == ("punct", ".")
+            and nxt == ("punct", "(")
+            and not in_spans(spans, idx)
+        ):
+            counts[tok] += 1
+        elif (
+            tok == "panic"
+            and nxt == ("punct", "!")
+            and not in_spans(spans, idx)
+        ):
+            counts["panic"] += 1
+
+    findings = [("D000", ln, msg) for ln, msg in malformed]
+    allowed = []
+    used = set()
+    for rule, line, msg in raw:
+        hit = None
+        for pi, p in enumerate(pragmas):
+            if p["target"] == line and rule in p["rules"]:
+                hit = pi
+                break
+        if hit is None:
+            findings.append((rule, line, msg))
+        else:
+            used.add(hit)
+            allowed.append((rule, line, pragmas[hit]["reason"]))
+    for pi, p in enumerate(pragmas):
+        if pi not in used:
+            findings.append((
+                "D000", p["line"],
+                "unused flux-lint allow pragma (suppresses nothing on "
+                "its target line)",
+            ))
+    return findings, allowed, counts
+
+
+def scan_tree(src_root):
+    files = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                files.append(os.path.join(dirpath, f))
+    files.sort(key=lambda p: os.path.relpath(p, src_root).replace(os.sep, "/"))
+    all_findings = []
+    all_allowed = []
+    mod_counts = {}
+    for path in files:
+        rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        findings, allowed, counts = scan_file(rel, text)
+        for rule, line, msg in findings:
+            all_findings.append((rel, line, rule, msg))
+        for rule, line, reason in allowed:
+            all_allowed.append((rel, line, rule, reason))
+        mod_counts[rel] = counts
+    all_findings.sort()
+    all_allowed.sort()
+    return all_findings, all_allowed, mod_counts
+
+
+def main():
+    src = sys.argv[1] if len(sys.argv) > 1 else "rust/src"
+    findings, allowed, counts = scan_tree(src)
+    for rel, line, rule, msg in findings:
+        print(f"{rule} rust/src/{rel}:{line}: {msg}")
+    for rel, line, rule, reason in allowed:
+        print(f"allowed {rule} rust/src/{rel}:{line} -- {reason}")
+    total = {"unwrap": 0, "expect": 0, "panic": 0}
+    for rel in sorted(counts):
+        c = counts[rel]
+        if any(c.values()):
+            print(f"budget {rel}: {c}")
+            for k in total:
+                total[k] += c[k]
+    print(f"TOTAL sites: {total} findings: {len(findings)}")
+    if len(sys.argv) > 2:
+        budget = {
+            "schema": "flux-lint-budget-v1",
+            "note": (
+                "Panic-budget ratchet (flux-lint D005): unwrap()/expect()"
+                "/panic! sites per rust/src module, non-test code only. "
+                "Counts may only go down; remove a site rather than "
+                "raising its budget. Regenerate after removals: "
+                "flux lint prints the slack to reclaim."
+            ),
+            "modules": {
+                rel: {k: v for k, v in c.items() if v}
+                for rel, c in sorted(counts.items())
+                if any(c.values())
+            },
+        }
+        with open(sys.argv[2], "w", encoding="utf-8") as fh:
+            json.dump(budget, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {sys.argv[2]}")
+
+
+if __name__ == "__main__":
+    main()
