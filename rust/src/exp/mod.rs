@@ -60,12 +60,19 @@ pub fn execute(sc: &Scenario, opts: &ExecOpts) -> Result<()> {
         );
     }
     let runner = Runner::from_flag(opts.threads);
-    match sc.mode {
-        Mode::Serve => {
+    match (&sc.faults, sc.mode) {
+        // Fault injection swaps the document wholesale: degradation
+        // curves (flux-churn-v1) instead of the plain sweep.
+        (Some(faults), _) => {
+            let spec = faults.resolved()?;
+            let doc = report::churn_doc_scenario(sc, &spec, &runner)?;
+            emit(&doc, opts, report::print_churn, "churn")?;
+        }
+        (None, Mode::Serve) => {
             let doc = report::scale_doc_scenario(sc, &runner)?;
             emit(&doc, opts, report::print_scale, "scale")?;
         }
-        Mode::Train => {
+        (None, Mode::Train) => {
             let doc = report::train_doc_scenario(sc, &runner)?;
             emit(&doc, opts, report::print_train, "train")?;
         }
@@ -107,17 +114,57 @@ fn emit(
 /// comparison (decoupled+flux / megatron+te+flux), independent of the
 /// scenario's method set.
 fn write_trace(sc: &Scenario, path: &Path) -> Result<()> {
+    use crate::overlap::Method;
     let mut trace = Trace::new();
+    // A faulted scenario traces the spec as written (intensity 1) —
+    // the timeline the degradation curve's last point ran under.
+    let spec = match &sc.faults {
+        Some(f) => Some(f.resolved()?),
+        None => None,
+    };
     match sc.mode {
         Mode::Serve => {
             let cells = sc.serve_cells()?;
-            crate::serving::scale::compare_scale_traced(
-                &cells[0], &mut trace,
-            )?;
+            match &spec {
+                Some(spec) => {
+                    let tl = spec.expand(cells[0].topo.dp, 1.0);
+                    for (i, m) in Method::SERVE_SET.iter().enumerate() {
+                        crate::serving::scale::run_scale_faulted_traced(
+                            &cells[0],
+                            *m,
+                            &tl,
+                            Some((&mut trace, i * cells[0].topo.dp)),
+                        )?;
+                    }
+                }
+                None => {
+                    crate::serving::scale::compare_scale_traced(
+                        &cells[0], &mut trace,
+                    )?;
+                }
+            }
         }
         Mode::Train => {
             let cells = sc.train_cells()?;
-            crate::training::compare_train_traced(&cells[0], &mut trace)?;
+            match &spec {
+                Some(spec) => {
+                    let tl = spec.expand(cells[0].topo.pp, 1.0);
+                    let faults = (!tl.is_empty()).then_some(&tl);
+                    for (i, m) in Method::TRAIN_SET.iter().enumerate() {
+                        crate::training::run_train_with(
+                            &cells[0],
+                            *m,
+                            faults,
+                            Some((&mut trace, i * cells[0].topo.pp)),
+                        )?;
+                    }
+                }
+                None => {
+                    crate::training::compare_train_traced(
+                        &cells[0], &mut trace,
+                    )?;
+                }
+            }
         }
     }
     trace.write(path)?;

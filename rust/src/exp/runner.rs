@@ -90,7 +90,10 @@ impl Runner {
     /// configured. Results come back in cell order regardless of which
     /// worker ran which cell, and on failure the first failing cell
     /// **by input order** wins — errors are as deterministic as
-    /// successes.
+    /// successes. A cell that *panics* (rather than returning `Err`)
+    /// is caught and reported the same way, naming the cell index: a
+    /// bug in one cell must not tear down the whole matrix with an
+    /// unordered worker-thread abort.
     pub fn run_matrix<C, T>(
         &self,
         cells: &[C],
@@ -100,9 +103,21 @@ impl Runner {
         C: Sync,
         T: Send,
     {
+        let run = |i: usize| -> Result<T> {
+            let caught = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| f(&cells[i])),
+            );
+            match caught {
+                Ok(out) => out,
+                Err(payload) => Err(anyhow::anyhow!(
+                    "cell {i} panicked: {}",
+                    panic_text(payload.as_ref())
+                )),
+            }
+        };
         let workers = self.threads.min(cells.len());
         if workers <= 1 {
-            return cells.iter().map(f).collect();
+            return (0..cells.len()).map(run).collect();
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Slot<T>> =
@@ -114,7 +129,7 @@ impl Runner {
                     if i >= cells.len() {
                         break;
                     }
-                    let out = f(&cells[i]);
+                    let out = run(i);
                     *slots[i].lock().expect("cell slot poisoned") =
                         Some(out);
                 });
@@ -129,6 +144,16 @@ impl Runner {
             })
             .collect()
     }
+}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or a formatted message covers virtually every real panic).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 /// Default worker count: one per core the OS reports.
@@ -165,6 +190,29 @@ mod tests {
                 })
                 .unwrap_err();
             assert_eq!(err.to_string(), "cell 10 failed", "{threads}");
+        }
+    }
+
+    #[test]
+    fn worker_panics_surface_as_the_first_failing_cell() {
+        // A panicking cell used to abort the worker thread and tear
+        // down the whole scope with an unordered re-panic; now it is
+        // an ordinary error, merged by input order like any `Err`.
+        let cells: Vec<usize> = (0..64).collect();
+        for threads in [1, 7] {
+            let err = Runner::with_threads(threads)
+                .run_matrix(&cells, |&i| {
+                    if i == 12 || i == 40 {
+                        panic!("boom in cell {i}");
+                    }
+                    Ok(i)
+                })
+                .unwrap_err();
+            assert_eq!(
+                err.to_string(),
+                "cell 12 panicked: boom in cell 12",
+                "{threads} threads"
+            );
         }
     }
 

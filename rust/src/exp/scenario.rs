@@ -24,6 +24,7 @@ use crate::cost::arch::{
     ScaleTopology, TrainTopology, ALL_SCALE_TOPOLOGIES,
     ALL_TRAIN_TOPOLOGIES,
 };
+use crate::faults::FaultsRef;
 use crate::overlap::Method;
 use crate::serving::scale::ScaleScenario;
 use crate::training::TrainScenario;
@@ -87,6 +88,11 @@ pub struct Scenario {
     /// Overlap methods to run; `None` = the mode's default set
     /// ([`Method::SERVE_SET`] / [`Method::TRAIN_SET`]).
     pub methods: Option<Vec<Method>>,
+    /// Optional fault injection: a preset name or an inline
+    /// [`crate::faults::FaultSpec`]. Presence switches the report to
+    /// the `flux-churn-v1` degradation document; absence keeps every
+    /// historical document byte-identical.
+    pub faults: Option<FaultsRef>,
     pub quick: bool,
 }
 
@@ -103,6 +109,7 @@ impl Scenario {
             topos: only.map(|t| vec![t.name.to_string()]),
             workload: workload.map(WorkloadRef::Inline),
             methods: None,
+            faults: None,
             quick,
         }
     }
@@ -118,6 +125,7 @@ impl Scenario {
             topos: only.map(|t| vec![t.name.to_string()]),
             workload: None,
             methods: None,
+            faults: None,
             quick,
         }
     }
@@ -341,6 +349,13 @@ impl Scenario {
                 self.train_topos()?;
             }
         }
+        if let Some(f) = &self.faults {
+            // Unknown presets and malformed inline specs fail here
+            // with the fault layer's pointed errors, not mid-run.
+            f.resolved().with_context(|| {
+                format!("scenario {:?}", self.name)
+            })?;
+        }
         Ok(())
     }
 
@@ -372,6 +387,9 @@ impl Scenario {
                 "methods",
                 Json::Arr(ms.iter().map(|m| Json::from(m.key())).collect()),
             ));
+        }
+        if let Some(f) = &self.faults {
+            fields.push(("faults", f.to_json()));
         }
         obj(fields)
     }
@@ -407,6 +425,12 @@ impl Scenario {
                 Some(w) => Some(WorkloadRef::Inline(
                     WorkloadSpec::from_json(w).with_context(ctx)?,
                 )),
+                None => None,
+            },
+            faults: match j.opt("faults") {
+                Some(f) => Some(
+                    FaultsRef::from_json(f).with_context(ctx)?,
+                ),
                 None => None,
             },
             methods: match j.opt("methods") {
@@ -518,6 +542,7 @@ mod tests {
                 Method::Medium,
                 Method::Flux,
             ]),
+            faults: None,
             quick: true,
         }
     }
@@ -536,11 +561,24 @@ mod tests {
                 ..named()
             },
             Scenario {
+                name: "churny".into(),
+                faults: Some(FaultsRef::Preset("replica-churn".into())),
+                ..named()
+            },
+            Scenario {
+                name: "churny-inline".into(),
+                faults: Some(FaultsRef::Inline(
+                    crate::faults::preset("straggler-storm").unwrap(),
+                )),
+                ..named()
+            },
+            Scenario {
                 name: "train".into(),
                 mode: Mode::Train,
                 topos: Some(vec![TRAIN_PCIE_128.name.to_string()]),
                 workload: None,
                 methods: None,
+                faults: None,
                 quick: false,
             },
         ] {
@@ -617,6 +655,13 @@ mod tests {
         bad(r#""topologies": ["warp-drive"]"#, "unknown topology");
         bad(r#""topologies": []"#, "empty topology filter");
         bad(r#""workload": "mystery""#, "unknown workload preset");
+        bad(r#""faults": "mystery""#, "unknown fault preset");
+        bad(r#""faults": 7"#, "preset name or an inline fault");
+        bad(
+            r#""faults": {"name": "bad", "seed": 1,
+                "kills": [{"at_ns": -1.0, "downtime_ns": 5.0}]}"#,
+            "at_ns",
+        );
         // Train mode takes no workload.
         let text = r#"{"name": "bad", "mode": "train",
                        "workload": "bursty-decode"}"#;

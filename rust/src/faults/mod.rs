@@ -1,0 +1,942 @@
+//! Fault injection: seeded stragglers, NIC degradation, replica
+//! churn and elastic DP resize as declarative, replayable specs
+//! (ROADMAP item 5).
+//!
+//! A [`FaultSpec`] is data, like [`crate::workload::WorkloadSpec`]:
+//! it names straggler windows (per-replica multiplicative step-time
+//! inflation), NIC brownouts (scaled link bandwidth over a window),
+//! replica kills (drain in-flight work, reject routing, rejoin after
+//! a seeded downtime) and elastic DP resizes, parsed/serialized via
+//! `util/json` with pointed parse-time rejection. [`FaultSpec::expand`]
+//! turns the spec into a concrete [`FaultTimeline`] for one cluster
+//! size and one *intensity* knob: every seeded draw happens once, in a
+//! fixed documented order, **before** intensity scaling, so the
+//! timelines at intensity 0.0, 0.5 and 1.0 nest — the same kill fires
+//! at the same instant, only its downtime stretches. Intensity 0
+//! expands to an empty timeline and callers take the structurally
+//! identical fault-free path, which is what keeps the no-fault report
+//! bytes bit-identical to the PR-5 documents.
+//!
+//! The serving coordinator consumes kills/resizes/stragglers as DES
+//! events ([`crate::serving::scale::run_scale_faulted`]); the training
+//! simulator consumes stragglers (replica index = pipeline stage) and
+//! NIC windows ([`crate::training::run_train_with`]). The degradation
+//! curves land in the byte-stable `flux-churn-v1` report
+//! ([`crate::report::churn_doc_scenario`]).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// Sanity cap on every spec time/duration (ns). 2^53 ns is ~104 days
+/// of simulated time — far beyond any scenario here, and still exact
+/// in an f64.
+pub const MAX_TIME_NS: f64 = 9.0e15;
+
+/// Per-replica multiplicative step-time inflation over a window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerSpec {
+    /// Target replica (serving) or pipeline stage (training);
+    /// `None` = every replica, each with its own jitter draw.
+    pub replica: Option<usize>,
+    pub start_ns: f64,
+    pub dur_ns: f64,
+    /// Step-time multiplier at intensity 1.0 (>= 1.0).
+    pub factor: f64,
+    /// Uniform jitter added to `factor`: the drawn factor is
+    /// `factor + jitter * u` with `u ~ U[0, 1)` from the spec seed.
+    pub jitter: f64,
+}
+
+/// Scaled NIC/link bandwidth over a window: effective transfer time
+/// is multiplied by `scale` (>= 1.0) while the window is open.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NicSpec {
+    pub start_ns: f64,
+    pub dur_ns: f64,
+    pub scale: f64,
+}
+
+/// Kill a replica at `at_ns`; it drains, rejects routing, and rejoins
+/// after a seeded downtime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KillSpec {
+    /// `None` = every replica (correlated outage), each with its own
+    /// downtime jitter draw.
+    pub replica: Option<usize>,
+    pub at_ns: f64,
+    /// Downtime at intensity 1.0; the drawn downtime is
+    /// `downtime_ns + downtime_jitter_ns * u`, then scaled by the
+    /// expansion intensity.
+    pub downtime_ns: f64,
+    pub downtime_jitter_ns: f64,
+}
+
+/// Elastic DP resize: cap the routable replica set at `target_dp`
+/// from `at_ns`, restoring the full set after `dur_ns` (0 = never).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResizeSpec {
+    pub at_ns: f64,
+    pub target_dp: usize,
+    pub dur_ns: f64,
+}
+
+/// One declarative, seeded fault scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub name: String,
+    pub seed: u64,
+    pub stragglers: Vec<StragglerSpec>,
+    pub nic: Vec<NicSpec>,
+    pub kills: Vec<KillSpec>,
+    pub resizes: Vec<ResizeSpec>,
+}
+
+/// A concrete straggler window after expansion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerWindow {
+    pub replica: usize,
+    pub start_ns: f64,
+    pub end_ns: f64,
+    pub factor: f64,
+}
+
+/// A concrete NIC degradation window after expansion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NicWindow {
+    pub start_ns: f64,
+    pub end_ns: f64,
+    pub scale: f64,
+}
+
+/// A concrete kill/restart pair after expansion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Kill {
+    pub replica: usize,
+    pub at_ns: f64,
+    pub restart_ns: f64,
+}
+
+/// A concrete resize after expansion.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Resize {
+    pub at_ns: f64,
+    pub target_dp: usize,
+    /// When the full replica set comes back (`None` = permanent).
+    pub restore_ns: Option<f64>,
+}
+
+/// The expanded, intensity-scaled timeline one simulation consumes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultTimeline {
+    pub stragglers: Vec<StragglerWindow>,
+    pub nic: Vec<NicWindow>,
+    pub kills: Vec<Kill>,
+    pub resizes: Vec<Resize>,
+}
+
+/// One scheduled fault transition for the serving DES (time-sorted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    Kill(usize),
+    Restart(usize),
+    /// Cap (or restore) the routable replica set.
+    SetDp(usize),
+}
+
+/// A fault transition with its firing time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_ns: f64,
+    pub action: FaultAction,
+}
+
+impl FaultTimeline {
+    /// No windows, no kills, no resizes: callers must take the
+    /// fault-free path (byte-identical to a run with no spec at all).
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.nic.is_empty()
+            && self.kills.is_empty()
+            && self.resizes.is_empty()
+    }
+
+    /// Product of every straggler window covering (`replica`, `now`);
+    /// 1.0 when none do. Windows are half-open `[start, end)`.
+    pub fn step_factor(&self, replica: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.stragglers {
+            if w.replica == replica
+                && now >= w.start_ns
+                && now < w.end_ns
+            {
+                f *= w.factor;
+            }
+        }
+        f
+    }
+
+    /// Product of every NIC window covering `now`; 1.0 when none do.
+    pub fn nic_scale(&self, now: f64) -> f64 {
+        let mut s = 1.0;
+        for w in &self.nic {
+            if now >= w.start_ns && now < w.end_ns {
+                s *= w.scale;
+            }
+        }
+        s
+    }
+
+    /// Kill/restart/resize transitions as a time-sorted event list
+    /// for the serving DES. `n_replicas` is the full DP width a
+    /// resize restore returns to. The sort is stable (ties keep the
+    /// kill-before-restart-before-resize construction order), so the
+    /// schedule is deterministic.
+    pub fn events(&self, n_replicas: usize) -> Vec<FaultEvent> {
+        let mut evs = Vec::new();
+        for k in &self.kills {
+            evs.push(FaultEvent {
+                at_ns: k.at_ns,
+                action: FaultAction::Kill(k.replica),
+            });
+            evs.push(FaultEvent {
+                at_ns: k.restart_ns,
+                action: FaultAction::Restart(k.replica),
+            });
+        }
+        for r in &self.resizes {
+            evs.push(FaultEvent {
+                at_ns: r.at_ns,
+                action: FaultAction::SetDp(r.target_dp),
+            });
+            if let Some(restore) = r.restore_ns {
+                evs.push(FaultEvent {
+                    at_ns: restore,
+                    action: FaultAction::SetDp(n_replicas),
+                });
+            }
+        }
+        evs.sort_by(|a, b| a.at_ns.total_cmp(&b.at_ns));
+        evs
+    }
+}
+
+fn time(name: &str, field: &str, v: f64, lo: f64) -> Result<()> {
+    ensure!(
+        v.is_finite() && v >= lo && v <= MAX_TIME_NS,
+        "fault spec {name:?}: {field} must be a finite time in \
+         [{lo}, {MAX_TIME_NS}] ns, got {v}"
+    );
+    Ok(())
+}
+
+impl FaultSpec {
+    /// A named spec with no faults (expands empty at any intensity).
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            name: "none".to_string(),
+            seed: 0,
+            stragglers: Vec::new(),
+            nic: Vec::new(),
+            kills: Vec::new(),
+            resizes: Vec::new(),
+        }
+    }
+
+    /// Whether the spec injects nothing at all — no kills,
+    /// stragglers, NIC windows or resizes at any intensity.
+    pub fn is_none(&self) -> bool {
+        self.kills.is_empty()
+            && self.stragglers.is_empty()
+            && self.nic.is_empty()
+            && self.resizes.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let name = self.name.as_str();
+        ensure!(!name.is_empty(), "fault spec name must be non-empty");
+        for (i, s) in self.stragglers.iter().enumerate() {
+            let f = |field: &str| format!("stragglers[{i}].{field}");
+            time(name, &f("start_ns"), s.start_ns, 0.0)?;
+            time(name, &f("dur_ns"), s.dur_ns, 0.0)?;
+            ensure!(
+                s.factor.is_finite() && s.factor >= 1.0,
+                "fault spec {name:?}: {} must be >= 1.0 (a slowdown \
+                 multiplier), got {}",
+                f("factor"),
+                s.factor
+            );
+            ensure!(
+                s.jitter.is_finite() && s.jitter >= 0.0,
+                "fault spec {name:?}: {} must be >= 0.0, got {}",
+                f("jitter"),
+                s.jitter
+            );
+        }
+        for (i, w) in self.nic.iter().enumerate() {
+            let f = |field: &str| format!("nic[{i}].{field}");
+            time(name, &f("start_ns"), w.start_ns, 0.0)?;
+            time(name, &f("dur_ns"), w.dur_ns, 0.0)?;
+            ensure!(
+                w.scale.is_finite() && w.scale >= 1.0,
+                "fault spec {name:?}: {} must be >= 1.0 (a bandwidth \
+                 slowdown), got {}",
+                f("scale"),
+                w.scale
+            );
+        }
+        for (i, k) in self.kills.iter().enumerate() {
+            let f = |field: &str| format!("kills[{i}].{field}");
+            time(name, &f("at_ns"), k.at_ns, 0.0)?;
+            ensure!(
+                k.downtime_ns.is_finite()
+                    && k.downtime_ns > 0.0
+                    && k.downtime_ns <= MAX_TIME_NS,
+                "fault spec {name:?}: {} must be a positive downtime \
+                 in ns, got {}",
+                f("downtime_ns"),
+                k.downtime_ns
+            );
+            time(
+                name,
+                &f("downtime_jitter_ns"),
+                k.downtime_jitter_ns,
+                0.0,
+            )?;
+        }
+        for (i, r) in self.resizes.iter().enumerate() {
+            let f = |field: &str| format!("resizes[{i}].{field}");
+            time(name, &f("at_ns"), r.at_ns, 0.0)?;
+            time(name, &f("dur_ns"), r.dur_ns, 0.0)?;
+            ensure!(
+                r.target_dp >= 1,
+                "fault spec {name:?}: {} must be >= 1 (resizing to 0 \
+                 replicas deadlocks every arrival), got {}",
+                f("target_dp"),
+                r.target_dp
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the spec for an `n_replicas`-wide cluster at one
+    /// `intensity` in [0, 1].
+    ///
+    /// All seeded randomness is drawn here, from `Rng::new(seed)`, in
+    /// one fixed order — kills first (spec order; `replica: None`
+    /// draws once per replica `0..n`), then stragglers the same way —
+    /// and only then scaled by `intensity`. Drawing before scaling is
+    /// what makes the timelines nest: intensity only stretches
+    /// downtimes and shrinks factors toward 1, it never re-rolls.
+    /// Intensity 0 returns an empty timeline.
+    pub fn expand(
+        &self,
+        n_replicas: usize,
+        intensity: f64,
+    ) -> FaultTimeline {
+        let k = intensity.clamp(0.0, 1.0);
+        let mut rng = Rng::new(self.seed);
+        let mut tl = FaultTimeline::default();
+
+        let targets = |r: Option<usize>| match r {
+            Some(i) => (i, i + 1),
+            None => (0, n_replicas),
+        };
+        for kill in &self.kills {
+            let (lo, hi) = targets(kill.replica);
+            for replica in lo..hi {
+                let drawn = kill.downtime_ns
+                    + kill.downtime_jitter_ns * rng.f64();
+                if replica >= n_replicas || k == 0.0 {
+                    continue;
+                }
+                tl.kills.push(Kill {
+                    replica,
+                    at_ns: kill.at_ns,
+                    restart_ns: kill.at_ns + drawn * k,
+                });
+            }
+        }
+        for s in &self.stragglers {
+            let (lo, hi) = targets(s.replica);
+            for replica in lo..hi {
+                let drawn = s.factor + s.jitter * rng.f64();
+                let factor = 1.0 + (drawn - 1.0) * k;
+                if replica >= n_replicas
+                    || factor <= 1.0
+                    || s.dur_ns <= 0.0
+                {
+                    continue;
+                }
+                tl.stragglers.push(StragglerWindow {
+                    replica,
+                    start_ns: s.start_ns,
+                    end_ns: s.start_ns + s.dur_ns,
+                    factor,
+                });
+            }
+        }
+        for w in &self.nic {
+            let scale = 1.0 + (w.scale - 1.0) * k;
+            if scale <= 1.0 || w.dur_ns <= 0.0 {
+                continue;
+            }
+            tl.nic.push(NicWindow {
+                start_ns: w.start_ns,
+                end_ns: w.start_ns + w.dur_ns,
+                scale,
+            });
+        }
+        if k > 0.0 {
+            for r in &self.resizes {
+                tl.resizes.push(Resize {
+                    at_ns: r.at_ns,
+                    target_dp: r.target_dp,
+                    restore_ns: (r.dur_ns > 0.0)
+                        .then(|| r.at_ns + r.dur_ns * k),
+                });
+            }
+        }
+        tl
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("seed", Json::from(self.seed as f64)),
+        ];
+        let replica = |r: Option<usize>, out: &mut Vec<(&str, Json)>| {
+            if let Some(i) = r {
+                out.push(("replica", Json::from(i)));
+            }
+        };
+        if !self.stragglers.is_empty() {
+            fields.push((
+                "stragglers",
+                Json::Arr(
+                    self.stragglers
+                        .iter()
+                        .map(|s| {
+                            let mut f = Vec::new();
+                            replica(s.replica, &mut f);
+                            f.push(("start_ns", Json::from(s.start_ns)));
+                            f.push(("dur_ns", Json::from(s.dur_ns)));
+                            f.push(("factor", Json::from(s.factor)));
+                            if s.jitter != 0.0 {
+                                f.push(("jitter", Json::from(s.jitter)));
+                            }
+                            obj(f)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.nic.is_empty() {
+            fields.push((
+                "nic",
+                Json::Arr(
+                    self.nic
+                        .iter()
+                        .map(|w| {
+                            obj(vec![
+                                ("start_ns", Json::from(w.start_ns)),
+                                ("dur_ns", Json::from(w.dur_ns)),
+                                ("scale", Json::from(w.scale)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.kills.is_empty() {
+            fields.push((
+                "kills",
+                Json::Arr(
+                    self.kills
+                        .iter()
+                        .map(|kl| {
+                            let mut f = Vec::new();
+                            replica(kl.replica, &mut f);
+                            f.push(("at_ns", Json::from(kl.at_ns)));
+                            f.push((
+                                "downtime_ns",
+                                Json::from(kl.downtime_ns),
+                            ));
+                            if kl.downtime_jitter_ns != 0.0 {
+                                f.push((
+                                    "downtime_jitter_ns",
+                                    Json::from(kl.downtime_jitter_ns),
+                                ));
+                            }
+                            obj(f)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.resizes.is_empty() {
+            fields.push((
+                "resizes",
+                Json::Arr(
+                    self.resizes
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("at_ns", Json::from(r.at_ns)),
+                                ("target_dp", Json::from(r.target_dp)),
+                                ("dur_ns", Json::from(r.dur_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// Parse (and validate) a fault document. Bad times, factors and
+    /// targets are rejected here with pointed errors instead of
+    /// producing a nonsense timeline mid-simulation.
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let ctx = || format!("fault spec {name:?}");
+        let arr = |key: &str| -> Result<Vec<Json>> {
+            match j.opt(key) {
+                Some(v) => Ok(v.as_arr()?.to_vec()),
+                None => Ok(Vec::new()),
+            }
+        };
+        let replica = |e: &Json| -> Result<Option<usize>> {
+            match e.opt("replica") {
+                Some(r) => Ok(Some(r.as_usize()?)),
+                None => Ok(None),
+            }
+        };
+        let opt_f64 = |e: &Json, key: &str| -> Result<f64> {
+            match e.opt(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(0.0),
+            }
+        };
+        let spec = FaultSpec {
+            seed: j.get("seed").with_context(ctx)?.as_i64()? as u64,
+            stragglers: arr("stragglers")?
+                .iter()
+                .map(|e| {
+                    Ok(StragglerSpec {
+                        replica: replica(e)?,
+                        start_ns: e.get("start_ns")?.as_f64()?,
+                        dur_ns: e.get("dur_ns")?.as_f64()?,
+                        factor: e.get("factor")?.as_f64()?,
+                        jitter: opt_f64(e, "jitter")?,
+                    })
+                })
+                .collect::<Result<_>>()
+                .with_context(ctx)?,
+            nic: arr("nic")?
+                .iter()
+                .map(|e| {
+                    Ok(NicSpec {
+                        start_ns: e.get("start_ns")?.as_f64()?,
+                        dur_ns: e.get("dur_ns")?.as_f64()?,
+                        scale: e.get("scale")?.as_f64()?,
+                    })
+                })
+                .collect::<Result<_>>()
+                .with_context(ctx)?,
+            kills: arr("kills")?
+                .iter()
+                .map(|e| {
+                    Ok(KillSpec {
+                        replica: replica(e)?,
+                        at_ns: e.get("at_ns")?.as_f64()?,
+                        downtime_ns: e.get("downtime_ns")?.as_f64()?,
+                        downtime_jitter_ns: opt_f64(
+                            e,
+                            "downtime_jitter_ns",
+                        )?,
+                    })
+                })
+                .collect::<Result<_>>()
+                .with_context(ctx)?,
+            resizes: arr("resizes")?
+                .iter()
+                .map(|e| {
+                    Ok(ResizeSpec {
+                        at_ns: e.get("at_ns")?.as_f64()?,
+                        target_dp: e.get("target_dp")?.as_usize()?,
+                        dur_ns: e.get("dur_ns")?.as_f64()?,
+                    })
+                })
+                .collect::<Result<_>>()
+                .with_context(ctx)?,
+            name,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a fault scenario file from disk.
+    pub fn load(path: &std::path::Path) -> Result<FaultSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading fault file {}", path.display())
+        })?;
+        let j = Json::parse(&text).with_context(|| {
+            format!("parsing fault file {}", path.display())
+        })?;
+        FaultSpec::from_json(&j).with_context(|| {
+            format!("validating fault file {}", path.display())
+        })
+    }
+
+    /// Resolve `--faults <preset|file.json>`: a preset name first,
+    /// else a path.
+    pub fn resolve(arg: &str) -> Result<FaultSpec> {
+        if let Some(spec) = preset(arg) {
+            return Ok(spec);
+        }
+        if arg.ends_with(".json") || std::path::Path::new(arg).exists()
+        {
+            return FaultSpec::load(std::path::Path::new(arg));
+        }
+        bail!(
+            "unknown fault preset {arg:?}; one of ({}) or a fault \
+             .json file",
+            PRESET_NAMES.join(" | ")
+        )
+    }
+}
+
+/// How a scenario names its faults: a preset, or an inline spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultsRef {
+    Preset(String),
+    Inline(FaultSpec),
+}
+
+impl FaultsRef {
+    pub fn to_json(&self) -> Json {
+        match self {
+            FaultsRef::Preset(name) => Json::from(name.as_str()),
+            FaultsRef::Inline(spec) => spec.to_json(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultsRef> {
+        match j {
+            Json::Str(name) => Ok(FaultsRef::Preset(name.clone())),
+            Json::Obj(_) => {
+                Ok(FaultsRef::Inline(FaultSpec::from_json(j)?))
+            }
+            _ => bail!(
+                "faults must be a preset name or an inline fault \
+                 object"
+            ),
+        }
+    }
+
+    /// The concrete spec this reference names.
+    pub fn resolved(&self) -> Result<FaultSpec> {
+        match self {
+            FaultsRef::Preset(name) => FaultSpec::resolve(name),
+            FaultsRef::Inline(spec) => {
+                spec.validate()?;
+                Ok(spec.clone())
+            }
+        }
+    }
+}
+
+/// The preset names `flux list` prints, in report order.
+pub const PRESET_NAMES: [&str; 3] =
+    ["replica-churn", "straggler-storm", "nic-brownout"];
+
+/// Built-in fault presets. `replica-churn` is the CI byte-compared
+/// scenario: a correlated outage kills every replica 30 ms in, each
+/// rejoining after a 120 ms (intensity-scaled) downtime — the drain /
+/// reject-routing / rejoin path end to end. `straggler-storm` inflates
+/// every replica's step times (seeded per-replica jitter) with a NIC
+/// brownout on top; `nic-brownout` degrades only the wire.
+pub fn preset(name: &str) -> Option<FaultSpec> {
+    let spec = match name {
+        "replica-churn" => FaultSpec {
+            name: name.to_string(),
+            seed: 23,
+            stragglers: Vec::new(),
+            nic: Vec::new(),
+            kills: vec![KillSpec {
+                replica: None,
+                at_ns: 30.0e6,
+                downtime_ns: 120.0e6,
+                downtime_jitter_ns: 0.0,
+            }],
+            resizes: Vec::new(),
+        },
+        "straggler-storm" => FaultSpec {
+            name: name.to_string(),
+            seed: 29,
+            stragglers: vec![StragglerSpec {
+                replica: None,
+                start_ns: 0.0,
+                dur_ns: 10.0e9,
+                factor: 1.6,
+                jitter: 0.25,
+            }],
+            nic: vec![NicSpec {
+                start_ns: 0.0,
+                dur_ns: 10.0e9,
+                scale: 1.5,
+            }],
+            kills: Vec::new(),
+            resizes: Vec::new(),
+        },
+        "nic-brownout" => FaultSpec {
+            name: name.to_string(),
+            seed: 31,
+            stragglers: Vec::new(),
+            nic: vec![NicSpec {
+                start_ns: 0.0,
+                dur_ns: 10.0e9,
+                scale: 3.0,
+            }],
+            kills: Vec::new(),
+            resizes: Vec::new(),
+        },
+        _ => return None,
+    };
+    debug_assert!(spec.validate().is_ok());
+    Some(spec)
+}
+
+/// All presets in report order.
+pub fn all_presets() -> Vec<FaultSpec> {
+    PRESET_NAMES.iter().copied().filter_map(preset).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn storm() -> FaultSpec {
+        preset("straggler-storm").unwrap()
+    }
+
+    #[test]
+    fn presets_resolve_and_round_trip_byte_stably() {
+        for spec in all_presets() {
+            spec.validate().unwrap();
+            let text = spec.to_json().to_string();
+            let parsed =
+                FaultSpec::from_json(&Json::parse(&text).unwrap())
+                    .unwrap();
+            assert_eq!(parsed, spec);
+            assert_eq!(parsed.to_json().to_string(), text);
+            assert_eq!(
+                FaultSpec::resolve(&spec.name).unwrap(),
+                spec
+            );
+        }
+        let err =
+            FaultSpec::resolve("mystery-outage").unwrap_err().to_string();
+        assert!(err.contains("replica-churn"), "{err}");
+    }
+
+    #[test]
+    fn zero_intensity_expands_empty() {
+        for spec in all_presets() {
+            let tl = spec.expand(4, 0.0);
+            assert!(tl.is_empty(), "{}: {tl:?}", spec.name);
+            assert_eq!(tl.events(4).len(), 0);
+        }
+        assert!(FaultSpec::none().expand(4, 1.0).is_empty());
+    }
+
+    #[test]
+    fn timelines_nest_across_intensities() {
+        // Same seed, same draws: half intensity halves the downtime
+        // and pulls factors toward 1, but never moves a kill instant
+        // or re-rolls jitter.
+        let spec = preset("replica-churn").unwrap();
+        let half = spec.expand(4, 0.5);
+        let full = spec.expand(4, 1.0);
+        assert_eq!(half.kills.len(), 4);
+        assert_eq!(full.kills.len(), 4);
+        for (h, f) in half.kills.iter().zip(&full.kills) {
+            assert_eq!(h.replica, f.replica);
+            assert_eq!(h.at_ns, f.at_ns);
+            assert_eq!(h.at_ns, 30.0e6);
+            // Zero jitter: the windows are exact.
+            assert_eq!(h.restart_ns, 30.0e6 + 120.0e6 * 0.5);
+            assert_eq!(f.restart_ns, 30.0e6 + 120.0e6);
+        }
+        let sh = storm().expand(4, 0.5);
+        let sf = storm().expand(4, 1.0);
+        for (h, f) in sh.stragglers.iter().zip(&sf.stragglers) {
+            assert_eq!(h.replica, f.replica);
+            assert_eq!((h.start_ns, h.end_ns), (f.start_ns, f.end_ns));
+            assert!(h.factor > 1.0 && h.factor < f.factor);
+            // h = 1 + (d-1)/2  <=>  d = 2h - 1 = f's draw.
+            assert!((2.0 * (h.factor - 1.0)
+                - (f.factor - 1.0))
+                .abs()
+                < 1e-12);
+        }
+        assert_eq!(sh.nic.len(), 1);
+        assert_eq!(sh.nic[0].scale, 1.25);
+        assert_eq!(sf.nic[0].scale, 1.5);
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_replica_scoped() {
+        let spec = storm();
+        assert_eq!(spec.expand(4, 1.0), spec.expand(4, 1.0));
+        // Per-replica jitter differs across replicas but each
+        // replica's draw is fixed by position.
+        let tl = spec.expand(4, 1.0);
+        assert_eq!(tl.stragglers.len(), 4);
+        assert!(tl.stragglers[0].factor != tl.stragglers[1].factor);
+        // Out-of-range explicit targets are dropped.
+        let mut narrow = spec.clone();
+        narrow.stragglers[0].replica = Some(7);
+        assert!(narrow.expand(2, 1.0).stragglers.is_empty());
+    }
+
+    #[test]
+    fn step_factor_and_nic_scale_window_semantics() {
+        let tl = FaultTimeline {
+            stragglers: vec![
+                StragglerWindow {
+                    replica: 1,
+                    start_ns: 10.0,
+                    end_ns: 20.0,
+                    factor: 2.0,
+                },
+                StragglerWindow {
+                    replica: 1,
+                    start_ns: 15.0,
+                    end_ns: 25.0,
+                    factor: 3.0,
+                },
+            ],
+            nic: vec![NicWindow {
+                start_ns: 5.0,
+                end_ns: 6.0,
+                scale: 4.0,
+            }],
+            kills: Vec::new(),
+            resizes: Vec::new(),
+        };
+        assert_eq!(tl.step_factor(0, 12.0), 1.0);
+        assert_eq!(tl.step_factor(1, 12.0), 2.0);
+        assert_eq!(tl.step_factor(1, 17.0), 6.0);
+        assert_eq!(tl.step_factor(1, 20.0), 3.0);
+        assert_eq!(tl.step_factor(1, 25.0), 1.0);
+        assert_eq!(tl.nic_scale(5.5), 4.0);
+        assert_eq!(tl.nic_scale(6.0), 1.0);
+    }
+
+    #[test]
+    fn event_list_is_time_sorted_with_restarts_and_restores() {
+        let spec = FaultSpec {
+            name: "mixed".into(),
+            seed: 1,
+            stragglers: Vec::new(),
+            nic: Vec::new(),
+            kills: vec![KillSpec {
+                replica: Some(1),
+                at_ns: 50.0,
+                downtime_ns: 100.0,
+                downtime_jitter_ns: 0.0,
+            }],
+            resizes: vec![ResizeSpec {
+                at_ns: 10.0,
+                target_dp: 2,
+                dur_ns: 30.0,
+            }],
+        };
+        spec.validate().unwrap();
+        let evs = spec.expand(4, 1.0).events(4);
+        assert_eq!(
+            evs,
+            vec![
+                FaultEvent {
+                    at_ns: 10.0,
+                    action: FaultAction::SetDp(2)
+                },
+                FaultEvent {
+                    at_ns: 40.0,
+                    action: FaultAction::SetDp(4)
+                },
+                FaultEvent {
+                    at_ns: 50.0,
+                    action: FaultAction::Kill(1)
+                },
+                FaultEvent {
+                    at_ns: 150.0,
+                    action: FaultAction::Restart(1)
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs_with_pointed_errors() {
+        let cases: Vec<(&str, FaultSpec)> = vec![
+            ("factor", {
+                let mut s = storm();
+                s.stragglers[0].factor = 0.5;
+                s
+            }),
+            ("downtime_ns", {
+                let mut s = preset("replica-churn").unwrap();
+                s.kills[0].downtime_ns = 0.0;
+                s
+            }),
+            ("scale", {
+                let mut s = preset("nic-brownout").unwrap();
+                s.nic[0].scale = f64::NAN;
+                s
+            }),
+            ("target_dp", FaultSpec {
+                resizes: vec![ResizeSpec {
+                    at_ns: 0.0,
+                    target_dp: 0,
+                    dur_ns: 0.0,
+                }],
+                ..FaultSpec::none()
+            }),
+            ("start_ns", {
+                let mut s = storm();
+                s.stragglers[0].start_ns = -1.0;
+                s
+            }),
+        ];
+        for (field, spec) in cases {
+            let msg =
+                format!("{:#}", spec.validate().unwrap_err());
+            assert!(
+                msg.contains(field) && msg.contains(&spec.name),
+                "must name the spec and {field}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn faults_ref_round_trips_both_shapes() {
+        let p = FaultsRef::Preset("replica-churn".into());
+        let parsed = FaultsRef::from_json(&p.to_json()).unwrap();
+        assert_eq!(parsed, p);
+        assert_eq!(
+            parsed.resolved().unwrap().name,
+            "replica-churn"
+        );
+        let inline = FaultsRef::Inline(storm());
+        let text = inline.to_json().to_string();
+        let back =
+            FaultsRef::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, inline);
+        assert_eq!(back.to_json().to_string(), text);
+        assert!(FaultsRef::from_json(&Json::from(3.0)).is_err());
+    }
+}

@@ -361,6 +361,56 @@ pub fn fig18_workloads() -> Table {
      rows)
 }
 
+/// Churn figure: the `replica-churn` fault preset on the H800 DP4
+/// serving cluster — goodput per fault intensity for both methods.
+/// The full degradation matrix (every topology, every preset, train
+/// mode) is `flux simulate --scale|--train --faults <preset>`; this
+/// is the figure-sized cut showing the correlated-outage cliff and
+/// the post-restart recovery gap between flux and the decoupled
+/// baseline.
+pub fn fig19_churn() -> Table {
+    use crate::cost::arch::SCALE_H800_TP8_DP4;
+    use crate::report::INTENSITIES;
+    use crate::serving::scale::{
+        run_scale, run_scale_faulted, ScaleScenario,
+    };
+    let mut rows = Vec::new();
+    if let Some(spec) = crate::faults::preset("replica-churn") {
+        let topo = &SCALE_H800_TP8_DP4;
+        let sc = ScaleScenario::quick(topo);
+        for m in Method::SERVE_SET {
+            let mut row =
+                vec![topo.name.to_string(), m.serve_label().to_string()];
+            let mut last = None;
+            for k in INTENSITIES {
+                let tl = spec.expand(topo.dp, k);
+                let rep = if tl.is_empty() {
+                    run_scale(&sc, m)
+                } else {
+                    run_scale_faulted(&sc, m, &tl)
+                };
+                let Ok(rep) = rep else { continue };
+                row.push(
+                    rep.slo
+                        .as_ref()
+                        .map(|s| pct(s.goodput()))
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+                last = Some(rep);
+            }
+            if let Some(rep) = last {
+                row.push(rep.failed.to_string());
+                row.push(format!("{:.1}", rep.tokens_per_sec));
+                rows.push(row);
+            }
+        }
+    }
+    ("Fig 19: replica churn (H800 DP4) — goodput per fault intensity",
+     vec!["topology", "method", "k=0", "k=0.5", "k=1", "failed@1",
+          "tok/s@1"],
+     rows)
+}
+
 /// Fig. 17: decoding, batch 64 / 512.
 pub fn fig17() -> Table {
     let mut rows = Vec::new();
@@ -449,6 +499,7 @@ pub fn all() -> Vec<Table> {
         fig16_des(),
         fig17(),
         fig18_workloads(),
+        fig19_churn(),
     ]
 }
 
@@ -463,6 +514,15 @@ mod tests {
         for t in [fig01(), fig04(), fig08(), fig09(), fig10(), fig15()] {
             assert!(!t.2.is_empty(), "{}", t.0);
             assert!(t.2.iter().all(|r| r.len() == t.1.len()), "{}", t.0);
+        }
+    }
+
+    #[test]
+    fn churn_figure_has_both_methods_and_full_curves() {
+        let t = fig19_churn();
+        assert_eq!(t.2.len(), 2, "one row per serve method");
+        for row in &t.2 {
+            assert_eq!(row.len(), t.1.len(), "row {row:?}");
         }
     }
 

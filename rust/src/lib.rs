@@ -19,6 +19,7 @@ pub mod cost {
 
 pub mod collectives;
 pub mod exp;
+pub mod faults;
 pub mod goldens;
 pub mod overlap;
 pub mod figures;

@@ -20,6 +20,7 @@
 //! Examples:
 //!   flux simulate --cluster "a100 nvlink" --op rs --m 4096
 //!   flux simulate --scale --workload bursty-decode --quick
+//!   flux simulate --scale --faults replica-churn --quick --json
 //!   flux simulate --scale --topo "1-node tp8" --trace trace.json
 //!   flux sweep-workloads --quick --json --threads 4
 //!   flux scenario artifacts/scenario_h800_bursty.json --json
@@ -61,7 +62,11 @@ COMMANDS:
                    restricts to one topology, [--quick] trims the
                    workload, [--workload <preset|file.json>] swaps
                    the request source (arrival process, length mix,
-                   routing, SLOs), [--trace <path>] (with --topo)
+                   routing, SLOs), [--faults <preset|file.json>]
+                   injects seeded failures (replica kills/restarts,
+                   stragglers, elastic resizes) and swaps the report
+                   for flux-churn-v1 degradation curves,
+                   [--trace <path>] (with --topo)
                    dumps the DES event stream as chrome://tracing
                    JSON, [--threads <n>] caps the parallel cell
                    workers (output is byte-identical at any count),
@@ -72,7 +77,9 @@ COMMANDS:
                    NIC links, DP all-reduce streamed behind backward;
                    megatron vs TE vs flux per topology); same
                    [--topo] [--quick] [--json] [--out] [--trace]
-                   [--threads] flags, report schema flux-train-v1
+                   [--threads] flags, report schema flux-train-v1;
+                   [--faults] applies straggler/NIC specs per
+                   pipeline stage (kills have no training analogue)
     tune         auto-tune one problem, print the winning config
                    (same flags as simulate)
     train        model-level training-step comparison
@@ -95,7 +102,7 @@ COMMANDS:
                    artifacts/scenario_*.json for checked-in examples)
     list         print the registries scenarios draw from: serving +
                    training topologies, workload presets, overlap
-                   methods, report schemas
+                   methods, fault presets, report schemas
     gen-goldens  emit the cross-language golden file from the Rust tile
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
@@ -341,11 +348,12 @@ fn cmd_simulate_scale(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.keys().find(|k| {
         !matches!(
             k.as_str(),
-            "out" | "topo" | "workload" | "trace" | "threads"
+            "out" | "topo" | "workload" | "faults" | "trace" | "threads"
         )
     }) {
         bail!("--{k} is not supported with --scale (only --topo, \
-               --workload, --trace, --threads, --quick, --json, --out)");
+               --workload, --faults, --trace, --threads, --quick, \
+               --json, --out)");
     }
     let quick = args.has("quick");
     let workload = match args.get("workload") {
@@ -354,7 +362,9 @@ fn cmd_simulate_scale(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let scenario = Scenario::serve_cli(args.get("topo"), workload, quick)?;
+    let mut scenario =
+        Scenario::serve_cli(args.get("topo"), workload, quick)?;
+    scenario.faults = faults_flag(args)?;
     flux::exp::execute(&scenario, &exec_opts(args)?)
 }
 
@@ -378,14 +388,29 @@ fn cmd_sweep_workloads(args: &Args) -> Result<()> {
 /// sweep as an anonymous [`Scenario`].
 fn cmd_simulate_train(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.keys().find(|k| {
-        !matches!(k.as_str(), "out" | "topo" | "trace" | "threads")
+        !matches!(
+            k.as_str(),
+            "out" | "topo" | "faults" | "trace" | "threads"
+        )
     }) {
         bail!("--{k} is not supported with --train (only --topo, \
-               --trace, --threads, --quick, --json, --out)");
+               --faults, --trace, --threads, --quick, --json, --out)");
     }
-    let scenario =
+    let mut scenario =
         Scenario::train_cli(args.get("topo"), args.has("quick"))?;
+    scenario.faults = faults_flag(args)?;
     flux::exp::execute(&scenario, &exec_opts(args)?)
+}
+
+/// Resolve `--faults <preset|file.json>` up front, so typos fail with
+/// the fault layer's pointed error before any cell runs.
+fn faults_flag(args: &Args) -> Result<Option<flux::faults::FaultsRef>> {
+    Ok(match args.get("faults") {
+        Some(arg) => Some(flux::faults::FaultsRef::Inline(
+            flux::faults::FaultSpec::resolve(arg)?,
+        )),
+        None => None,
+    })
 }
 
 /// `flux scenario <file.json>`: run a checked-in declarative
@@ -453,6 +478,22 @@ fn cmd_list() -> Result<()> {
     println!("\noverlap methods (scenario \"methods\" keys):");
     for m in Method::ALL {
         println!("  {:<10} {:<12} {}", m.key(), m.name(), m.summary());
+    }
+    println!(
+        "\nfault presets (--faults <name|file.json>, scenario \
+         \"faults\" key):"
+    );
+    for spec in flux::faults::all_presets() {
+        println!(
+            "  {:<18} seed {} | {} kill(s), {} straggler(s), {} nic \
+             window(s), {} resize(s)",
+            spec.name,
+            spec.seed,
+            spec.kills.len(),
+            spec.stragglers.len(),
+            spec.nic.len(),
+            spec.resizes.len()
+        );
     }
     println!("\nreport schemas:");
     for s in flux::report::SCHEMAS {

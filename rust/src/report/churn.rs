@@ -1,0 +1,508 @@
+//! The failure-and-churn degradation document (`flux simulate
+//! --scale|--train --faults <preset|file.json> --json`, schema
+//! `flux-churn-v1`): one expanded fault timeline per intensity rung
+//! of [`INTENSITIES`], every selected topology under the scenario's
+//! method set, cells executed by the [`crate::exp::Runner`] at
+//! (topology, method x intensity) grain and merged in fixed order —
+//! byte-identical at any worker count.
+//!
+//! Intensity 0 expands to an **empty** timeline and dispatches to the
+//! untouched fault-free simulation, so the first point of every curve
+//! reproduces the flux-scale-v2 / flux-train-v1 numbers bit-for-bit
+//! — the degradation curves are anchored to the exact baselines the
+//! trajectory already pins.
+
+use anyhow::{ensure, Result};
+
+use crate::exp::{Mode, Runner, Scenario};
+use crate::faults::FaultSpec;
+use crate::overlap::Method;
+use crate::serving::scale::{
+    run_scale, run_scale_faulted, ScaleReport, ScaleScenario,
+};
+use crate::training::{run_train_with, TrainRun, TrainScenario};
+use crate::util::json::{obj, Json};
+
+use super::CHURN_SCHEMA;
+
+/// The degradation-curve rungs every churn document sweeps: the
+/// fault-free floor, the spec at half strength, the spec as written.
+/// Expansion draws all randomness *before* scaling by the rung, so
+/// the three timelines nest — higher intensity only stretches
+/// downtimes and inflates factors, it never re-rolls.
+pub const INTENSITIES: [f64; 3] = [0.0, 0.5, 1.0];
+
+/// The (method, intensity) job grid one topology cell fans out into —
+/// method-major, so a cell's runs chunk per method in
+/// [`INTENSITIES`]-order.
+fn job_grid(methods: &[Method]) -> Vec<(Method, f64)> {
+    let mut jobs = Vec::with_capacity(methods.len() * INTENSITIES.len());
+    for &m in methods {
+        for &k in &INTENSITIES {
+            jobs.push((m, k));
+        }
+    }
+    jobs
+}
+
+/// One point of a serving degradation curve. `goodput`/`abandoned`
+/// appear whenever the workload defines SLOs (every preset does);
+/// `failed` counts requests drained by a kill/resize plus arrivals
+/// that found no routable replica.
+fn serve_point(intensity: f64, r: &ScaleReport) -> Json {
+    let mut fields = vec![
+        ("intensity", Json::from(intensity)),
+        ("completed", Json::from(r.completed)),
+        ("failed", Json::from(r.failed)),
+        ("tokens", Json::from(r.tokens)),
+        ("makespan_ns", Json::from(r.makespan_ns)),
+        ("tokens_per_sec", Json::from(r.tokens_per_sec)),
+        ("ttft_p99_ns", Json::from(r.ttft.p99)),
+    ];
+    if let Some(slo) = &r.slo {
+        fields.push(("goodput", Json::from(slo.goodput())));
+        fields.push(("abandoned", Json::from(slo.abandoned)));
+    }
+    obj(fields)
+}
+
+/// Per-topology serving entries, cells executed by `runner` at
+/// (topology, method x intensity) grain.
+fn serve_entries(
+    sc: &Scenario,
+    spec: &FaultSpec,
+    runner: &Runner,
+) -> Result<Vec<Json>> {
+    let methods = sc.method_set();
+    let cells = sc.serve_cells()?;
+    let jobs = job_grid(&methods);
+    let runs: Vec<Vec<ScaleReport>> =
+        runner.run_product(&cells, &jobs, |cell: &ScaleScenario, &(m, k)| {
+            let tl = spec.expand(cell.topo.dp, k);
+            if tl.is_empty() {
+                run_scale(cell, m)
+            } else {
+                run_scale_faulted(cell, m, &tl)
+            }
+        })?;
+    let mut out = Vec::new();
+    for (cell, cell_runs) in cells.iter().zip(&runs) {
+        let mut fields = vec![
+            ("topology", Json::from(cell.topo.name)),
+            ("cluster", Json::from(cell.topo.cluster.name)),
+            ("nodes", Json::from(cell.topo.nodes)),
+            ("tp", Json::from(cell.topo.tp)),
+            ("dp", Json::from(cell.topo.dp)),
+            ("requests", Json::from(cell.n_requests())),
+            ("seed", Json::from(cell.seed as usize)),
+            ("workload", cell.workload.to_json()),
+        ];
+        for (mi, m) in methods.iter().enumerate() {
+            let chunk = &cell_runs
+                [mi * INTENSITIES.len()..(mi + 1) * INTENSITIES.len()];
+            let points: Vec<Json> = INTENSITIES
+                .iter()
+                .zip(chunk)
+                .map(|(&k, r)| serve_point(k, r))
+                .collect();
+            let mut mfields = vec![("curve", Json::Arr(points))];
+            let first = chunk[0].slo.as_ref();
+            let last = chunk[chunk.len() - 1].slo.as_ref();
+            if let (Some(a), Some(b)) = (first, last) {
+                // The headline number: goodput lost between the
+                // fault-free floor and the spec as written.
+                mfields.push((
+                    "goodput_drop",
+                    Json::from(a.goodput() - b.goodput()),
+                ));
+            }
+            fields.push((m.serve_label(), obj(mfields)));
+        }
+        out.push(obj(fields));
+    }
+    Ok(out)
+}
+
+/// One point of a training degradation curve; `slowdown` is the step
+/// time relative to the same method's fault-free floor (point 0 is
+/// exactly 1.0 by construction).
+fn train_point(intensity: f64, r: &TrainRun, base_step: f64) -> Json {
+    obj(vec![
+        ("intensity", Json::from(intensity)),
+        ("step_ns", Json::from(r.step_ns)),
+        ("pipe_ns", Json::from(r.pipe_ns)),
+        ("dp_exposed_ns", Json::from(r.dp_exposed_ns)),
+        ("slowdown", Json::from(r.step_ns / base_step)),
+    ])
+}
+
+/// Per-topology training entries. Straggler windows index pipeline
+/// stages (the training analogue of a serving replica) and NIC
+/// windows stretch PP hops and DP buckets; specs with kills or
+/// resizes are rejected by [`crate::training::run_train_with`].
+fn train_entries(
+    sc: &Scenario,
+    spec: &FaultSpec,
+    runner: &Runner,
+) -> Result<Vec<Json>> {
+    let methods = sc.method_set();
+    let cells = sc.train_cells()?;
+    let jobs = job_grid(&methods);
+    let runs: Vec<Vec<TrainRun>> =
+        runner.run_product(&cells, &jobs, |cell: &TrainScenario, &(m, k)| {
+            let tl = spec.expand(cell.topo.pp, k);
+            if tl.is_empty() {
+                run_train_with(cell, m, None, None)
+            } else {
+                run_train_with(cell, m, Some(&tl), None)
+            }
+        })?;
+    let mut out = Vec::new();
+    for (cell, cell_runs) in cells.iter().zip(&runs) {
+        let mut fields = vec![
+            ("topology", Json::from(cell.topo.name)),
+            ("cluster", Json::from(cell.topo.cluster.name)),
+            ("dp", Json::from(cell.topo.dp)),
+            ("pp", Json::from(cell.topo.pp)),
+            ("tp", Json::from(cell.topo.tp)),
+            ("microbatches", Json::from(cell.microbatches)),
+            ("seed", Json::from(cell.seed as usize)),
+        ];
+        for (mi, m) in methods.iter().enumerate() {
+            let chunk = &cell_runs
+                [mi * INTENSITIES.len()..(mi + 1) * INTENSITIES.len()];
+            let base_step = chunk[0].step_ns;
+            let points: Vec<Json> = INTENSITIES
+                .iter()
+                .zip(chunk)
+                .map(|(&k, r)| train_point(k, r, base_step))
+                .collect();
+            fields.push((
+                m.train_label(),
+                obj(vec![
+                    ("curve", Json::Arr(points)),
+                    (
+                        "slowdown",
+                        Json::from(
+                            chunk[chunk.len() - 1].step_ns / base_step,
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        out.push(obj(fields));
+    }
+    Ok(out)
+}
+
+/// The churn document for one scenario and one fault spec: goodput /
+/// step-time degradation curves per method x topology x intensity.
+/// Serve scenarios expand the spec per replica (`dp`), train
+/// scenarios per pipeline stage (`pp`).
+pub fn churn_doc_scenario(
+    sc: &Scenario,
+    spec: &FaultSpec,
+    runner: &Runner,
+) -> Result<Json> {
+    spec.validate()?;
+    ensure!(
+        !spec.is_none(),
+        "fault spec {:?} injects nothing — run the plain report \
+         (drop --faults) instead of an all-zero degradation curve",
+        spec.name
+    );
+    let topologies = match sc.mode {
+        Mode::Serve => serve_entries(sc, spec, runner)?,
+        Mode::Train => train_entries(sc, spec, runner)?,
+    };
+    let mut top = vec![
+        ("schema", Json::from(CHURN_SCHEMA)),
+        ("quick", Json::from(sc.quick)),
+        ("mode", Json::from(sc.mode.name())),
+        ("model", Json::from(crate::model::configs::GPT3_175B.name)),
+        ("faults", spec.to_json()),
+        (
+            "intensities",
+            Json::Arr(INTENSITIES.iter().map(|&k| Json::from(k)).collect()),
+        ),
+        ("topologies", Json::Arr(topologies)),
+    ];
+    if let Some(names) = sc.topo_filter_names()? {
+        // Same contract as every other doc: a filtered report must be
+        // distinguishable from a full sweep when diffing trajectories.
+        top.push(("topo_filter", super::topo_filter_json(&names)));
+    }
+    if let Some(name) = sc.workload_name() {
+        top.push(("workload_filter", Json::from(name)));
+    }
+    if !sc.name.is_empty() {
+        top.push(("scenario", Json::from(sc.name.as_str())));
+    }
+    Ok(obj(top))
+}
+
+/// Human-readable rendering of the churn document: one row per
+/// topology x method, the curve left to right.
+pub fn print_churn(doc: &Json) -> Result<()> {
+    let mode = doc.get("mode")?.as_str()?;
+    match mode {
+        "serve" => print_serve_churn(doc),
+        _ => print_train_churn(doc),
+    }
+}
+
+fn print_serve_churn(doc: &Json) -> Result<()> {
+    // Goodput when the workload defines SLOs, "-" otherwise.
+    fn good(p: &Json) -> Result<String> {
+        Ok(match p.opt("goodput") {
+            Some(g) => format!("{:.1}%", g.as_f64()? * 100.0),
+            None => "-".to_string(),
+        })
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        for key in ["decoupled", "flux"] {
+            let Some(block) = e.opt(key) else { continue };
+            let curve = block.get("curve")?.as_arr()?;
+            let last = &curve[curve.len() - 1];
+            rows.push(vec![
+                e.get("topology")?.as_str()?.to_string(),
+                key.to_string(),
+                good(&curve[0])?,
+                good(&curve[1])?,
+                good(last)?,
+                last.get("failed")?.as_usize()?.to_string(),
+                format!(
+                    "{:.1}",
+                    last.get("tokens_per_sec")?.as_f64()?
+                ),
+            ]);
+        }
+    }
+    crate::util::bench::table(
+        "serving under churn (goodput per fault intensity)",
+        &[
+            "topology",
+            "method",
+            "k=0",
+            "k=0.5",
+            "k=1",
+            "failed@1",
+            "tok/s@1",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+fn print_train_churn(doc: &Json) -> Result<()> {
+    fn ms(p: &Json) -> Result<String> {
+        Ok(format!("{:.1}", p.get("step_ns")?.as_f64()? / 1e6))
+    }
+    let mut rows = Vec::new();
+    for e in doc.get("topologies")?.as_arr()? {
+        for key in ["megatron", "te", "flux"] {
+            let Some(block) = e.opt(key) else { continue };
+            let curve = block.get("curve")?.as_arr()?;
+            let last = &curve[curve.len() - 1];
+            rows.push(vec![
+                e.get("topology")?.as_str()?.to_string(),
+                key.to_string(),
+                ms(&curve[0])?,
+                ms(&curve[1])?,
+                ms(last)?,
+                format!(
+                    "{:.1}",
+                    last.get("dp_exposed_ns")?.as_f64()? / 1e6
+                ),
+                format!(
+                    "{:.2}x",
+                    block.get("slowdown")?.as_f64()?
+                ),
+            ]);
+        }
+    }
+    crate::util::bench::table(
+        "training under churn (step ms per fault intensity)",
+        &[
+            "topology",
+            "method",
+            "k=0 ms",
+            "k=0.5 ms",
+            "k=1 ms",
+            "dp tail@1 ms",
+            "slowdown",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::arch::ALL_SCALE_TOPOLOGIES;
+    use crate::faults;
+
+    fn serve_doc(threads: usize) -> Json {
+        let sc = Scenario::serve(None, None, true);
+        let spec = faults::preset("replica-churn").unwrap();
+        churn_doc_scenario(&sc, &spec, &Runner::with_threads(threads))
+            .unwrap()
+    }
+
+    #[test]
+    fn churn_doc_is_byte_stable_across_thread_counts() {
+        let a = serve_doc(1).to_string();
+        let b = serve_doc(4).to_string();
+        assert_eq!(a, b, "churn doc must be thread-invariant");
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            CHURN_SCHEMA
+        );
+        assert_eq!(doc.get("mode").unwrap().as_str().unwrap(), "serve");
+        let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(topos.len(), ALL_SCALE_TOPOLOGIES.len());
+        for t in topos {
+            for key in ["decoupled", "flux"] {
+                let curve = t
+                    .get(key)
+                    .unwrap()
+                    .get("curve")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap();
+                assert_eq!(curve.len(), INTENSITIES.len());
+                for (p, &k) in curve.iter().zip(&INTENSITIES) {
+                    assert_eq!(
+                        p.get("intensity").unwrap().as_f64().unwrap(),
+                        k
+                    );
+                }
+                // Goodput never improves as the spec scales up.
+                let g = |i: usize| {
+                    curve[i].get("goodput").unwrap().as_f64().unwrap()
+                };
+                assert!(g(0) >= g(2), "{key}: {} < {}", g(0), g(2));
+                // No faults at k=0: nothing fails, nothing abandons
+                // beyond what the SLO already abandons fault-free.
+                assert_eq!(
+                    curve[0].get("failed").unwrap().as_usize().unwrap(),
+                    0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_zero_reproduces_the_fault_free_scale_doc() {
+        let churn = serve_doc(2);
+        let scale = crate::report::scale_doc(true).unwrap();
+        let ct = churn.get("topologies").unwrap().as_arr().unwrap();
+        let st = scale.get("topologies").unwrap().as_arr().unwrap();
+        assert_eq!(ct.len(), st.len());
+        for (c, s) in ct.iter().zip(st) {
+            for key in ["decoupled", "flux"] {
+                let p0 = &c
+                    .get(key)
+                    .unwrap()
+                    .get("curve")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()[0];
+                let sm = s.get(key).unwrap();
+                for (ck, sk) in [
+                    ("makespan_ns", "makespan_ns"),
+                    ("tokens_per_sec", "tokens_per_sec"),
+                ] {
+                    assert_eq!(
+                        p0.get(ck).unwrap().as_f64().unwrap(),
+                        sm.get(sk).unwrap().as_f64().unwrap(),
+                        "{key}.{ck} must be bit-identical"
+                    );
+                }
+                assert_eq!(
+                    p0.get("ttft_p99_ns").unwrap().as_f64().unwrap(),
+                    sm.get("ttft_ns")
+                        .unwrap()
+                        .get("p99_ns")
+                        .unwrap()
+                        .as_f64()
+                        .unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_churn_doc_slows_every_method() {
+        use crate::cost::arch::TRAIN_NVLINK_128;
+        let sc = Scenario::train(Some(&TRAIN_NVLINK_128), true);
+        let spec = faults::preset("straggler-storm").unwrap();
+        let a = churn_doc_scenario(&sc, &spec, &Runner::with_threads(1))
+            .unwrap();
+        let b = churn_doc_scenario(&sc, &spec, &Runner::with_threads(3))
+            .unwrap();
+        assert_eq!(a.to_string(), b.to_string());
+        for t in a.get("topologies").unwrap().as_arr().unwrap() {
+            for key in ["megatron", "te", "flux"] {
+                let block = t.get(key).unwrap();
+                let curve =
+                    block.get("curve").unwrap().as_arr().unwrap();
+                let s = |i: usize| {
+                    curve[i].get("slowdown").unwrap().as_f64().unwrap()
+                };
+                assert_eq!(s(0), 1.0, "{key}: point 0 is the floor");
+                assert!(
+                    s(2) > s(1) && s(1) > 1.0,
+                    "{key}: {} / {}",
+                    s(1),
+                    s(2)
+                );
+                assert_eq!(
+                    block.get("slowdown").unwrap().as_f64().unwrap(),
+                    s(2)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kills_are_rejected_in_train_mode() {
+        let sc = Scenario::train(None, true);
+        let spec = faults::preset("replica-churn").unwrap();
+        let err =
+            churn_doc_scenario(&sc, &spec, &Runner::with_threads(1))
+                .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("kill"),
+            "pointed error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn empty_specs_are_rejected() {
+        let sc = Scenario::serve(None, None, true);
+        let err = churn_doc_scenario(
+            &sc,
+            &crate::faults::FaultSpec::none(),
+            &Runner::with_threads(1),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("injects nothing"));
+    }
+
+    #[test]
+    fn print_churn_renders_both_modes() {
+        print_churn(&serve_doc(1)).unwrap();
+        let spec = faults::preset("nic-brownout").unwrap();
+        let tr = churn_doc_scenario(
+            &Scenario::train(None, true),
+            &spec,
+            &Runner::new(),
+        )
+        .unwrap();
+        print_churn(&tr).unwrap();
+    }
+}

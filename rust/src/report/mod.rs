@@ -1,8 +1,8 @@
 //! Report emission: every `flux` JSON document behind one
 //! schema-versioned, byte-stable writer.
 //!
-//! Each schema owns a (private) submodule — `bench`, `scale`, `sweep`,
-//! `train` — and this module holds what they share: the schema
+//! Each schema owns a (private) submodule — `bench`, `churn`, `scale`,
+//! `sweep`, `train` — and this module holds what they share: the schema
 //! registry, the `BENCH_<n>.json` trajectory path policy, the writer
 //! with pointed path errors, and the [`Summary`] projections every
 //! latency block uses.
@@ -22,6 +22,7 @@
 //! Consumers must tolerate added keys; existing keys are stable.
 
 mod bench;
+mod churn;
 mod scale;
 mod sweep;
 mod train;
@@ -30,6 +31,7 @@ pub use bench::{
     bench_doc, bench_doc_with, events_per_sec_doc, print_bench, wall_doc,
     write_bench,
 };
+pub use churn::{churn_doc_scenario, print_churn, INTENSITIES};
 pub use scale::{
     print_scale, scale_doc, scale_doc_for, scale_doc_scenario,
     scale_doc_with,
@@ -61,6 +63,11 @@ pub const TRAIN_SCHEMA: &str = "flux-train-v1";
 /// Schema of the `flux sweep-workloads --json` report: the workload
 /// preset x topology matrix, flux vs decoupled.
 pub const SWEEP_SCHEMA: &str = "flux-sweep-v1";
+/// Schema of the `flux simulate --scale|--train --faults <spec>
+/// --json` report: goodput / step-time degradation curves per method
+/// x topology x fault intensity. Intensity 0 reproduces the
+/// fault-free flux-scale-v2 / flux-train-v1 numbers bit-for-bit.
+pub const CHURN_SCHEMA: &str = "flux-churn-v1";
 
 /// One emitted schema, for `flux list` discoverability.
 #[derive(Clone, Copy, Debug)]
@@ -72,7 +79,7 @@ pub struct SchemaInfo {
 }
 
 /// Every document schema the CLI can emit, in trajectory order.
-pub const SCHEMAS: [SchemaInfo; 4] = [
+pub const SCHEMAS: [SchemaInfo; 5] = [
     SchemaInfo {
         name: SCHEMA,
         command: "flux bench --json",
@@ -92,6 +99,11 @@ pub const SCHEMAS: [SchemaInfo; 4] = [
         name: SWEEP_SCHEMA,
         command: "flux sweep-workloads --json",
         summary: "workload preset x topology serving matrix",
+    },
+    SchemaInfo {
+        name: CHURN_SCHEMA,
+        command: "flux simulate --scale --faults <preset> --json",
+        summary: "goodput/step-time degradation under seeded faults",
     },
 ];
 
@@ -192,7 +204,13 @@ mod tests {
         let names: Vec<&str> = SCHEMAS.iter().map(|s| s.name).collect();
         assert_eq!(
             names,
-            vec![SCHEMA, SCALE_SCHEMA, TRAIN_SCHEMA, SWEEP_SCHEMA]
+            vec![
+                SCHEMA,
+                SCALE_SCHEMA,
+                TRAIN_SCHEMA,
+                SWEEP_SCHEMA,
+                CHURN_SCHEMA
+            ]
         );
         for s in SCHEMAS {
             assert!(!s.command.is_empty() && !s.summary.is_empty());

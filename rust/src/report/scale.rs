@@ -288,6 +288,7 @@ mod tests {
                 Method::Medium,
                 Method::Flux,
             ]),
+            faults: None,
             quick: true,
         };
         let doc =

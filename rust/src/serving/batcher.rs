@@ -194,6 +194,26 @@ impl Batcher {
         Ok(Work::Idle)
     }
 
+    /// Kill-path teardown: release every running request's KV blocks,
+    /// mark every unfinished request [`RequestState::Failed`], and
+    /// clear the queue and running set. Returns the drained ids in
+    /// queue-then-running order so the coordinator can attribute the
+    /// abandonment to the fault (and reissue closed-loop users).
+    /// Queued requests hold no blocks, so only running ids release.
+    pub fn drain(&mut self, kv: &mut KvCacheManager) -> Result<Vec<u64>> {
+        let mut drained: Vec<u64> = self.queue.iter().copied().collect();
+        for &id in &self.running {
+            kv.release(id)?;
+            drained.push(id);
+        }
+        self.queue.clear();
+        self.running.clear();
+        for &id in &drained {
+            self.get_mut(id).state = RequestState::Failed;
+        }
+        Ok(drained)
+    }
+
     /// Record one generated token for each id; retire finished requests
     /// (freeing KV) at `now`.
     pub fn complete_decode(
@@ -401,6 +421,34 @@ mod tests {
         b.complete_decode(&[0, 1], &[1, 1], &mut kv, 1.0).unwrap();
         b.complete_decode(&[0, 1], &[1, 1], &mut kv, 2.0).unwrap();
         assert_eq!(b.outstanding(), 0);
+    }
+
+    #[test]
+    fn drain_releases_blocks_and_fails_unfinished() {
+        let (mut b, mut kv) = setup();
+        for i in 0..3 {
+            b.submit(req(i, 8, 4));
+        }
+        b.next_work(&mut kv).unwrap(); // admit all three
+        b.complete_decode(&[0, 1, 2], &[1, 1, 1], &mut kv, 1.0)
+            .unwrap();
+        b.submit(req(3, 8, 4)); // queued, holds no blocks
+        assert!(kv.used_blocks() > 0);
+        let drained = b.drain(&mut kv).unwrap();
+        assert_eq!(drained, vec![3, 0, 1, 2], "queue then running");
+        assert_eq!(kv.used_blocks(), 0, "drained KV must be released");
+        kv.check_invariants().unwrap();
+        assert!(b.all_done());
+        for id in drained {
+            assert_eq!(b.get(id).state, RequestState::Failed);
+            assert!(b.get(id).finished_ns.is_none());
+        }
+        // Restart: the replica admits fresh work into a clean pool.
+        b.submit(req(4, 8, 1));
+        assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![4]));
+        b.complete_decode(&[4], &[1], &mut kv, 2.0).unwrap();
+        assert_eq!(kv.used_blocks(), 0);
+        kv.check_invariants().unwrap();
     }
 
     #[test]

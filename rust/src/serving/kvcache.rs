@@ -140,6 +140,32 @@ impl KvCacheManager {
         if !seen.iter().all(|&s| s) {
             bail!("leaked blocks");
         }
+        // Used-block conservation across fail/restart cycles: the
+        // ledgers must agree (every owned sequence has a length,
+        // every length an owner) and each live sequence must still
+        // hold at least the blocks its token count needs — a drain
+        // that released blocks but forgot a ledger entry (or vice
+        // versa) shows up here, not as a later phantom OOM.
+        if self.owned.len() != self.lens.len() {
+            bail!(
+                "ledger mismatch: {} owned sequences vs {} lengths",
+                self.owned.len(),
+                self.lens.len()
+            );
+        }
+        for (seq, &len) in &self.lens {
+            let Some(blocks) = self.owned.get(seq) else {
+                bail!("seq {seq} has a length but owns no blocks");
+            };
+            if blocks.len() < self.blocks_for(len) {
+                bail!(
+                    "seq {seq}: {} tokens need {} blocks, owns {}",
+                    len,
+                    self.blocks_for(len),
+                    blocks.len()
+                );
+            }
+        }
         Ok(())
     }
 }

@@ -9,6 +9,9 @@ pub enum RequestState {
     Decoding,
     /// Hit max_new_tokens (or a stop condition).
     Finished,
+    /// Abandoned by a fault (replica kill or elastic resize drained
+    /// it before completion); its KV blocks have been released.
+    Failed,
 }
 
 #[derive(Clone, Debug)]

@@ -39,12 +39,13 @@ use std::collections::BTreeMap;
 use anyhow::{ensure, Context, Result};
 
 use crate::cost::arch::ScaleTopology;
+use crate::faults::{FaultAction, FaultEvent, FaultTimeline};
 use crate::model::analysis::{layer_attention_extra_ns, layer_fwd_ops};
 use crate::model::configs::TransformerConfig;
 use crate::overlap::Method;
 use crate::serving::batcher::{Batcher, BatcherConfig, Work};
 use crate::serving::kvcache::KvCacheManager;
-use crate::serving::request::Request;
+use crate::serving::request::{Request, RequestState};
 use crate::serving::simulate::{
     decode_cache_len, decode_step_ns, prefill_ns,
 };
@@ -128,6 +129,10 @@ pub struct ReplicaReport {
 pub struct ScaleReport {
     pub method: Method,
     pub completed: usize,
+    /// Requests abandoned by faults: drained mid-flight by a replica
+    /// kill or elastic resize, or arriving while no replica was
+    /// routable. Zero on every fault-free run.
+    pub failed: usize,
     pub tokens: usize,
     pub makespan_ns: f64,
     /// Time to first token (arrival → prefill done), per request.
@@ -211,18 +216,39 @@ struct Replicas {
     in_flight: Vec<Vec<u64>>,
     in_flight_is_prefill: Vec<bool>,
     busy_ns: Vec<f64>,
+    /// False between a kill and its restart; dead replicas are
+    /// unroutable and their in-flight step completions are stale.
+    alive: Vec<bool>,
+    /// Bumped on every drain (kill or resize): a `StepDone` stamped
+    /// with an older epoch must not retire the replica's next batch.
+    epoch: Vec<u64>,
+}
+
+impl Replicas {
+    /// Abandon everything a replica holds: the executing batch, the
+    /// running set and the admission queue. Every KV block comes back
+    /// to the pool and every unfinished request flips to `Failed`.
+    /// Returns the drained ids (queue order, then running order).
+    fn drain(&mut self, r: usize) -> Result<Vec<u64>> {
+        self.epoch[r] += 1;
+        self.in_flight[r].clear();
+        self.in_flight_is_prefill[r] = false;
+        self.batchers[r].drain(&mut self.kvs[r])
+    }
 }
 
 /// DES events. Arrivals carry the request index; step completions the
-/// replica index.
+/// replica index and the epoch the step was scheduled under; faults
+/// index the pre-expanded [`FaultTimeline::events`] list.
 enum Ev {
     Arrive(usize),
-    StepDone(usize),
+    StepDone(usize, u64),
+    Fault(usize),
 }
 
 /// Run one (scenario, method) serving simulation to completion.
 pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
-    run_scale_traced(sc, method, None)
+    run_scale_inner(sc, method, None, None)
 }
 
 /// Like [`run_scale`], optionally recording the DES event stream into
@@ -231,7 +257,44 @@ pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
 pub fn run_scale_traced(
     sc: &ScaleScenario,
     method: Method,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<ScaleReport> {
+    run_scale_inner(sc, method, trace, None)
+}
+
+/// [`run_scale`] under an expanded fault timeline: replica kills drain
+/// their batcher (every KV block released, in-flight requests fail),
+/// restarts rejoin the routing set after the seeded downtime, elastic
+/// resizes shrink/grow the routable prefix, and straggler windows
+/// inflate step times by their factor. NIC windows are a no-op here:
+/// serving replicas never talk across nodes, so inter-node degradation
+/// only matters to training. An empty timeline is byte-identical to
+/// [`run_scale`].
+pub fn run_scale_faulted(
+    sc: &ScaleScenario,
+    method: Method,
+    faults: &FaultTimeline,
+) -> Result<ScaleReport> {
+    run_scale_inner(sc, method, None, Some(faults))
+}
+
+/// [`run_scale_faulted`] with the chrome-trace capture of
+/// [`run_scale_traced`]: kills/restarts land as instants, downtime and
+/// straggler windows as spans on the afflicted replica's lane.
+pub fn run_scale_faulted_traced(
+    sc: &ScaleScenario,
+    method: Method,
+    faults: &FaultTimeline,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<ScaleReport> {
+    run_scale_inner(sc, method, trace, Some(faults))
+}
+
+fn run_scale_inner(
+    sc: &ScaleScenario,
+    method: Method,
     mut trace: Option<(&mut Trace, usize)>,
+    faults: Option<&FaultTimeline>,
 ) -> Result<ScaleReport> {
     sc.topo.validate()?;
     sc.workload.validate()?;
@@ -248,12 +311,43 @@ pub fn run_scale_traced(
         .max_prefill_tokens
         .unwrap_or(max_prompt * sc.max_prefill_batch);
 
+    // An empty timeline (intensity 0, or a fault-free spec) must take
+    // the exact fault-free path: no fault events, no step-time
+    // arithmetic, no extra branches that could perturb f64 results.
+    let timeline = faults.filter(|tl| !tl.is_empty());
+
     if let Some((tr, pid0)) = trace.as_mut() {
         for r in 0..dp {
             tr.process_name(
                 *pid0 + r,
                 &format!("{}/replica{r}", method.name()),
             );
+        }
+        if let Some(tl) = timeline {
+            for w in &tl.stragglers {
+                if w.replica < dp {
+                    tr.span(
+                        *pid0 + w.replica,
+                        1,
+                        "straggler",
+                        w.start_ns,
+                        w.end_ns - w.start_ns,
+                        vec![("factor", Json::from(w.factor))],
+                    );
+                }
+            }
+            for k in &tl.kills {
+                if k.replica < dp {
+                    tr.span(
+                        *pid0 + k.replica,
+                        1,
+                        "down",
+                        k.at_ns,
+                        k.restart_ns - k.at_ns,
+                        vec![],
+                    );
+                }
+            }
         }
     }
 
@@ -280,6 +374,19 @@ pub fn run_scale_traced(
         in_flight: vec![Vec::new(); dp],
         in_flight_is_prefill: vec![false; dp],
         busy_ns: vec![0.0; dp],
+        alive: vec![true; dp],
+        epoch: vec![0u64; dp],
+    };
+    // Replicas at or above this index are drained by an elastic
+    // resize and unroutable until the restore raises it back.
+    let mut active_dp = dp;
+    // Requests that arrived while no replica was routable: they fail
+    // at the gateway and never reach a batcher.
+    let mut gateway_failures = 0usize;
+
+    let fault_evs: Vec<FaultEvent> = match timeline {
+        Some(tl) => tl.events(dp),
+        None => Vec::new(),
     };
 
     // Step-time cache: (phase, batch, padded-seq | mean-cache-len) →
@@ -332,6 +439,9 @@ pub fn run_scale_traced(
         }
         issued = n;
     }
+    for (fi, fe) in fault_evs.iter().enumerate() {
+        q.schedule(fe.at_ns, Ev::Fault(fi));
+    }
 
     // Round-robin position (arrival order, which for open-loop equals
     // request-index order — the PR-2 assignment).
@@ -340,19 +450,57 @@ pub fn run_scale_traced(
     while let Some((now, ev)) = q.next() {
         let r = match ev {
             Ev::Arrive(i) => {
-                let r = match sc.workload.routing {
+                let routable =
+                    |j: usize| reps.alive[j] && j < active_dp;
+                let routed = match sc.workload.routing {
                     Routing::RoundRobin => {
-                        let r = rr_next % dp;
-                        rr_next += 1;
-                        r
+                        // Probe forward from the rotation point past
+                        // dead/resized-away replicas; with everything
+                        // routable this reduces to the fault-free
+                        // `rr_next % dp` assignment exactly.
+                        let mut r = rr_next % dp;
+                        let mut probes = 0;
+                        while probes < dp && !routable(r) {
+                            r = (r + 1) % dp;
+                            probes += 1;
+                        }
+                        if routable(r) {
+                            rr_next = r + 1;
+                            Some(r)
+                        } else {
+                            None
+                        }
                     }
                     // Fewest outstanding wins; ties to the lowest
                     // index for determinism.
                     Routing::LeastOutstanding => (0..dp)
+                        .filter(|&j| routable(j))
                         .min_by_key(|&j| {
                             (reps.batchers[j].outstanding(), j)
-                        })
-                        .expect("dp >= 1"),
+                        }),
+                };
+                let Some(r) = routed else {
+                    // Nothing routable: the request fails at the
+                    // gateway. A closed-loop user still comes back
+                    // after thinking.
+                    gateway_failures += 1;
+                    if let Some((tr, pid0)) = trace.as_mut() {
+                        tr.instant(
+                            *pid0,
+                            0,
+                            "arrive-failed",
+                            now,
+                            vec![("req", Json::from(i))],
+                        );
+                    }
+                    if gw.is_closed_loop() && issued < n {
+                        q.schedule(
+                            now + gw.think_gaps[issued],
+                            Ev::Arrive(issued),
+                        );
+                        issued += 1;
+                    }
+                    continue;
                 };
                 let len = gw.lengths[i];
                 if let Some((tr, pid0)) = trace.as_mut() {
@@ -372,7 +520,12 @@ pub fn run_scale_traced(
                 ));
                 r
             }
-            Ev::StepDone(r) => {
+            Ev::StepDone(r, epoch) => {
+                if reps.epoch[r] != epoch {
+                    // The step's batch was drained by a kill or
+                    // resize after this completion was scheduled.
+                    continue;
+                }
                 let ids = std::mem::take(&mut reps.in_flight[r]);
                 if reps.in_flight_is_prefill[r] {
                     // Prefill emits each sequence's first token.
@@ -399,6 +552,73 @@ pub fn run_scale_traced(
                     }
                 }
                 r
+            }
+            Ev::Fault(fi) => {
+                let drained = match fault_evs[fi].action {
+                    FaultAction::Kill(r) => {
+                        if !reps.alive[r] {
+                            continue;
+                        }
+                        reps.alive[r] = false;
+                        if let Some((tr, pid0)) = trace.as_mut() {
+                            tr.instant(*pid0 + r, 0, "kill", now, vec![]);
+                        }
+                        reps.drain(r).with_context(|| {
+                            format!("kill of replica {r} at {now}")
+                        })?
+                    }
+                    FaultAction::Restart(r) => {
+                        reps.alive[r] = true;
+                        if let Some((tr, pid0)) = trace.as_mut() {
+                            tr.instant(
+                                *pid0 + r,
+                                0,
+                                "restart",
+                                now,
+                                vec![],
+                            );
+                        }
+                        continue;
+                    }
+                    FaultAction::SetDp(target) => {
+                        let target = target.clamp(1, dp);
+                        let mut drained = Vec::new();
+                        for r in target..active_dp {
+                            drained.extend(reps.drain(r).with_context(
+                                || {
+                                    format!(
+                                        "resize drain of replica {r} \
+                                         at {now}"
+                                    )
+                                },
+                            )?);
+                        }
+                        active_dp = target;
+                        if let Some((tr, pid0)) = trace.as_mut() {
+                            tr.instant(
+                                *pid0,
+                                0,
+                                "resize",
+                                now,
+                                vec![("dp", Json::from(target))],
+                            );
+                        }
+                        drained
+                    }
+                };
+                // Every drained request frees its closed-loop user.
+                if gw.is_closed_loop() {
+                    for _ in &drained {
+                        if issued < n {
+                            q.schedule(
+                                now + gw.think_gaps[issued],
+                                Ev::Arrive(issued),
+                            );
+                            issued += 1;
+                        }
+                    }
+                }
+                continue;
             }
         };
         // Try to start the next step on the touched replica.
@@ -430,7 +650,16 @@ pub fn run_scale_traced(
                     .sum::<usize>()
                     / ids.len()
             };
-            let t = step_ns(is_prefill, ids.len(), len);
+            let t = match timeline {
+                // Straggler windows inflate the step that STARTS
+                // inside them; the fault-free arm keeps the cached
+                // value untouched (not even a `* 1.0`).
+                Some(tl) => {
+                    step_ns(is_prefill, ids.len(), len)
+                        * tl.step_factor(r, now)
+                }
+                None => step_ns(is_prefill, ids.len(), len),
+            };
             if let Some((tr, pid0)) = trace.as_mut() {
                 tr.span(
                     *pid0 + r,
@@ -450,7 +679,7 @@ pub fn run_scale_traced(
             reps.in_flight[r] = ids;
             reps.in_flight_is_prefill[r] = is_prefill;
             reps.busy_ns[r] += t;
-            q.schedule(now + t, Ev::StepDone(r));
+            q.schedule(now + t, Ev::StepDone(r, reps.epoch[r]));
         }
     }
 
@@ -466,14 +695,32 @@ pub fn run_scale_traced(
 
     // Streaming accumulators in the same replica-major visit order the
     // collected Vecs used: running sums in push order are bit-identical
-    // to the old collect-then-`Summary::of` path.
+    // to the old collect-then-`Summary::of` path. Failed requests have
+    // no finite latencies — they are counted, SLO-observed with
+    // infinite TTFT (missed deadlines, abandoned) and kept out of the
+    // percentile streams.
     let mut ttft = Streaming::with_capacity(n);
     let mut per_token = Streaming::with_capacity(n);
     let mut latency = Streaming::with_capacity(n);
     let mut makespan: f64 = 0.0;
+    let mut failed = gateway_failures;
     let mut slo_report = sc.workload.slo.map(|_| SloReport::default());
     for batcher in &reps.batchers {
         for req in &batcher.requests {
+            if req.state == RequestState::Failed {
+                failed += 1;
+                if let (Some(slo), Some(report)) =
+                    (&sc.workload.slo, slo_report.as_mut())
+                {
+                    report.observe(
+                        slo,
+                        f64::INFINITY,
+                        f64::INFINITY,
+                        req.generated.len(),
+                    );
+                }
+                continue;
+            }
             let t = req
                 .ttft_ns()
                 .context("request finished without a prefill timestamp")?;
@@ -492,6 +739,15 @@ pub fn run_scale_traced(
             }
         }
     }
+    // Gateway failures never generated a token; they still count
+    // against goodput and as abandoned.
+    if let (Some(slo), Some(report)) =
+        (&sc.workload.slo, slo_report.as_mut())
+    {
+        for _ in 0..gateway_failures {
+            report.observe(slo, f64::INFINITY, f64::INFINITY, 0);
+        }
+    }
 
     let replica_reports: Vec<ReplicaReport> = reps
         .batchers
@@ -506,6 +762,7 @@ pub fn run_scale_traced(
             tokens: batcher
                 .requests
                 .iter()
+                .filter(|r| r.finished_ns.is_some())
                 .map(|r| r.generated.len())
                 .sum(),
             prefill_batches: batcher.prefill_batches,
@@ -514,16 +771,46 @@ pub fn run_scale_traced(
         })
         .collect();
 
+    let completed: usize =
+        replica_reports.iter().map(|r| r.completed).sum();
+    ensure!(
+        completed + failed == n,
+        "request conservation violated: {completed} completed + \
+         {failed} failed != {n} issued"
+    );
+    // Under total churn every request can fail: the percentile streams
+    // are then empty and the summaries all-zero by construction.
+    let summarize = |s: Streaming| -> Summary {
+        if s.is_empty() {
+            Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            }
+        } else {
+            s.finalize()
+        }
+    };
     let tokens: usize = replica_reports.iter().map(|r| r.tokens).sum();
     Ok(ScaleReport {
         method,
-        completed: replica_reports.iter().map(|r| r.completed).sum(),
+        completed,
+        failed,
         tokens,
         makespan_ns: makespan,
-        ttft: ttft.finalize(),
-        per_token: per_token.finalize(),
-        latency: latency.finalize(),
-        tokens_per_sec: tokens as f64 / (makespan * 1e-9),
+        ttft: summarize(ttft),
+        per_token: summarize(per_token),
+        latency: summarize(latency),
+        tokens_per_sec: if makespan > 0.0 {
+            tokens as f64 / (makespan * 1e-9)
+        } else {
+            0.0
+        },
         overlap_eff: scale_overlap_efficiency(sc, method),
         slo: slo_report,
         replicas: replica_reports,
@@ -793,6 +1080,167 @@ mod tests {
                 sc.workload.requests_per_replica
             );
         }
+    }
+
+    fn churn(
+        topo: &'static ScaleTopology,
+        method: Method,
+        k: f64,
+    ) -> ScaleReport {
+        let spec = crate::faults::preset("replica-churn").unwrap();
+        let tl = spec.expand(topo.dp, k);
+        let sc = ScaleScenario::quick(topo);
+        if tl.is_empty() {
+            run_scale(&sc, method).unwrap()
+        } else {
+            run_scale_faulted(&sc, method, &tl).unwrap()
+        }
+    }
+
+    fn goodput(rep: &ScaleReport) -> f64 {
+        rep.slo.as_ref().expect("quick preset has SLOs").goodput()
+    }
+
+    #[test]
+    fn empty_timeline_is_byte_identical_to_fault_free() {
+        // The fault hook must cost nothing when unused: a zero-
+        // intensity expansion takes the exact fault-free path.
+        for topo in ALL_SCALE_TOPOLOGIES {
+            let sc = ScaleScenario::quick(topo);
+            let spec = crate::faults::preset("replica-churn").unwrap();
+            let tl = spec.expand(topo.dp, 0.0);
+            assert!(tl.is_empty());
+            let base = run_scale(&sc, Method::Flux).unwrap();
+            let faulted =
+                run_scale_faulted(&sc, Method::Flux, &tl).unwrap();
+            assert_eq!(base.makespan_ns, faulted.makespan_ns);
+            assert_eq!(base.ttft.p99, faulted.ttft.p99);
+            assert_eq!(base.per_token.mean, faulted.per_token.mean);
+            assert_eq!(base.failed, 0);
+            assert_eq!(faulted.failed, 0);
+            assert_eq!(base.slo, faulted.slo);
+        }
+    }
+
+    #[test]
+    fn replica_churn_degrades_goodput_strictly_on_h800() {
+        // The acceptance curve: on the 4-replica H800 cluster the
+        // seeded arrival stream straddles both scaled downtimes
+        // (restarts at 90ms and 150ms), so each intensity bump kills
+        // strictly more goodput — for BOTH methods.
+        for method in [Method::Flux, Method::NonOverlap] {
+            let reps: Vec<ScaleReport> = [0.0, 0.5, 1.0]
+                .iter()
+                .map(|&k| churn(&SCALE_H800_TP8_DP4, method, k))
+                .collect();
+            for w in reps.windows(2) {
+                assert!(
+                    goodput(&w[0]) > goodput(&w[1]),
+                    "{method:?}: goodput {} !> {}",
+                    goodput(&w[0]),
+                    goodput(&w[1])
+                );
+                assert!(w[0].failed < w[1].failed);
+            }
+            for rep in &reps {
+                assert_eq!(rep.completed + rep.failed, 32);
+            }
+        }
+    }
+
+    #[test]
+    fn replica_churn_degrades_goodput_strictly_on_nvlink_dp2() {
+        let reps: Vec<ScaleReport> = [0.0, 0.5, 1.0]
+            .iter()
+            .map(|&k| churn(&SCALE_TP8_DP2, Method::Flux, k))
+            .collect();
+        for w in reps.windows(2) {
+            assert!(goodput(&w[0]) > goodput(&w[1]));
+            assert!(w[0].failed < w[1].failed);
+        }
+    }
+
+    #[test]
+    fn replica_churn_on_dp1_fails_everything_cleanly() {
+        // One replica, arrivals all inside the first 33ms: the 30ms
+        // kill eats the whole workload at any positive intensity.
+        // This is the all-failed edge: empty percentile streams, zero
+        // makespan, zero goodput — and clean conservation.
+        let rep = churn(&SCALE_TP8, Method::Flux, 0.5);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.failed, 8);
+        assert_eq!(rep.tokens, 0);
+        assert_eq!(rep.makespan_ns, 0.0);
+        assert_eq!(rep.tokens_per_sec, 0.0);
+        assert_eq!(rep.ttft.n, 0);
+        assert_eq!(goodput(&rep), 0.0);
+        let slo = rep.slo.as_ref().unwrap();
+        assert_eq!(slo.abandoned, 8, "failed requests are abandoned");
+    }
+
+    #[test]
+    fn replica_churn_grows_failures_monotonically_on_pcie() {
+        // PCIe's fault-free goodput is itself SLO-limited (queueing
+        // blows the TTFT deadline), so goodput there is not a clean
+        // monotone signal; the failure count is. Full intensity
+        // spans every arrival: total loss.
+        let reps: Vec<ScaleReport> = [0.0, 0.5, 1.0]
+            .iter()
+            .map(|&k| churn(&SCALE_PCIE_TP8_DP2, Method::Flux, k))
+            .collect();
+        for w in reps.windows(2) {
+            assert!(w[0].failed < w[1].failed, "downtime grows with k");
+        }
+        for rep in &reps {
+            assert_eq!(rep.completed + rep.failed, 16);
+        }
+        assert_eq!(reps[2].failed, 16, "full downtime spans all arrivals");
+        assert_eq!(goodput(&reps[2]), 0.0);
+    }
+
+    #[test]
+    fn straggler_storm_slows_steps_but_loses_nothing() {
+        let spec = crate::faults::preset("straggler-storm").unwrap();
+        let sc = ScaleScenario::quick(&SCALE_TP8_DP2);
+        let base = run_scale(&sc, Method::Flux).unwrap();
+        let tl = spec.expand(sc.topo.dp, 1.0);
+        let slow = run_scale_faulted(&sc, Method::Flux, &tl).unwrap();
+        assert_eq!(slow.completed, sc.n_requests());
+        assert_eq!(slow.failed, 0);
+        assert!(
+            slow.makespan_ns > base.makespan_ns,
+            "inflated steps must stretch the makespan: {} !> {}",
+            slow.makespan_ns,
+            base.makespan_ns
+        );
+        assert!(goodput(&slow) <= goodput(&base));
+    }
+
+    #[test]
+    fn elastic_resize_drains_then_rejoins() {
+        use crate::faults::{FaultSpec, ResizeSpec};
+        let spec = FaultSpec {
+            name: "resize-test".into(),
+            resizes: vec![ResizeSpec {
+                at_ns: 30.0e6,
+                target_dp: 1,
+                dur_ns: 60.0e6,
+            }],
+            ..FaultSpec::none()
+        };
+        spec.validate().unwrap();
+        let sc = ScaleScenario::quick(&SCALE_TP8_DP2);
+        let tl = spec.expand(sc.topo.dp, 1.0);
+        let rep = run_scale_faulted(&sc, Method::Flux, &tl).unwrap();
+        // Replica 1 is drained at 30ms (losing its in-system work),
+        // sits out the [30ms, 90ms) window while replica 0 absorbs
+        // the traffic, then rejoins for the post-90ms arrivals.
+        assert!(rep.failed >= 1, "the resize must drain something");
+        assert_eq!(rep.completed + rep.failed, sc.n_requests());
+        for r in &rep.replicas {
+            assert!(r.completed > 0, "both replicas serve traffic");
+        }
+        assert!(goodput(&rep) > 0.0);
     }
 
     #[test]

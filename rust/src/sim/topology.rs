@@ -181,11 +181,28 @@ impl Net {
         bytes: f64,
         ready: Time,
     ) -> (Time, Time) {
+        // `x * 1.0 == x` bitwise for every finite f64, so the
+        // fault-free path through the scaled variant is exact.
+        self.transfer_scaled(src, dst, bytes, ready, 1.0)
+    }
+
+    /// [`Net::transfer`] under a fault-injected bandwidth slowdown:
+    /// every link on the path carries the bytes `slowdown`× slower
+    /// (an injected NIC/link brownout). `slowdown = 1.0` is exactly
+    /// the healthy transfer.
+    pub fn transfer_scaled(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        ready: Time,
+        slowdown: f64,
+    ) -> (Time, Time) {
         let (path, plen) = self.path(src, dst);
         let mut start = f64::INFINITY;
         let mut end: Time = ready;
         for &id in &path[..plen] {
-            let dur = bytes / self.res[id].gbps;
+            let dur = bytes / self.res[id].gbps * slowdown;
             let (s, e) = self.res[id].res.acquire(ready, dur);
             start = start.min(s);
             end = end.max(e);

@@ -31,9 +31,10 @@
 //! reruns — the contract `flux simulate --train --json` (BENCH_2 in
 //! CI) is byte-checked against.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::cost::arch::TrainTopology;
+use crate::faults::FaultTimeline;
 use crate::model::configs::TransformerConfig;
 use crate::parallel::{
     ideal_stage_times, step_costs, train_step_ns, Layout, Method,
@@ -138,6 +139,11 @@ struct Stages {
     bwd_done: Vec<usize>,
     busy: Vec<bool>,
     busy_ns: Vec<f64>,
+    /// Duration of the step currently executing on each stage: under
+    /// a straggler window the scheduled duration is inflated, and the
+    /// trace spans must reconstruct their start from what actually
+    /// ran, not the nominal stage cost.
+    cur_dur: Vec<f64>,
     last_bwd_end: Vec<f64>,
     /// Each stage's DP all-reduce stream (its own NIC queue pair;
     /// Megatron pins DP traffic off the PP path, and the analytic twin
@@ -157,6 +163,7 @@ impl Stages {
             bwd_done: vec![0; pp],
             busy: vec![false; pp],
             busy_ns: vec![0.0; pp],
+            cur_dur: vec![0.0; pp],
             last_bwd_end: vec![0.0; pp],
             dp_link: (0..pp).map(|_| Serial::new()).collect(),
             ar_end: vec![0.0; pp],
@@ -173,6 +180,7 @@ fn try_start(
     m: usize,
     pp: usize,
     costs: &StepCosts,
+    faults: Option<&FaultTimeline>,
 ) {
     let now = q.now();
     if stages.busy[s] {
@@ -183,14 +191,25 @@ fn try_start(
     let can_fwd = stages.fwd_done[s] < m
         && stages.fwd_done[s] < stages.fwd_avail[s]
         && in_flight < pp - s;
+    // A straggler window inflates the step that starts inside it
+    // (stage index = fault-spec replica index). The fault-free arm
+    // keeps the nominal cost untouched.
+    let dur = |nominal: f64| match faults {
+        Some(tl) => nominal * tl.step_factor(s, now),
+        None => nominal,
+    };
     if can_bwd {
+        let d = dur(costs.stage.bwd_ns);
         stages.busy[s] = true;
-        stages.busy_ns[s] += costs.stage.bwd_ns;
-        q.schedule(now + costs.stage.bwd_ns, Ev::BwdDone(s));
+        stages.busy_ns[s] += d;
+        stages.cur_dur[s] = d;
+        q.schedule(now + d, Ev::BwdDone(s));
     } else if can_fwd {
+        let d = dur(costs.stage.fwd_ns);
         stages.busy[s] = true;
-        stages.busy_ns[s] += costs.stage.fwd_ns;
-        q.schedule(now + costs.stage.fwd_ns, Ev::FwdDone(s));
+        stages.busy_ns[s] += d;
+        stages.cur_dur[s] = d;
+        q.schedule(now + d, Ev::FwdDone(s));
     }
 }
 
@@ -211,7 +230,7 @@ fn validate_scenario(sc: &TrainScenario) -> Result<()> {
 
 /// Run one (scenario, method) training step through the event queue.
 pub fn run_train(sc: &TrainScenario, method: Method) -> Result<TrainRun> {
-    run_train_traced(sc, method, None)
+    run_train_with(sc, method, None, None)
 }
 
 /// Like [`run_train`], optionally recording the DES event stream into
@@ -221,9 +240,36 @@ pub fn run_train(sc: &TrainScenario, method: Method) -> Result<TrainRun> {
 pub fn run_train_traced(
     sc: &TrainScenario,
     method: Method,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<TrainRun> {
+    run_train_with(sc, method, None, trace)
+}
+
+/// [`run_train`] under an expanded fault timeline: straggler windows
+/// inflate the afflicted stage's fwd/bwd step times (spec replica
+/// index = pipeline stage), and NIC windows slow both the PP
+/// activation/gradient hops and the DP all-reduce buckets. Kills and
+/// resizes have no training semantics (a synchronous step has no
+/// replica to drain mid-flight) and are rejected up front. An empty
+/// timeline is byte-identical to [`run_train`].
+pub fn run_train_with(
+    sc: &TrainScenario,
+    method: Method,
+    faults: Option<&FaultTimeline>,
     mut trace: Option<(&mut Trace, usize)>,
 ) -> Result<TrainRun> {
     validate_scenario(sc)?;
+    if let Some(tl) = faults {
+        if !tl.kills.is_empty() || !tl.resizes.is_empty() {
+            bail!(
+                "fault timeline has {} kill(s) and {} resize(s): \
+                 training is a synchronous step with no replica to \
+                 drain — only stragglers and nic windows apply",
+                tl.kills.len(),
+                tl.resizes.len()
+            );
+        }
+    }
     if let Some((tr, pid0)) = trace.as_mut() {
         for s in 0..sc.topo.pp {
             tr.process_name(
@@ -231,10 +277,29 @@ pub fn run_train_traced(
                 &format!("{}/stage{s}", method.name()),
             );
         }
+        if let Some(tl) = faults {
+            for w in &tl.stragglers {
+                if w.replica < sc.topo.pp {
+                    tr.span(
+                        *pid0 + w.replica,
+                        1,
+                        "straggler",
+                        w.start_ns,
+                        w.end_ns - w.start_ns,
+                        vec![("factor", Json::from(w.factor))],
+                    );
+                }
+            }
+        }
     }
     let costs = sc.costs(method);
-    let out =
-        simulate_with_costs(sc.topo, sc.microbatches, &costs, trace)?;
+    let out = simulate_with_costs(
+        sc.topo,
+        sc.microbatches,
+        &costs,
+        faults,
+        trace,
+    )?;
     Ok(TrainRun {
         method,
         analytic_ns: train_step_ns(
@@ -266,8 +331,14 @@ pub fn ideal_step_ns(sc: &TrainScenario) -> Result<f64> {
         ),
         ..sc.costs(Method::NonOverlap)
     };
-    Ok(simulate_with_costs(sc.topo, sc.microbatches, &ideal, None)?
-        .step_ns)
+    Ok(simulate_with_costs(
+        sc.topo,
+        sc.microbatches,
+        &ideal,
+        None,
+        None,
+    )?
+    .step_ns)
 }
 
 /// Eq. 2 against a precomputed ideal: the fraction of the
@@ -306,8 +377,11 @@ fn simulate_with_costs(
     topo: &TrainTopology,
     microbatches: usize,
     costs: &StepCosts,
+    faults: Option<&FaultTimeline>,
     mut trace: Option<(&mut Trace, usize)>,
 ) -> Result<TrainRun> {
+    // Empty timelines take the exact fault-free arithmetic.
+    let faults = faults.filter(|tl| !tl.is_empty());
     let pp = topo.pp;
     let m = microbatches;
     // One Net spanning the pipeline's nodes: stage s's rank 0 stands in
@@ -329,7 +403,14 @@ fn simulate_with_costs(
 
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut events = 0usize;
-    try_start(&mut stages, &mut q, 0, m, pp, costs);
+    try_start(&mut stages, &mut q, 0, m, pp, costs, faults);
+
+    // Injected link slowdown at hop/bucket release time; 1.0 scales
+    // bit-identically to the healthy transfer.
+    let nic_slow = |tl: Option<&FaultTimeline>, now: f64| match tl {
+        Some(tl) => tl.nic_scale(now),
+        None => 1.0,
+    };
 
     while let Some((now, ev)) = q.next() {
         events += 1;
@@ -342,8 +423,8 @@ fn simulate_with_costs(
                         *pid0 + s,
                         0,
                         "fwd",
-                        now - costs.stage.fwd_ns,
-                        costs.stage.fwd_ns,
+                        now - stages.cur_dur[s],
+                        stages.cur_dur[s],
                         vec![(
                             "micro",
                             Json::from(stages.fwd_done[s] - 1),
@@ -351,11 +432,12 @@ fn simulate_with_costs(
                     );
                 }
                 if s + 1 < pp {
-                    let (hop_start, end) = net.transfer(
+                    let (hop_start, end) = net.transfer_scaled(
                         rank_of(s),
                         rank_of(s + 1),
                         costs.act_bytes,
                         now,
+                        nic_slow(faults, now),
                     );
                     if let Some((tr, pid0)) = trace.as_mut() {
                         tr.span(
@@ -372,7 +454,7 @@ fn simulate_with_costs(
                     // The last stage turns around in place.
                     stages.bwd_avail[s] += 1;
                 }
-                try_start(&mut stages, &mut q, s, m, pp, costs);
+                try_start(&mut stages, &mut q, s, m, pp, costs, faults);
             }
             Ev::BwdDone(s) => {
                 stages.busy[s] = false;
@@ -383,8 +465,8 @@ fn simulate_with_costs(
                         *pid0 + s,
                         0,
                         "bwd",
-                        now - costs.stage.bwd_ns,
-                        costs.stage.bwd_ns,
+                        now - stages.cur_dur[s],
+                        stages.cur_dur[s],
                         vec![(
                             "micro",
                             Json::from(stages.bwd_done[s] - 1),
@@ -392,11 +474,12 @@ fn simulate_with_costs(
                     );
                 }
                 if s > 0 {
-                    let (hop_start, end) = net.transfer(
+                    let (hop_start, end) = net.transfer_scaled(
                         rank_of(s),
                         rank_of(s - 1),
                         costs.act_bytes,
                         now,
+                        nic_slow(faults, now),
                     );
                     if let Some((tr, pid0)) = trace.as_mut() {
                         tr.span(
@@ -415,10 +498,14 @@ fn simulate_with_costs(
                     // First post-window backward releases the deferred
                     // buckets too.
                     let release = if done == k0 + 1 { done } else { 1 };
+                    let b_dur = match faults {
+                        Some(tl) => bucket_ns * tl.nic_scale(now),
+                        None => bucket_ns,
+                    };
                     let mut ar_end = 0.0;
                     for _ in 0..release {
                         let (b_start, b_end) =
-                            stages.dp_link[s].acquire(now, bucket_ns);
+                            stages.dp_link[s].acquire(now, b_dur);
                         if let Some((tr, pid0)) = trace.as_mut() {
                             tr.span(
                                 *pid0 + s,
@@ -437,15 +524,15 @@ fn simulate_with_costs(
                 } else if topo.dp == 1 && done == m {
                     stages.ar_end[s] = now;
                 }
-                try_start(&mut stages, &mut q, s, m, pp, costs);
+                try_start(&mut stages, &mut q, s, m, pp, costs, faults);
             }
             Ev::ActArrive(s) => {
                 stages.fwd_avail[s] += 1;
-                try_start(&mut stages, &mut q, s, m, pp, costs);
+                try_start(&mut stages, &mut q, s, m, pp, costs, faults);
             }
             Ev::GradArrive(s) => {
                 stages.bwd_avail[s] += 1;
-                try_start(&mut stages, &mut q, s, m, pp, costs);
+                try_start(&mut stages, &mut q, s, m, pp, costs, faults);
             }
             Ev::AllReduceDone(s) => {
                 stages.ar_end[s] = now;
@@ -779,6 +866,84 @@ mod tests {
                 .unwrap();
         assert_eq!(plain.step_ns, traced.step_ns);
         assert_eq!(plain.events, traced.events);
+    }
+
+    #[test]
+    fn empty_timeline_is_byte_identical_to_fault_free() {
+        let sc = TrainScenario::quick(&TRAIN_H800_128);
+        let spec = crate::faults::preset("straggler-storm").unwrap();
+        let tl = spec.expand(sc.topo.pp, 0.0);
+        assert!(tl.is_empty());
+        let base = run_train(&sc, Method::Flux).unwrap();
+        let faulted =
+            run_train_with(&sc, Method::Flux, Some(&tl), None).unwrap();
+        assert_eq!(base.step_ns, faulted.step_ns);
+        assert_eq!(base.pipe_ns, faulted.pipe_ns);
+        assert_eq!(base.dp_exposed_ns, faulted.dp_exposed_ns);
+        assert_eq!(base.events, faulted.events);
+    }
+
+    #[test]
+    fn stragglers_stretch_the_step_monotonically() {
+        // A straggler-inflated stage sits on the 1F1B critical path,
+        // so step time grows with intensity — for every method, on
+        // every paper topology.
+        let spec = crate::faults::preset("straggler-storm").unwrap();
+        for topo in ALL_TRAIN_TOPOLOGIES {
+            let sc = TrainScenario::quick(topo);
+            for method in Method::TRAIN_SET {
+                let step = |k: f64| {
+                    let tl = spec.expand(sc.topo.pp, k);
+                    if tl.is_empty() {
+                        run_train(&sc, method).unwrap().step_ns
+                    } else {
+                        run_train_with(&sc, method, Some(&tl), None)
+                            .unwrap()
+                            .step_ns
+                    }
+                };
+                let s0 = step(0.0);
+                let s5 = step(0.5);
+                let s10 = step(1.0);
+                assert!(
+                    s0 < s5 && s5 < s10,
+                    "{} {}: {s0} !< {s5} !< {s10}",
+                    topo.name,
+                    method.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nic_brownout_exposes_a_longer_dp_tail() {
+        // Slower wire, same compute: the gradient all-reduce streams
+        // behind backward but its exposed tail past the last backward
+        // grows with the brownout.
+        let spec = crate::faults::preset("nic-brownout").unwrap();
+        let sc = TrainScenario::quick(&TRAIN_NVLINK_128);
+        let base = run_train(&sc, Method::Flux).unwrap();
+        let tl = spec.expand(sc.topo.pp, 1.0);
+        let slow =
+            run_train_with(&sc, Method::Flux, Some(&tl), None).unwrap();
+        assert!(
+            slow.dp_exposed_ns > base.dp_exposed_ns,
+            "exposed tail {} !> {}",
+            slow.dp_exposed_ns,
+            base.dp_exposed_ns
+        );
+        assert!(slow.step_ns > base.step_ns);
+    }
+
+    #[test]
+    fn kills_and_resizes_are_rejected_for_training() {
+        let spec = crate::faults::preset("replica-churn").unwrap();
+        let sc = TrainScenario::quick(&TRAIN_NVLINK_128);
+        let tl = spec.expand(sc.topo.pp, 1.0);
+        let err = run_train_with(&sc, Method::Flux, Some(&tl), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kill"), "{err}");
     }
 
     #[test]

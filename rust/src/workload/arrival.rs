@@ -87,11 +87,16 @@ impl ArrivalSpec {
             }
             ArrivalSpec::Mmpp { on_mean_ns, idle_mean_ns, avg_burst } => {
                 let mut burst_left = 0usize;
+                // `validate()` rejects avg_burst == 0 at parse time;
+                // the saturating bound keeps a hand-built spec from
+                // underflowing to below(u64::MAX) (same value and
+                // draw count for every legal avg_burst >= 1).
+                let bound =
+                    (2 * avg_burst as u64).saturating_sub(1).max(1);
                 for _ in 0..n {
                     if burst_left == 0 {
                         t += rng.exponential(idle_mean_ns / dp);
-                        burst_left = 1
-                            + rng.below(2 * avg_burst as u64 - 1) as usize;
+                        burst_left = 1 + rng.below(bound) as usize;
                     } else {
                         t += rng.exponential(on_mean_ns / dp);
                     }
@@ -319,6 +324,34 @@ mod tests {
             max > 20.0 * p50,
             "idle gaps ({max}) should dwarf burst gaps ({p50})"
         );
+    }
+
+    #[test]
+    fn mmpp_boundary_burst_sizes_never_underflow() {
+        // Regression: the old bound `2 * avg_burst - 1` underflowed
+        // for avg_burst == 0. validate() rejects 0 at parse time, and
+        // the draw site saturates so even a hand-built spec cannot
+        // panic; avg_burst == 1 (the boundary) draws below(1) == 0 —
+        // every burst is exactly one request.
+        let one = ArrivalSpec::Mmpp {
+            on_mean_ns: 1e5,
+            idle_mean_ns: 1e7,
+            avg_burst: 1,
+        };
+        let times = one.arrival_times(64, 1, &mut Rng::new(9)).unwrap();
+        assert_eq!(times.len(), 64);
+        // Burst size 1 means every gap is an idle draw: strictly
+        // increasing times.
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+        let zero = ArrivalSpec::Mmpp {
+            on_mean_ns: 1e5,
+            idle_mean_ns: 1e7,
+            avg_burst: 0,
+        };
+        assert!(zero.validate().is_err(), "0 still rejected at parse");
+        let t0 = zero.arrival_times(16, 1, &mut Rng::new(9)).unwrap();
+        assert_eq!(t0.len(), 16, "hand-built spec must not underflow");
+        assert!(t0.windows(2).all(|w| w[1] > w[0]));
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! topology cell, and scenario files must round-trip and reject
 //! nonsense with pointed errors.
 
+use flux::cost::arch::{SCALE_H800_TP8_DP4, TRAIN_NVLINK_128};
 use flux::exp::{Mode, Runner, Scenario, WorkloadRef};
+use flux::faults::FaultsRef;
 use flux::overlap::Method;
 use flux::report;
 use flux::util::json::Json;
@@ -61,6 +63,91 @@ fn scale_and_train_docs_are_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn churn_docs_are_byte_identical_across_drawn_thread_counts() {
+    // Fault-injection determinism contract: an identical FaultSpec
+    // seed replays byte-stably at ANY worker count, for both modes of
+    // the flux-churn-v1 document. Thread counts are drawn by
+    // propcheck, not hand-picked.
+    let mut serve =
+        Scenario::serve(Some(&SCALE_H800_TP8_DP4), None, true);
+    serve.faults = Some(FaultsRef::Preset("replica-churn".into()));
+    let mut train = Scenario::train(Some(&TRAIN_NVLINK_128), true);
+    train.faults = Some(FaultsRef::Preset("straggler-storm".into()));
+    let churn_bytes = |sc: &Scenario, threads: usize| {
+        let spec = sc.faults.as_ref().unwrap().resolved().unwrap();
+        report::churn_doc_scenario(
+            sc,
+            &spec,
+            &Runner::with_threads(threads),
+        )
+        .unwrap()
+        .to_string()
+    };
+    let seq_serve = churn_bytes(&serve, 1);
+    let seq_train = churn_bytes(&train, 1);
+    assert!(seq_serve.contains("flux-churn-v1"));
+    assert!(seq_train.contains("flux-churn-v1"));
+    forall_gen(3, 0x0C8A, usize_in(2, 9), |&threads| {
+        assert_eq!(
+            churn_bytes(&serve, threads),
+            seq_serve,
+            "serve churn doc at {threads} threads diverged"
+        );
+        assert_eq!(
+            churn_bytes(&train, threads),
+            seq_train,
+            "train churn doc at {threads} threads diverged"
+        );
+    });
+}
+
+#[test]
+fn intensity_zero_matches_the_plain_train_doc_exactly() {
+    // Fault-free replay: the k=0 point of every churn curve must be
+    // bit-identical to the historical flux-train-v1 document — wiring
+    // a fault timeline that never fires must not perturb one f64.
+    // (The serve-mode twin against flux-scale-v2 lives next to the
+    // churn document in `report/churn.rs`.)
+    let runner = Runner::with_threads(2);
+    let mut churny = Scenario::train(Some(&TRAIN_NVLINK_128), true);
+    churny.faults = Some(FaultsRef::Preset("straggler-storm".into()));
+    let spec = churny.faults.as_ref().unwrap().resolved().unwrap();
+    let churn =
+        report::churn_doc_scenario(&churny, &spec, &runner).unwrap();
+    let plain = report::train_doc_scenario(
+        &Scenario::train(Some(&TRAIN_NVLINK_128), true),
+        &runner,
+    )
+    .unwrap();
+    let churn_topo = &churn.get("topologies").unwrap().as_arr().unwrap()[0];
+    let plain_topo = &plain.get("topologies").unwrap().as_arr().unwrap()[0];
+    for key in ["megatron", "te", "flux"] {
+        let curve = churn_topo
+            .get(key)
+            .unwrap()
+            .get("curve")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let k0 = &curve[0];
+        assert_eq!(k0.get("intensity").unwrap().as_f64().unwrap(), 0.0);
+        for field in ["step_ns", "pipe_ns"] {
+            assert_eq!(
+                k0.get(field).unwrap().as_f64().unwrap(),
+                plain_topo
+                    .get(key)
+                    .unwrap()
+                    .get(field)
+                    .unwrap()
+                    .as_f64()
+                    .unwrap(),
+                "{key}.{field} perturbed by a fault-free timeline"
+            );
+        }
+    }
+}
+
+#[test]
 fn checked_in_scenario_file_loads_and_runs() {
     let path = std::path::Path::new(concat!(
         env!("CARGO_MANIFEST_DIR"),
@@ -101,6 +188,81 @@ fn checked_in_scenario_file_loads_and_runs() {
 }
 
 #[test]
+fn checked_in_churn_scenario_files_load_and_run() {
+    // The two fault-scenario artifacts are the CI byte-compare
+    // fixtures (BENCH_6): they must load, resolve their preset, run
+    // end to end, and stamp the flux-churn-v1 document.
+    let serve_path = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts/scenario_churn_h800.json"
+    ));
+    let sc = Scenario::load(serve_path).unwrap();
+    assert_eq!(sc.name, "h800-replica-churn");
+    assert_eq!(sc.mode, Mode::Serve);
+    let spec = sc.faults.as_ref().unwrap().resolved().unwrap();
+    assert_eq!(spec.name, "replica-churn");
+    let doc =
+        report::churn_doc_scenario(&sc, &spec, &Runner::with_threads(2))
+            .unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        "flux-churn-v1"
+    );
+    assert_eq!(
+        doc.get("scenario").unwrap().as_str().unwrap(),
+        "h800-replica-churn"
+    );
+    // Degradation acceptance: goodput falls as intensity rises, on
+    // every method of the single H800 topology.
+    let topo = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+    for key in ["decoupled", "flux"] {
+        let curve = topo
+            .get(key)
+            .unwrap()
+            .get("curve")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        let g: Vec<f64> = curve
+            .iter()
+            .map(|p| p.get("goodput").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(
+            g[0] > g[1] && g[1] > g[2],
+            "{key}: goodput not strictly decreasing: {g:?}"
+        );
+    }
+
+    let train_path = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../artifacts/scenario_churn_train.json"
+    ));
+    let tr = Scenario::load(train_path).unwrap();
+    assert_eq!(tr.name, "nvlink-straggler-storm");
+    assert_eq!(tr.mode, Mode::Train);
+    let spec = tr.faults.as_ref().unwrap().resolved().unwrap();
+    assert_eq!(spec.name, "straggler-storm");
+    let doc =
+        report::churn_doc_scenario(&tr, &spec, &Runner::with_threads(2))
+            .unwrap();
+    assert_eq!(
+        doc.get("scenario").unwrap().as_str().unwrap(),
+        "nvlink-straggler-storm"
+    );
+    let topo = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+    for key in ["megatron", "te", "flux"] {
+        let slow = topo
+            .get(key)
+            .unwrap()
+            .get("slowdown")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(slow > 1.0, "{key}: stragglers must slow the step");
+    }
+}
+
+#[test]
 fn scenario_json_round_trips_through_the_cli_surface() {
     let sc = Scenario {
         name: "roundtrip".into(),
@@ -108,6 +270,7 @@ fn scenario_json_round_trips_through_the_cli_surface() {
         topos: Some(vec!["2-node tp8 dp2".into()]),
         workload: Some(WorkloadRef::Preset("diurnal-chat".into())),
         methods: Some(vec![Method::NonOverlap, Method::Flux]),
+        faults: None,
         quick: true,
     };
     let text = sc.to_json().to_string();

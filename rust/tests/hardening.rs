@@ -1,15 +1,16 @@
-//! DES-core hardening regressions (PR 2 satellites) that are NOT
-//! covered by the in-module unit tests: release-mode tile routing
-//! (tile_dest used to guard divisibility with `debug_assert!` only)
-//! and the batcher fairness / mid-tick-rollback contracts. The
-//! NaN-ordering, Summary-convention and backpressure cases live next
-//! to their code in `sim/engine.rs`, `util/stats.rs` and
+//! DES-core hardening regressions (PR 2 + PR 8 satellites) that are
+//! NOT covered by the in-module unit tests: release-mode tile routing
+//! (tile_dest used to guard divisibility with `debug_assert!` only),
+//! the batcher fairness / mid-tick-rollback contracts, and the
+//! fault-drain KV-block conservation flushed out by replica churn.
+//! The NaN-ordering, Summary-convention and backpressure cases live
+//! next to their code in `sim/engine.rs`, `util/stats.rs` and
 //! `serving/batcher.rs`.
 
 use flux::overlap::tiles::tile_dest;
 use flux::serving::batcher::{Batcher, BatcherConfig, Work};
 use flux::serving::kvcache::KvCacheManager;
-use flux::serving::Request;
+use flux::serving::{Request, RequestState};
 
 // -- overlap/tiles.rs: release-mode tile routing --------------------------
 
@@ -141,4 +142,76 @@ fn mid_tick_admission_failure_leaks_nothing() {
         .unwrap();
     assert!(fin.is_empty());
     kv.check_invariants().unwrap();
+}
+
+// -- serving: fault-drain KV conservation (PR 8) --------------------------
+
+#[test]
+fn drain_releases_every_kv_block_and_fails_the_requests() {
+    // A replica kill drains queue + running. Running requests hold KV
+    // blocks; a drain that forgot to release them leaked the pool, so
+    // a restarted replica ran out of blocks after a few churn cycles.
+    // Every block must return to the free list and the same
+    // batcher+pool must serve fresh work afterwards.
+    let mut b = Batcher::new(BatcherConfig::default());
+    let mut kv = KvCacheManager::new(32, 16);
+    b.submit(req(0, 16, 4));
+    b.submit(req(1, 16, 4));
+    b.submit(req(2, 16, 4));
+    match b.next_work(&mut kv).unwrap() {
+        Work::Prefill(ids) => assert_eq!(ids.len(), 3),
+        w => panic!("expected prefill, got {w:?}"),
+    }
+    assert!(kv.used_blocks() > 0, "running requests hold blocks");
+
+    let drained = b.drain(&mut kv).unwrap();
+    assert_eq!(drained, vec![0, 1, 2]);
+    assert_eq!(kv.used_blocks(), 0, "kv blocks leaked on drain");
+    kv.check_invariants().unwrap();
+    assert!(b.all_done());
+    for &id in &drained {
+        assert_eq!(
+            b.requests[id as usize].state,
+            RequestState::Failed,
+            "drained request {id} not marked failed"
+        );
+    }
+
+    // Restart reuse: the replica rejoins with the same pool and the
+    // next request admits, decodes and retires cleanly.
+    b.submit(req(3, 16, 1));
+    assert_eq!(b.next_work(&mut kv).unwrap(), Work::Prefill(vec![3]));
+    let fin = b.complete_decode(&[3], &[9], &mut kv, 2.0).unwrap();
+    assert_eq!(fin, vec![3]);
+    assert_eq!(kv.used_blocks(), 0);
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn replica_churn_conserves_requests_end_to_end() {
+    // Full-intensity replica churn on the 4-node H800 cluster: every
+    // request must end either completed or failed — none lost in a
+    // drained batcher, none double-counted after restart — and the
+    // SLO report must have observed all of them.
+    use flux::cost::arch::SCALE_H800_TP8_DP4;
+    use flux::faults::FaultSpec;
+    use flux::overlap::Method;
+    use flux::serving::scale::{run_scale_faulted, ScaleScenario};
+
+    let sc = ScaleScenario::quick(&SCALE_H800_TP8_DP4);
+    let n = sc.workload.requests_per_replica * sc.topo.dp;
+    let tl = FaultSpec::resolve("replica-churn")
+        .unwrap()
+        .expand(sc.topo.dp, 1.0);
+    for m in [Method::NonOverlap, Method::Flux] {
+        let rep = run_scale_faulted(&sc, m, &tl).unwrap();
+        assert_eq!(
+            rep.completed + rep.failed,
+            n,
+            "{m:?}: requests lost or duplicated"
+        );
+        assert!(rep.failed > 0, "{m:?}: full-intensity churn is lossy");
+        let slo = rep.slo.as_ref().expect("preset carries an SLO");
+        assert_eq!(slo.requests, n, "{m:?}: SLO missed requests");
+    }
 }

@@ -11,6 +11,7 @@
 #   BENCH_3.json  workload preset sweep       (flux-sweep-v1, byte-stable)
 #   BENCH_4.json  sweep, 1 thread vs default  (parallel determinism)
 #   BENCH_5.json  bench --wall: events/sec    (machine-local, NOT compared)
+#   BENCH_6.json  replica-churn scenario      (flux-churn-v1, byte-stable)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -49,6 +50,9 @@ flux sweep-workloads --json --quick --threads 1 --out BENCH_4.json
 flux sweep-workloads --json --quick --out BENCH_4_par.json
 cmp BENCH_4.json BENCH_4_par.json
 rm -f BENCH_4_par.json
+
+echo "== BENCH_6: replica-churn degradation curves (flux-churn-v1) =="
+stable BENCH_6.json scenario artifacts/scenario_churn_h800.json --json
 
 echo "== BENCH_5: DES engine events/sec (wall clock; not byte-compared) =="
 flux bench --json --quick --wall --out BENCH_5.json
