@@ -31,7 +31,7 @@ use anyhow::{ensure, Result};
 
 use crate::report;
 use crate::sim::trace::Trace;
-use crate::util::json::Json;
+use crate::util::json::{obj, Json};
 
 /// Output plumbing shared by every experiment invocation.
 #[derive(Clone, Debug, Default)]
@@ -42,6 +42,9 @@ pub struct ExecOpts {
     pub out: Option<PathBuf>,
     /// Chrome-trace path (single-topology scenarios only).
     pub trace: Option<PathBuf>,
+    /// Telemetry path: also write a `flux-metrics-v1` document of the
+    /// observed runs. Overrides the scenario's own `metrics` key.
+    pub metrics: Option<PathBuf>,
     /// Worker threads for the cell matrix (`None` = one per core).
     pub threads: Option<usize>,
 }
@@ -77,8 +80,19 @@ pub fn execute(sc: &Scenario, opts: &ExecOpts) -> Result<()> {
             emit(&doc, opts, report::print_train, "train")?;
         }
     }
-    if let Some(path) = &opts.trace {
-        write_trace(sc, path)?;
+    // `--metrics` beats the scenario's own `metrics` key; when both a
+    // trace and metrics are requested, one combined capture serves
+    // both files (so sampled gauges land in the trace as counters).
+    let metrics_path = opts
+        .metrics
+        .clone()
+        .or_else(|| sc.metrics.as_ref().map(PathBuf::from));
+    match (&metrics_path, &opts.trace) {
+        (Some(mp), tp) => {
+            write_metrics(sc, mp, &runner, tp.as_deref())?;
+        }
+        (None, Some(tp)) => write_trace(sc, tp)?,
+        (None, None) => {}
     }
     Ok(())
 }
@@ -174,4 +188,162 @@ fn write_trace(sc: &Scenario, path: &Path) -> Result<()> {
         path.display()
     );
     Ok(())
+}
+
+/// Build the scenario's telemetry as a `flux-metrics-v1` document:
+/// one [`crate::obs::Metrics`] registry per (topology, method) cell,
+/// filled by re-running the seeded simulations with the observer
+/// attached — like [`write_trace`], the report emitters stay untangled
+/// from the side channel. Cells run through the [`Runner`] and merge
+/// in scenario order, so the document is byte-identical at any
+/// `--threads` count. A faulted scenario observes the spec as written
+/// (intensity 1), matching the trace semantics.
+pub fn metrics_doc(sc: &Scenario, runner: &Runner) -> Result<Json> {
+    let methods = sc.method_set();
+    let spec = match &sc.faults {
+        Some(f) => Some(f.resolved()?),
+        None => None,
+    };
+    let cells_json: Vec<Json> = match sc.mode {
+        Mode::Serve => runner
+            .run_product(&sc.serve_cells()?, &methods, |c, m| {
+                observe_serve_cell(spec.as_ref(), c, *m, None)
+            })?
+            .into_iter()
+            .flatten()
+            .collect(),
+        Mode::Train => runner
+            .run_product(&sc.train_cells()?, &methods, |c, m| {
+                observe_train_cell(spec.as_ref(), c, *m, None)
+            })?
+            .into_iter()
+            .flatten()
+            .collect(),
+    };
+    Ok(metrics_doc_from_cells(sc, cells_json))
+}
+
+/// Assemble the document envelope around the observed cells
+/// (alphabetical keys, `scenario` stamped only when named).
+fn metrics_doc_from_cells(sc: &Scenario, cells: Vec<Json>) -> Json {
+    let mut fields = vec![
+        ("cells", Json::Arr(cells)),
+        ("mode", Json::from(sc.mode.name())),
+        ("quick", Json::from(sc.quick)),
+        ("schema", Json::from(report::METRICS_SCHEMA)),
+    ];
+    if !sc.name.is_empty() {
+        fields.push(("scenario", Json::from(sc.name.as_str())));
+    }
+    obj(fields)
+}
+
+/// Write the [`metrics_doc`] to `path`. When `trace_path` is also set
+/// (the `--trace --metrics` combination, single-topology by the
+/// [`execute`] check), the capture instead runs sequentially through
+/// one [`Trace`] so the sampled gauges additionally emit chrome
+/// counter (`"C"`) events, and both files come from the same runs.
+fn write_metrics(
+    sc: &Scenario,
+    path: &Path,
+    runner: &Runner,
+    trace_path: Option<&Path>,
+) -> Result<()> {
+    let doc = match trace_path {
+        None => metrics_doc(sc, runner)?,
+        Some(tp) => {
+            let methods = sc.method_set();
+            let spec = match &sc.faults {
+                Some(f) => Some(f.resolved()?),
+                None => None,
+            };
+            let mut tr = Trace::new();
+            let mut cells_json = Vec::new();
+            match sc.mode {
+                Mode::Serve => {
+                    let cells = sc.serve_cells()?;
+                    for (i, m) in methods.iter().enumerate() {
+                        let pid0 = i * cells[0].topo.dp;
+                        cells_json.push(observe_serve_cell(
+                            spec.as_ref(),
+                            &cells[0],
+                            *m,
+                            Some((&mut tr, pid0)),
+                        )?);
+                    }
+                }
+                Mode::Train => {
+                    let cells = sc.train_cells()?;
+                    for (i, m) in methods.iter().enumerate() {
+                        let pid0 = i * cells[0].topo.pp;
+                        cells_json.push(observe_train_cell(
+                            spec.as_ref(),
+                            &cells[0],
+                            *m,
+                            Some((&mut tr, pid0)),
+                        )?);
+                    }
+                }
+            }
+            tr.write(tp)?;
+            println!(
+                "wrote chrome trace ({} events) to {}",
+                tr.len(),
+                tp.display()
+            );
+            metrics_doc_from_cells(sc, cells_json)
+        }
+    };
+    let n_cells = doc.get("cells")?.as_arr()?.len();
+    crate::util::fsio::write_text(path, &doc.to_string())?;
+    println!("wrote metrics ({n_cells} cells) to {}", path.display());
+    Ok(())
+}
+
+/// One observed serve cell of the metrics document: fresh registry
+/// seeded by the cell's own seed, faulted scenarios at intensity 1.
+fn observe_serve_cell(
+    spec: Option<&crate::faults::FaultSpec>,
+    cell: &crate::serving::scale::ScaleScenario,
+    m: crate::overlap::Method,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<Json> {
+    let tl = spec.map(|s| s.expand(cell.topo.dp, 1.0));
+    let faults = tl.as_ref().filter(|t| !t.is_empty());
+    let mut metrics = crate::obs::Metrics::new(cell.seed);
+    crate::serving::scale::run_scale_observed(
+        cell,
+        m,
+        faults,
+        trace,
+        Some(&mut metrics),
+    )?;
+    Ok(metrics.to_json_with(vec![
+        ("method", Json::from(m.key())),
+        ("topology", Json::from(cell.topo.name)),
+    ]))
+}
+
+/// One observed train cell: like [`observe_serve_cell`] but the fault
+/// spec expands over pipeline stages.
+fn observe_train_cell(
+    spec: Option<&crate::faults::FaultSpec>,
+    cell: &crate::training::TrainScenario,
+    m: crate::overlap::Method,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<Json> {
+    let tl = spec.map(|s| s.expand(cell.topo.pp, 1.0));
+    let faults = tl.as_ref().filter(|t| !t.is_empty());
+    let mut metrics = crate::obs::Metrics::new(cell.seed);
+    crate::training::run_train_observed(
+        cell,
+        m,
+        faults,
+        trace,
+        Some(&mut metrics),
+    )?;
+    Ok(metrics.to_json_with(vec![
+        ("method", Json::from(m.key())),
+        ("topology", Json::from(cell.topo.name)),
+    ]))
 }

@@ -93,6 +93,11 @@ pub struct Scenario {
     /// the `flux-churn-v1` degradation document; absence keeps every
     /// historical document byte-identical.
     pub faults: Option<FaultsRef>,
+    /// Optional telemetry output path: when set, executing the
+    /// scenario also writes a `flux-metrics-v1` document there (the
+    /// `--metrics <path>` CLI flag overrides it). Absence keeps every
+    /// run byte-identical to the pre-observability binary.
+    pub metrics: Option<String>,
     pub quick: bool,
 }
 
@@ -110,6 +115,7 @@ impl Scenario {
             workload: workload.map(WorkloadRef::Inline),
             methods: None,
             faults: None,
+            metrics: None,
             quick,
         }
     }
@@ -126,6 +132,7 @@ impl Scenario {
             workload: None,
             methods: None,
             faults: None,
+            metrics: None,
             quick,
         }
     }
@@ -391,6 +398,9 @@ impl Scenario {
         if let Some(f) = &self.faults {
             fields.push(("faults", f.to_json()));
         }
+        if let Some(p) = &self.metrics {
+            fields.push(("metrics", Json::from(p.as_str())));
+        }
         obj(fields)
     }
 
@@ -431,6 +441,18 @@ impl Scenario {
                 Some(f) => Some(
                     FaultsRef::from_json(f).with_context(ctx)?,
                 ),
+                None => None,
+            },
+            metrics: match j.opt("metrics") {
+                Some(p) => {
+                    let p = p.as_str().with_context(ctx)?;
+                    ensure!(
+                        !p.is_empty(),
+                        "{}: \"metrics\" path must be non-empty",
+                        ctx()
+                    );
+                    Some(p.to_string())
+                }
                 None => None,
             },
             methods: match j.opt("methods") {
@@ -543,6 +565,7 @@ mod tests {
                 Method::Flux,
             ]),
             faults: None,
+            metrics: None,
             quick: true,
         }
     }
@@ -579,6 +602,7 @@ mod tests {
                 workload: None,
                 methods: None,
                 faults: None,
+                metrics: Some("out/metrics.json".into()),
                 quick: false,
             },
         ] {

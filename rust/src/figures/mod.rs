@@ -411,6 +411,61 @@ pub fn fig19_churn() -> Table {
      rows)
 }
 
+/// Time-series figure: the churn scenario observed through the obs
+/// layer — per serve method, how replica-0 queue depth, replica-0 KV
+/// occupancy and the routable-DP count evolve on the seeded
+/// virtual-time sampling cadence. The full per-cell document is
+/// `flux scenario artifacts/scenario_churn_h800.json --metrics <path>`
+/// (schema flux-metrics-v1); this is the table-sized cut.
+pub fn fig20_timeseries() -> Table {
+    use crate::cost::arch::SCALE_H800_TP8_DP4;
+    use crate::obs::Metrics;
+    use crate::serving::scale::{run_scale_observed, ScaleScenario};
+    let mut rows = Vec::new();
+    if let Some(spec) = crate::faults::preset("replica-churn") {
+        let topo = &SCALE_H800_TP8_DP4;
+        let sc = ScaleScenario::quick(topo);
+        let tl = spec.expand(topo.dp, 1.0);
+        for m in Method::SERVE_SET {
+            let mut metrics = Metrics::new(sc.seed);
+            let faults = (!tl.is_empty()).then_some(&tl);
+            if run_scale_observed(&sc, m, faults, None, Some(&mut metrics))
+                .is_err()
+            {
+                continue;
+            }
+            for (metric, labels, pts) in metrics.series_iter() {
+                let keep = match metric {
+                    "serve.active_dp" => true,
+                    "serve.queue_depth" | "serve.kv_used_blocks" => {
+                        labels.get("replica").is_some_and(|r| r == "0")
+                    }
+                    _ => false,
+                };
+                if !keep || pts.is_empty() {
+                    continue;
+                }
+                let peak = pts
+                    .iter()
+                    .map(|&(_, v)| v)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let (t_last, last) = pts[pts.len() - 1];
+                rows.push(vec![
+                    m.serve_label().to_string(),
+                    metric.to_string(),
+                    pts.len().to_string(),
+                    format!("{peak:.0}"),
+                    format!("{last:.0}"),
+                    ms(t_last),
+                ]);
+            }
+        }
+    }
+    ("Fig 20: churn time series (H800 DP4, sampled virtual-time gauges)",
+     vec!["method", "metric", "samples", "peak", "last", "t_last ms"],
+     rows)
+}
+
 /// Fig. 17: decoding, batch 64 / 512.
 pub fn fig17() -> Table {
     let mut rows = Vec::new();
@@ -500,6 +555,7 @@ pub fn all() -> Vec<Table> {
         fig17(),
         fig18_workloads(),
         fig19_churn(),
+        fig20_timeseries(),
     ]
 }
 
@@ -523,6 +579,17 @@ mod tests {
         assert_eq!(t.2.len(), 2, "one row per serve method");
         for row in &t.2 {
             assert_eq!(row.len(), t.1.len(), "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn timeseries_figure_samples_every_tracked_gauge() {
+        let t = fig20_timeseries();
+        assert_eq!(t.2.len(), 6, "3 series per serve method: {:?}", t.2);
+        for row in &t.2 {
+            assert_eq!(row.len(), t.1.len(), "row {row:?}");
+            let samples: usize = row[2].parse().unwrap();
+            assert!(samples > 3, "series under-sampled: {row:?}");
         }
     }
 

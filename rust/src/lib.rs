@@ -21,6 +21,7 @@ pub mod collectives;
 pub mod exp;
 pub mod faults;
 pub mod goldens;
+pub mod obs;
 pub mod overlap;
 pub mod figures;
 pub mod report;

@@ -9,6 +9,7 @@
 //!   sweep-workloads  workload preset x topology serving matrix
 //!   scenario     run a declarative experiment file (exp::Scenario)
 //!   list         topologies, workload presets, methods, schemas
+//!   schema       typed field catalog of one report schema
 //!   gen-goldens  emit artifacts/golden_swizzle.json hermetically (no JAX)
 //!   bench        run the pinned-seed suite; --json writes BENCH_<n>.json
 //!
@@ -68,7 +69,11 @@ COMMANDS:
                    for flux-churn-v1 degradation curves,
                    [--trace <path>] (with --topo)
                    dumps the DES event stream as chrome://tracing
-                   JSON, [--threads <n>] caps the parallel cell
+                   JSON, [--metrics <path>] writes the byte-stable
+                   flux-metrics-v1 telemetry of the observed runs
+                   (virtual-time counters/gauges/series; combinable
+                   with --trace for chrome counter lanes),
+                   [--threads <n>] caps the parallel cell
                    workers (output is byte-identical at any count),
                    [--json] writes the byte-stable flux-scale-v2
                    report ([--out <path>], default BENCH_<n>.json)
@@ -77,7 +82,8 @@ COMMANDS:
                    NIC links, DP all-reduce streamed behind backward;
                    megatron vs TE vs flux per topology); same
                    [--topo] [--quick] [--json] [--out] [--trace]
-                   [--threads] flags, report schema flux-train-v1;
+                   [--metrics] [--threads] flags, report schema
+                   flux-train-v1;
                    [--faults] applies straggler/NIC specs per
                    pipeline stage (kills have no training analogue)
     tune         auto-tune one problem, print the winning config
@@ -97,12 +103,18 @@ COMMANDS:
                    flux-sweep-v1 report ([--out <path>])
     scenario     run a declarative experiment file:
                    flux scenario <file.json> [--quick] [--json]
-                   [--out <path>] [--trace <path>] [--threads <n>]
+                   [--out <path>] [--trace <path>] [--metrics <path>]
+                   [--threads <n>]
                    (see `flux list` for the names a file can use and
-                   artifacts/scenario_*.json for checked-in examples)
+                   artifacts/scenario_*.json for checked-in examples;
+                   a \"metrics\" key in the file sets the default
+                   telemetry path, --metrics overrides it)
     list         print the registries scenarios draw from: serving +
                    training topologies, workload presets, overlap
                    methods, fault presets, report schemas
+    schema       print the typed field catalog of one report schema:
+                   flux schema <name> [--json]
+                   (names come from `flux list`, e.g. flux-metrics-v1)
     gen-goldens  emit the cross-language golden file from the Rust tile
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
@@ -175,6 +187,7 @@ fn main() -> Result<()> {
             cmd_scenario(&Args::parse(rest(), &["json", "quick"])?)
         }
         "list" => cmd_list(),
+        "schema" => cmd_schema(&Args::parse(rest(), &["json"])?),
         "tune" => cmd_tune(&Args::parse(rest(), &["verbose"])?),
         "train" => cmd_train(&Args::parse(rest(), &["verbose"])?),
         "serve" => cmd_serve(&Args::parse(rest(), &["verbose"])?),
@@ -185,7 +198,7 @@ fn main() -> Result<()> {
         "lint" => cmd_lint(&Args::parse(rest(), &["json"])?),
         other => bail!(
             "unknown command {other:?}; try figures|simulate|\
-             sweep-workloads|scenario|list|tune|train|serve|\
+             sweep-workloads|scenario|list|schema|tune|train|serve|\
              gen-goldens|bench|lint (or --help)"
         ),
     }
@@ -247,14 +260,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The shared output flags (`--json`/`--out`/`--trace`/`--threads`)
-/// as [`ExecOpts`]. `--out` implies a JSON file report.
+/// The shared output flags (`--json`/`--out`/`--trace`/`--metrics`/
+/// `--threads`) as [`ExecOpts`]. `--out` implies a JSON file report.
 fn exec_opts(args: &Args) -> Result<ExecOpts> {
     let out = args.get("out").map(std::path::PathBuf::from);
     Ok(ExecOpts {
         json: args.has("json") || out.is_some(),
         out,
         trace: args.get("trace").map(std::path::PathBuf::from),
+        metrics: args.get("metrics").map(std::path::PathBuf::from),
         threads: match args.get("threads") {
             Some(s) => Some(
                 s.parse()
@@ -348,12 +362,17 @@ fn cmd_simulate_scale(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.keys().find(|k| {
         !matches!(
             k.as_str(),
-            "out" | "topo" | "workload" | "faults" | "trace" | "threads"
+            "out" | "topo"
+                | "workload"
+                | "faults"
+                | "trace"
+                | "metrics"
+                | "threads"
         )
     }) {
         bail!("--{k} is not supported with --scale (only --topo, \
-               --workload, --faults, --trace, --threads, --quick, \
-               --json, --out)");
+               --workload, --faults, --trace, --metrics, --threads, \
+               --quick, --json, --out)");
     }
     let quick = args.has("quick");
     let workload = match args.get("workload") {
@@ -390,11 +409,12 @@ fn cmd_simulate_train(args: &Args) -> Result<()> {
     if let Some(k) = args.flags.keys().find(|k| {
         !matches!(
             k.as_str(),
-            "out" | "topo" | "faults" | "trace" | "threads"
+            "out" | "topo" | "faults" | "trace" | "metrics" | "threads"
         )
     }) {
         bail!("--{k} is not supported with --train (only --topo, \
-               --faults, --trace, --threads, --quick, --json, --out)");
+               --faults, --trace, --metrics, --threads, --quick, \
+               --json, --out)");
     }
     let mut scenario =
         Scenario::train_cli(args.get("topo"), args.has("quick"))?;
@@ -413,27 +433,47 @@ fn faults_flag(args: &Args) -> Result<Option<flux::faults::FaultsRef>> {
     })
 }
 
+/// `flux schema <name>`: the typed field catalog of one registered
+/// report schema (`--json` emits the byte-stable dump).
+fn cmd_schema(args: &Args) -> Result<()> {
+    if let Some(k) = args.flags.keys().next() {
+        bail!("--{k} is not a schema flag (only --json)");
+    }
+    let name = match args.positional.as_slice() {
+        [n] => n,
+        _ => bail!(
+            "usage: flux schema <name> [--json] (`flux list` prints \
+             the registered schema names)"
+        ),
+    };
+    if args.has("json") {
+        println!("{}", flux::report::schema_dump(name)?);
+    } else {
+        flux::report::print_schema(name)?;
+    }
+    Ok(())
+}
+
 /// `flux scenario <file.json>`: run a checked-in declarative
 /// experiment.
 fn cmd_scenario(args: &Args) -> Result<()> {
     // The file owns topology/workload/method selection: reject the
     // sweep flags instead of silently ignoring an attempted override.
-    if let Some(k) = args
-        .flags
-        .keys()
-        .find(|k| !matches!(k.as_str(), "out" | "trace" | "threads"))
-    {
+    if let Some(k) = args.flags.keys().find(|k| {
+        !matches!(k.as_str(), "out" | "trace" | "metrics" | "threads")
+    }) {
         bail!(
             "--{k} is not a scenario flag (only --quick, --json, \
-             --out, --trace, --threads); topologies, workload and \
-             methods come from the file"
+             --out, --trace, --metrics, --threads); topologies, \
+             workload and methods come from the file"
         );
     }
     let path = match args.positional.as_slice() {
         [p] => p,
         _ => bail!(
             "usage: flux scenario <file.json> [--quick] [--json] \
-             [--out <path>] [--trace <path>] [--threads <n>]"
+             [--out <path>] [--trace <path>] [--metrics <path>] \
+             [--threads <n>]"
         ),
     };
     let mut scenario = Scenario::load(std::path::Path::new(path))?;
@@ -495,7 +535,7 @@ fn cmd_list() -> Result<()> {
             spec.resizes.len()
         );
     }
-    println!("\nreport schemas:");
+    println!("\nreport schemas (flux schema <name> for the fields):");
     for s in flux::report::SCHEMAS {
         println!("  {:<15} {:<32} {}", s.name, s.command, s.summary);
     }

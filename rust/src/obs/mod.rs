@@ -1,0 +1,454 @@
+//! Deterministic telemetry on virtual DES time.
+//!
+//! A [`Metrics`] registry collects counters, gauges, fixed-bucket
+//! histograms, sampled time series and instant markers, all keyed by
+//! `(metric, labels)` with `BTreeMap` label sets so emission order is
+//! total and byte-stable. Every timestamp is *simulated* nanoseconds —
+//! wall clock never enters (flux-lint D003 stays law), and the
+//! [`Sampler`] cadence jitter comes from the seeded `util::prng`
+//! stream (D004), so two runs of the same scenario produce
+//! byte-identical `flux-metrics-v1` documents at any `--threads`.
+//!
+//! The handle is threaded through the simulators as
+//! `Option<&mut Metrics>`: when `None`, instrumentation collapses to a
+//! branch per site and the simulation arithmetic is untouched — the
+//! compat tests pin that report bytes do not move when metrics are on,
+//! because the registry only ever *reads* simulator state.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{obj, Json};
+use crate::util::prng::Rng;
+
+/// Label set: sorted, so `(metric, labels)` keys have a total order.
+pub type Labels = BTreeMap<String, String>;
+
+/// Build a label set from `(key, value)` pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// The one-label-set most metrics use: a replica index.
+pub fn replica(r: usize) -> Labels {
+    labels(&[("replica", &r.to_string())])
+}
+
+/// A stage index label (training pipeline).
+pub fn stage(s: usize) -> Labels {
+    labels(&[("stage", &s.to_string())])
+}
+
+/// Fixed histogram buckets for TTFT/latency observations, in ns.
+/// Powers-of-4 from 1 µs to ~17 s: coarse, but scale-free across the
+/// quick and full workloads.
+pub const LATENCY_BOUNDS_NS: [f64; 13] = [
+    1e3, 4e3, 1.6e4, 6.4e4, 2.56e5, 1.024e6, 4.096e6, 1.6384e7,
+    6.5536e7, 2.62144e8, 1.048576e9, 4.194304e9, 1.6777216e10,
+];
+
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    metric: String,
+    labels: Labels,
+}
+
+impl Key {
+    fn new(metric: &str, labels: Labels) -> Self {
+        Key { metric: metric.to_string(), labels }
+    }
+
+    fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        let lab = Json::Obj(
+            self.labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        );
+        vec![
+            ("labels", lab),
+            ("metric", Json::Str(self.metric.clone())),
+        ]
+    }
+}
+
+/// Fixed-bucket histogram: `counts[i]` holds observations `<=
+/// bounds[i]` (and above the previous bound); one overflow bucket at
+/// the end. Bounds are fixed at the first observation.
+#[derive(Clone, Debug)]
+struct Hist {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Hist {
+    fn new(bounds: &[f64]) -> Self {
+        Hist {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+}
+
+/// Seeded-cadence sampler: fires roughly every `period` ns of virtual
+/// time, with deterministic jitter in `[0.75, 1.25) * period` drawn
+/// from the seeded PRNG, so sample trains never alias onto the
+/// simulators' own periodic event patterns.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    next: f64,
+    period: f64,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(seed: u64, period_ns: f64) -> Self {
+        assert!(period_ns.is_finite() && period_ns > 0.0);
+        Sampler { next: 0.0, period: period_ns, rng: Rng::new(seed) }
+    }
+
+    /// If a sample is due at virtual time `now`, return the sample
+    /// timestamp (== `now`: DES state is only observable at event
+    /// boundaries) and advance the cadence past `now`. Otherwise
+    /// `None`. Monotone `now` in, strictly increasing timestamps out.
+    pub fn due(&mut self, now: f64) -> Option<f64> {
+        if now < self.next {
+            return None;
+        }
+        while self.next <= now {
+            self.next += self.period * (0.75 + 0.5 * self.rng.f64());
+        }
+        Some(now)
+    }
+}
+
+/// The registry: every telemetry primitive the simulators record into.
+///
+/// All mutation is append/accumulate; emission sorts nothing at
+/// write-time because the `BTreeMap` keys already carry the
+/// `(metric, labels)` order and series points append in virtual-time
+/// order.
+#[derive(Debug)]
+pub struct Metrics {
+    counters: BTreeMap<Key, f64>,
+    gauges: BTreeMap<Key, f64>,
+    hists: BTreeMap<Key, Hist>,
+    series: BTreeMap<Key, Vec<(f64, f64)>>,
+    markers: Vec<(f64, String, Labels)>,
+    sampler: Sampler,
+}
+
+/// Default sampling cadence: 10 ms of virtual time. The quick
+/// scenarios span a few hundred ms, so a run yields tens of points per
+/// series — enough for a time-series figure, small enough to check the
+/// churn run's document into git.
+pub const DEFAULT_PERIOD_NS: f64 = 1.0e7;
+
+impl Metrics {
+    pub fn new(seed: u64) -> Self {
+        Metrics::with_period(seed, DEFAULT_PERIOD_NS)
+    }
+
+    pub fn with_period(seed: u64, period_ns: f64) -> Self {
+        Metrics {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            series: BTreeMap::new(),
+            markers: Vec::new(),
+            sampler: Sampler::new(seed, period_ns),
+        }
+    }
+
+    /// Forward to the sampler: `Some(t)` when a gauge snapshot is due.
+    pub fn sample_due(&mut self, now: f64) -> Option<f64> {
+        self.sampler.due(now)
+    }
+
+    /// Add `v` to a monotone counter.
+    pub fn add(&mut self, metric: &str, labels: Labels, v: f64) {
+        *self.counters.entry(Key::new(metric, labels)).or_insert(0.0) +=
+            v;
+    }
+
+    /// Increment a counter by one.
+    pub fn inc(&mut self, metric: &str, labels: Labels) {
+        self.add(metric, labels, 1.0);
+    }
+
+    /// Set a last-value gauge.
+    pub fn gauge(&mut self, metric: &str, labels: Labels, v: f64) {
+        self.gauges.insert(Key::new(metric, labels), v);
+    }
+
+    /// Observe `v` into the fixed-bucket histogram for this key;
+    /// `bounds` only takes effect on the key's first observation.
+    pub fn observe(
+        &mut self,
+        metric: &str,
+        labels: Labels,
+        bounds: &[f64],
+        v: f64,
+    ) {
+        self.hists
+            .entry(Key::new(metric, labels))
+            .or_insert_with(|| Hist::new(bounds))
+            .observe(v);
+    }
+
+    /// Append a `(t, v)` point to a sampled time series. Callers feed
+    /// monotone `t` (the sampler guarantees it), keeping each series
+    /// sorted by time without a sort at emission.
+    pub fn point(&mut self, t: f64, metric: &str, labels: Labels, v: f64) {
+        self.series
+            .entry(Key::new(metric, labels))
+            .or_default()
+            .push((t, v));
+    }
+
+    /// Record an instant marker (fault activations).
+    pub fn marker(&mut self, t: f64, name: &str, labels: Labels) {
+        self.markers.push((t, name.to_string(), labels));
+    }
+
+    /// Iterate sampled series as `(metric, labels, points)` — the
+    /// chrome-trace counter-track emission reads this.
+    pub fn series_iter(
+        &self,
+    ) -> impl Iterator<Item = (&str, &Labels, &[(f64, f64)])> {
+        self.series
+            .iter()
+            .map(|(k, pts)| (k.metric.as_str(), &k.labels, &pts[..]))
+    }
+
+    /// The registry as one `flux-metrics-v1` cell body: alphabetical
+    /// keys, series sorted by `(metric, labels, t)`.
+    pub fn to_json(&self) -> Json {
+        obj(self.json_fields())
+    }
+
+    /// [`Self::to_json`] with extra top-level entries (the cell's
+    /// `method`/`topology` stamps) merged in — alphabetical-key order
+    /// comes out of the `obj` builder regardless.
+    pub fn to_json_with(
+        &self,
+        mut extra: Vec<(&'static str, Json)>,
+    ) -> Json {
+        let mut fields = self.json_fields();
+        fields.append(&mut extra);
+        obj(fields)
+    }
+
+    fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        let counters: Vec<Json> = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let mut f = k.json_fields();
+                f.push(("value", Json::Num(*v)));
+                obj(f)
+            })
+            .collect();
+        let gauges: Vec<Json> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| {
+                let mut f = k.json_fields();
+                f.push(("value", Json::Num(*v)));
+                obj(f)
+            })
+            .collect();
+        let hists: Vec<Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let mut f = k.json_fields();
+                f.push((
+                    "bounds",
+                    Json::Arr(
+                        h.bounds.iter().map(|&b| Json::Num(b)).collect(),
+                    ),
+                ));
+                f.push((
+                    "counts",
+                    Json::Arr(
+                        h.counts
+                            .iter()
+                            .map(|&c| Json::Num(c as f64))
+                            .collect(),
+                    ),
+                ));
+                f.push(("sum", Json::Num(h.sum)));
+                f.push(("total", Json::Num(h.total as f64)));
+                obj(f)
+            })
+            .collect();
+        let markers: Vec<Json> = self
+            .markers
+            .iter()
+            .map(|(t, name, lab)| {
+                obj(vec![
+                    (
+                        "labels",
+                        Json::Obj(
+                            lab.iter()
+                                .map(|(k, v)| {
+                                    (k.clone(), Json::Str(v.clone()))
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("name", Json::Str(name.clone())),
+                    ("t", Json::Num(*t)),
+                ])
+            })
+            .collect();
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|(k, pts)| {
+                let mut f = k.json_fields();
+                f.push((
+                    "points",
+                    Json::Arr(
+                        pts.iter()
+                            .map(|&(t, v)| {
+                                Json::Arr(vec![
+                                    Json::Num(t),
+                                    Json::Num(v),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+                obj(f)
+            })
+            .collect();
+        vec![
+            ("counters", Json::Arr(counters)),
+            ("gauges", Json::Arr(gauges)),
+            ("histograms", Json::Arr(hists)),
+            ("markers", Json::Arr(markers)),
+            ("series", Json::Arr(series)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_emit_in_metric_then_label_order() {
+        let mut m = Metrics::new(1);
+        m.inc("b.z", labels(&[]));
+        m.inc("a.q", replica(1));
+        m.inc("a.q", replica(0));
+        let doc = m.to_json();
+        let counters = doc.get("counters").unwrap().as_arr().unwrap();
+        let names: Vec<String> = counters
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}{}",
+                    c.get("metric").unwrap().as_str().unwrap(),
+                    c.get("labels").unwrap().to_string()
+                )
+            })
+            .collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "emission must be pre-sorted");
+        assert_eq!(counters.len(), 3);
+    }
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut m = Metrics::new(1);
+        m.add("c", labels(&[]), 2.0);
+        m.inc("c", labels(&[]));
+        m.gauge("g", labels(&[]), 5.0);
+        m.gauge("g", labels(&[]), 7.0);
+        let doc = m.to_json();
+        let c = &doc.get("counters").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c.get("value").unwrap().as_f64().unwrap(), 3.0);
+        let g = &doc.get("gauges").unwrap().as_arr().unwrap()[0];
+        assert_eq!(g.get("value").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_free_and_fixed() {
+        let mut m = Metrics::new(1);
+        let bounds = [10.0, 100.0];
+        for v in [1.0, 5.0, 50.0, 500.0] {
+            m.observe("h", labels(&[]), &bounds, v);
+        }
+        let doc = m.to_json();
+        let h = &doc.get("histograms").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            h.get("counts").unwrap().f64_vec().unwrap(),
+            vec![2.0, 1.0, 1.0]
+        );
+        assert_eq!(h.get("total").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(h.get("sum").unwrap().as_f64().unwrap(), 556.0);
+    }
+
+    #[test]
+    fn sampler_is_seed_deterministic_and_monotone() {
+        let run = |seed| {
+            let mut s = Sampler::new(seed, 10.0);
+            let mut out = Vec::new();
+            let mut t = 0.0;
+            while t < 200.0 {
+                if let Some(at) = s.due(t) {
+                    out.push(at);
+                }
+                t += 3.0;
+            }
+            out
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed, same cadence");
+        assert!(a.len() > 5, "samples fired: {a:?}");
+        assert!(
+            a.windows(2).all(|w| w[0] < w[1]),
+            "strictly increasing: {a:?}"
+        );
+        assert_ne!(a, run(8), "different seed, different jitter");
+    }
+
+    #[test]
+    fn sampler_skips_past_large_time_jumps() {
+        let mut s = Sampler::new(1, 10.0);
+        assert!(s.due(0.0).is_some());
+        // A jump over many periods yields ONE sample, not a backlog.
+        assert_eq!(s.due(1000.0), Some(1000.0));
+        assert_eq!(s.due(1000.0), None, "cadence advanced past now");
+    }
+
+    #[test]
+    fn series_points_preserve_time_order_and_json_is_stable() {
+        let mut m = Metrics::new(3);
+        m.point(1.0, "s", replica(0), 4.0);
+        m.point(2.0, "s", replica(0), 5.0);
+        m.marker(1.5, "fault.kill", replica(0));
+        let a = m.to_json().to_string();
+        assert!(a.contains("\"points\":[[1,4],[2,5]]"), "{a}");
+        assert!(a.contains("fault.kill"), "{a}");
+        // Re-emission is byte-identical.
+        assert_eq!(a, m.to_json().to_string());
+    }
+}

@@ -24,6 +24,7 @@
 mod bench;
 mod churn;
 mod scale;
+mod schema;
 mod sweep;
 mod train;
 
@@ -36,6 +37,7 @@ pub use scale::{
     print_scale, scale_doc, scale_doc_for, scale_doc_scenario,
     scale_doc_with,
 };
+pub use schema::{print_schema, schema_dump};
 pub use sweep::{print_sweep, sweep_doc, sweep_doc_with};
 pub use train::{
     print_train, train_doc, train_doc_for, train_doc_scenario,
@@ -68,6 +70,13 @@ pub const SWEEP_SCHEMA: &str = "flux-sweep-v1";
 /// x topology x fault intensity. Intensity 0 reproduces the
 /// fault-free flux-scale-v2 / flux-train-v1 numbers bit-for-bit.
 pub const CHURN_SCHEMA: &str = "flux-churn-v1";
+/// Schema of the `flux simulate --scale|--train --metrics <path>` /
+/// `flux scenario <file> --metrics <path>` telemetry document: per
+/// (topology, method) cell, the deterministic counters / gauges /
+/// histograms / fault markers / sampled time series recorded against
+/// virtual DES time. Byte-stable at any `--threads`, like every other
+/// schema.
+pub const METRICS_SCHEMA: &str = "flux-metrics-v1";
 
 /// One emitted schema, for `flux list` discoverability.
 #[derive(Clone, Copy, Debug)]
@@ -79,7 +88,7 @@ pub struct SchemaInfo {
 }
 
 /// Every document schema the CLI can emit, in trajectory order.
-pub const SCHEMAS: [SchemaInfo; 5] = [
+pub const SCHEMAS: [SchemaInfo; 6] = [
     SchemaInfo {
         name: SCHEMA,
         command: "flux bench --json",
@@ -104,6 +113,11 @@ pub const SCHEMAS: [SchemaInfo; 5] = [
         name: CHURN_SCHEMA,
         command: "flux simulate --scale --faults <preset> --json",
         summary: "goodput/step-time degradation under seeded faults",
+    },
+    SchemaInfo {
+        name: METRICS_SCHEMA,
+        command: "flux simulate --scale|--train --metrics <path>",
+        summary: "virtual-time telemetry: counters, gauges, series",
     },
 ];
 
@@ -209,7 +223,8 @@ mod tests {
                 SCALE_SCHEMA,
                 TRAIN_SCHEMA,
                 SWEEP_SCHEMA,
-                CHURN_SCHEMA
+                CHURN_SCHEMA,
+                METRICS_SCHEMA
             ]
         );
         for s in SCHEMAS {

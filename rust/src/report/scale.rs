@@ -289,6 +289,7 @@ mod tests {
                 Method::Flux,
             ]),
             faults: None,
+            metrics: None,
             quick: true,
         };
         let doc =

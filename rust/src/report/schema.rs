@@ -1,0 +1,287 @@
+//! Self-describing schema dumps: `flux schema <name>` prints a typed
+//! field catalog for any registered report schema (à la
+//! cargo-dist-schema's typed JSON reports — the remaining half of
+//! ROADMAP item 5's tooling).
+//!
+//! The catalogs are hand-authored against the emitters; the registry
+//! test pins that every [`super::SCHEMAS`] entry has one, and the CLI
+//! smoke test exercises the command surface. Field paths use `[]` for
+//! array elements (`topologies[].speedup`).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{obj, Json};
+
+/// One documented field of a report schema.
+struct Field {
+    /// Dotted path from the document root; `[]` marks array elements.
+    path: &'static str,
+    /// JSON type: `string`, `number`, `bool`, `object`, `array[...]`.
+    ty: &'static str,
+    doc: &'static str,
+}
+
+const fn f(
+    path: &'static str,
+    ty: &'static str,
+    doc: &'static str,
+) -> Field {
+    Field { path, ty, doc }
+}
+
+const COMMON: [Field; 2] = [
+    f("schema", "string", "schema name + version of this document"),
+    f("quick", "bool", "true when run with the trimmed quick sweep"),
+];
+
+const BENCH_FIELDS: [Field; 7] = [
+    f("model", "string", "transformer config the op shapes come from"),
+    f("suite", "array[object]", "one cell per (cluster, op, m) point"),
+    f("suite[].cluster", "string", "GPU cluster the cell is costed on"),
+    f("suite[].op", "string", "fused op under test (ag_gemm/gemm_rs)"),
+    f(
+        "suite[].flux.overlap_eff_pct",
+        "number",
+        "Eq. 2 overlap efficiency of the tuned flux kernel, percent",
+    ),
+    f(
+        "events_per_sec",
+        "object",
+        "DES engine hold-workload throughput section (deterministic \
+         counters; wall-clock only under --wall)",
+    ),
+    f(
+        "events_per_sec.cells[].checksum",
+        "string",
+        "order-sensitive event-stream checksum (determinism witness)",
+    ),
+];
+
+const SCALE_FIELDS: [Field; 9] = [
+    f("model", "string", "transformer config being served"),
+    f("topologies", "array[object]", "one cell per serving topology"),
+    f("topologies[].topology", "string", "topology registry name"),
+    f("topologies[].workload", "object", "resolved workload spec"),
+    f(
+        "topologies[].speedup",
+        "number",
+        "decoupled/flux makespan ratio (throughput speedup)",
+    ),
+    f(
+        "topologies[].<method>",
+        "object",
+        "per-method block (decoupled/medium/flux): completed, tokens, \
+         makespan_ns, ttft_ns, per_token_ns, latency_ns, slo",
+    ),
+    f(
+        "topologies[].<method>.ttft_ns",
+        "object",
+        "time-to-first-token percentiles p50/p95/p99, ns",
+    ),
+    f("topo_filter", "string|array", "present when --topo filtered"),
+    f("scenario", "string", "present when run from a scenario file"),
+];
+
+const TRAIN_FIELDS: [Field; 7] = [
+    f("model", "string", "transformer config being trained"),
+    f("topologies", "array[object]", "one cell per train topology"),
+    f("topologies[].gpus", "number", "dp * pp * tp GPUs in the cell"),
+    f(
+        "topologies[].<method>",
+        "object",
+        "per-method block (megatron/te/flux): step_ns, pipe_ns, \
+         bubble_fraction, dp_exposed_ns, overlap_eff_pct, events",
+    ),
+    f("topologies[].<method>.step_ns", "number", "event-driven 1F1B step time, ns"),
+    f("topologies[].speedup", "number", "megatron/flux step-time ratio"),
+    f(
+        "topologies[].ideal_step_ns",
+        "number",
+        "communication-free floor (Eq. 2 denominator)",
+    ),
+];
+
+const SWEEP_FIELDS: [Field; 4] = [
+    f("model", "string", "transformer config being served"),
+    f("presets", "array[object]", "one block per workload preset"),
+    f("presets[].workload", "object", "the preset's resolved spec"),
+    f(
+        "presets[].topologies[].speedup",
+        "number",
+        "decoupled/flux makespan ratio on that topology",
+    ),
+];
+
+const CHURN_FIELDS: [Field; 6] = [
+    f("faults", "object", "the expanded fault spec (seed included)"),
+    f("topologies", "array[object]", "one cell per topology"),
+    f(
+        "topologies[].<method>.curve",
+        "array[object]",
+        "degradation curve: one point per fault intensity",
+    ),
+    f(
+        "topologies[].<method>.curve[].intensity",
+        "number",
+        "fault-spec intensity knob (0 = fault-free replay)",
+    ),
+    f(
+        "topologies[].<method>.curve[].goodput",
+        "number",
+        "SLO-attained goodput at that intensity (serve mode)",
+    ),
+    f(
+        "topologies[].<method>.slowdown",
+        "number",
+        "step-time inflation at max intensity (train mode)",
+    ),
+];
+
+const METRICS_FIELDS: [Field; 10] = [
+    f("mode", "string", "serve or train"),
+    f("scenario", "string", "present when run from a scenario file"),
+    f(
+        "cells",
+        "array[object]",
+        "one registry per (topology, method) observed run, in \
+         scenario cell × method-registry order",
+    ),
+    f("cells[].method", "string", "overlap method key of the run"),
+    f("cells[].topology", "string", "topology registry name"),
+    f(
+        "cells[].counters",
+        "array[object]",
+        "monotone counters {metric, labels, value}, sorted by \
+         (metric, labels)",
+    ),
+    f(
+        "cells[].gauges",
+        "array[object]",
+        "last-value gauges {metric, labels, value}",
+    ),
+    f(
+        "cells[].histograms",
+        "array[object]",
+        "fixed-bucket histograms {metric, labels, bounds, counts, \
+         sum, total}; counts has one overflow bucket past bounds",
+    ),
+    f(
+        "cells[].markers",
+        "array[object]",
+        "instant fault markers {name, labels, t} in record order",
+    ),
+    f(
+        "cells[].series",
+        "array[object]",
+        "sampled time series {metric, labels, points:[[t_ns, v]...]} \
+         sorted by (metric, labels, t); seeded ~10 ms virtual cadence",
+    ),
+];
+
+fn fields_for(name: &str) -> Option<&'static [Field]> {
+    Some(match name {
+        super::SCHEMA => &BENCH_FIELDS,
+        super::SCALE_SCHEMA => &SCALE_FIELDS,
+        super::TRAIN_SCHEMA => &TRAIN_FIELDS,
+        super::SWEEP_SCHEMA => &SWEEP_FIELDS,
+        super::CHURN_SCHEMA => &CHURN_FIELDS,
+        super::METRICS_SCHEMA => &METRICS_FIELDS,
+        _ => return None,
+    })
+}
+
+/// The typed dump of one registered schema, as a byte-stable JSON
+/// document: registry metadata plus the field catalog (common fields
+/// first, then schema-specific ones, in catalog order).
+pub fn schema_dump(name: &str) -> Result<Json> {
+    let info = super::SCHEMAS.iter().find(|s| s.name == name);
+    let (Some(info), Some(fields)) = (info, fields_for(name)) else {
+        let known: Vec<&str> =
+            super::SCHEMAS.iter().map(|s| s.name).collect();
+        bail!("unknown schema {name:?}; known: {}", known.join(", "));
+    };
+    let field_docs: Vec<Json> = COMMON
+        .iter()
+        .chain(fields.iter())
+        .map(|fd| {
+            obj(vec![
+                ("doc", Json::from(fd.doc)),
+                ("path", Json::from(fd.path)),
+                ("type", Json::from(fd.ty)),
+            ])
+        })
+        .collect();
+    Ok(obj(vec![
+        ("command", Json::from(info.command)),
+        ("fields", Json::Arr(field_docs)),
+        ("name", Json::from(info.name)),
+        ("summary", Json::from(info.summary)),
+    ]))
+}
+
+/// Human-readable rendering of [`schema_dump`] for the plain CLI path.
+pub fn print_schema(name: &str) -> Result<()> {
+    let doc = schema_dump(name)?;
+    println!(
+        "{} — {}",
+        doc.get("name")?.as_str()?,
+        doc.get("summary")?.as_str()?
+    );
+    println!("emitted by: {}", doc.get("command")?.as_str()?);
+    println!();
+    for fd in doc.get("fields")?.as_arr()? {
+        println!(
+            "  {:<44} {:<14} {}",
+            fd.get("path")?.as_str()?,
+            fd.get("type")?.as_str()?,
+            fd.get("doc")?.as_str()?
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_schema_has_a_dump() {
+        for s in crate::report::SCHEMAS {
+            let doc = schema_dump(s.name).unwrap();
+            assert_eq!(doc.get("name").unwrap().as_str().unwrap(), s.name);
+            let fields = doc.get("fields").unwrap().as_arr().unwrap();
+            assert!(
+                fields.len() > COMMON.len(),
+                "{}: needs schema-specific fields",
+                s.name
+            );
+            for fd in fields {
+                for key in ["path", "type", "doc"] {
+                    assert!(
+                        !fd.get(key)
+                            .unwrap()
+                            .as_str()
+                            .unwrap()
+                            .is_empty(),
+                        "{}: empty {key}",
+                        s.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dumps_are_byte_stable_and_unknown_names_are_pointed() {
+        let a = schema_dump("flux-metrics-v1").unwrap().to_string();
+        assert_eq!(a, schema_dump("flux-metrics-v1").unwrap().to_string());
+        assert!(a.contains("cells[].series"));
+        let err =
+            format!("{:#}", schema_dump("flux-imaginary-v9").unwrap_err());
+        assert!(
+            err.contains("flux-imaginary-v9")
+                && err.contains("flux-bench-v1"),
+            "pointed error with the known list: {err}"
+        );
+    }
+}

@@ -42,6 +42,7 @@ use crate::cost::arch::ScaleTopology;
 use crate::faults::{FaultAction, FaultEvent, FaultTimeline};
 use crate::model::analysis::{layer_attention_extra_ns, layer_fwd_ops};
 use crate::model::configs::TransformerConfig;
+use crate::obs::{self, Metrics};
 use crate::overlap::Method;
 use crate::serving::batcher::{Batcher, BatcherConfig, Work};
 use crate::serving::kvcache::KvCacheManager;
@@ -248,7 +249,23 @@ enum Ev {
 
 /// Run one (scenario, method) serving simulation to completion.
 pub fn run_scale(sc: &ScaleScenario, method: Method) -> Result<ScaleReport> {
-    run_scale_inner(sc, method, None, None)
+    run_scale_inner(sc, method, None, None, None)
+}
+
+/// The fully-instrumented entry: optional fault timeline, optional
+/// chrome trace and optional [`Metrics`] registry in one call. The
+/// telemetry side channels only *read* simulator state, so any
+/// combination of `None`s is byte-identical to the plain
+/// [`run_scale`]/[`run_scale_faulted`] paths — the compat tests pin
+/// this.
+pub fn run_scale_observed(
+    sc: &ScaleScenario,
+    method: Method,
+    faults: Option<&FaultTimeline>,
+    trace: Option<(&mut Trace, usize)>,
+    metrics: Option<&mut Metrics>,
+) -> Result<ScaleReport> {
+    run_scale_inner(sc, method, trace, faults, metrics)
 }
 
 /// Like [`run_scale`], optionally recording the DES event stream into
@@ -259,7 +276,7 @@ pub fn run_scale_traced(
     method: Method,
     trace: Option<(&mut Trace, usize)>,
 ) -> Result<ScaleReport> {
-    run_scale_inner(sc, method, trace, None)
+    run_scale_inner(sc, method, trace, None, None)
 }
 
 /// [`run_scale`] under an expanded fault timeline: replica kills drain
@@ -275,7 +292,7 @@ pub fn run_scale_faulted(
     method: Method,
     faults: &FaultTimeline,
 ) -> Result<ScaleReport> {
-    run_scale_inner(sc, method, None, Some(faults))
+    run_scale_inner(sc, method, None, Some(faults), None)
 }
 
 /// [`run_scale_faulted`] with the chrome-trace capture of
@@ -287,7 +304,7 @@ pub fn run_scale_faulted_traced(
     faults: &FaultTimeline,
     trace: Option<(&mut Trace, usize)>,
 ) -> Result<ScaleReport> {
-    run_scale_inner(sc, method, trace, Some(faults))
+    run_scale_inner(sc, method, trace, Some(faults), None)
 }
 
 fn run_scale_inner(
@@ -295,6 +312,7 @@ fn run_scale_inner(
     method: Method,
     mut trace: Option<(&mut Trace, usize)>,
     faults: Option<&FaultTimeline>,
+    mut metrics: Option<&mut Metrics>,
 ) -> Result<ScaleReport> {
     sc.topo.validate()?;
     sc.workload.validate()?;
@@ -448,6 +466,51 @@ fn run_scale_inner(
     let mut rr_next = 0usize;
 
     while let Some((now, ev)) = q.next() {
+        // Seeded-cadence gauge snapshot: queue depth, running set, KV
+        // occupancy per replica and the routable-DP count — read-only,
+        // so the fault-free f64 pins are untouched. The same samples
+        // feed chrome-trace "C" counter tracks when a trace rides
+        // along.
+        if let Some(m) = metrics.as_deref_mut() {
+            if let Some(t) = m.sample_due(now) {
+                for r in 0..dp {
+                    let queued = reps.batchers[r].queued() as f64;
+                    let running = reps.batchers[r].running() as f64;
+                    let used = reps.kvs[r].used_blocks() as f64;
+                    let free = reps.kvs[r].free_blocks() as f64;
+                    m.point(t, "serve.queue_depth", obs::replica(r), queued);
+                    m.point(t, "serve.running", obs::replica(r), running);
+                    m.point(t, "serve.kv_used_blocks", obs::replica(r), used);
+                    m.point(t, "serve.kv_free_blocks", obs::replica(r), free);
+                    if let Some((tr, pid0)) = trace.as_mut() {
+                        tr.counter(
+                            *pid0 + r,
+                            "serve.queue_depth",
+                            t,
+                            vec![("value", Json::from(queued))],
+                        );
+                        tr.counter(
+                            *pid0 + r,
+                            "serve.kv_used_blocks",
+                            t,
+                            vec![("value", Json::from(used))],
+                        );
+                    }
+                }
+                let routable = (0..active_dp)
+                    .filter(|&j| reps.alive[j])
+                    .count() as f64;
+                m.point(t, "serve.active_dp", obs::labels(&[]), routable);
+                if let Some((tr, pid0)) = trace.as_mut() {
+                    tr.counter(
+                        *pid0,
+                        "serve.active_dp",
+                        t,
+                        vec![("value", Json::from(routable))],
+                    );
+                }
+            }
+        }
         let r = match ev {
             Ev::Arrive(i) => {
                 let routable =
@@ -484,6 +547,9 @@ fn run_scale_inner(
                     // gateway. A closed-loop user still comes back
                     // after thinking.
                     gateway_failures += 1;
+                    if let Some(m) = metrics.as_deref_mut() {
+                        m.inc("serve.gateway_failures", obs::labels(&[]));
+                    }
                     if let Some((tr, pid0)) = trace.as_mut() {
                         tr.instant(
                             *pid0,
@@ -518,6 +584,9 @@ fn run_scale_inner(
                     vec![1; len.prompt],
                     len.gen,
                 ));
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.inc("serve.admitted", obs::replica(r));
+                }
                 r
             }
             Ev::StepDone(r, epoch) => {
@@ -538,6 +607,15 @@ fn run_scale_inner(
                 let finished = reps.batchers[r]
                     .complete_decode(&ids, &toks, &mut reps.kvs[r], now)
                     .with_context(|| format!("replica {r} step at {now}"))?;
+                if let Some(m) = metrics.as_deref_mut() {
+                    if !finished.is_empty() {
+                        m.add(
+                            "serve.completions",
+                            obs::replica(r),
+                            finished.len() as f64,
+                        );
+                    }
+                }
                 // Closed loop: each completion frees a user, who
                 // thinks, then issues the next request.
                 if gw.is_closed_loop() {
@@ -563,6 +641,9 @@ fn run_scale_inner(
                         if let Some((tr, pid0)) = trace.as_mut() {
                             tr.instant(*pid0 + r, 0, "kill", now, vec![]);
                         }
+                        if let Some(m) = metrics.as_deref_mut() {
+                            m.marker(now, "fault.kill", obs::replica(r));
+                        }
                         reps.drain(r).with_context(|| {
                             format!("kill of replica {r} at {now}")
                         })?
@@ -577,6 +658,9 @@ fn run_scale_inner(
                                 now,
                                 vec![],
                             );
+                        }
+                        if let Some(m) = metrics.as_deref_mut() {
+                            m.marker(now, "fault.restart", obs::replica(r));
                         }
                         continue;
                     }
@@ -603,9 +687,25 @@ fn run_scale_inner(
                                 vec![("dp", Json::from(target))],
                             );
                         }
+                        if let Some(m) = metrics.as_deref_mut() {
+                            m.marker(
+                                now,
+                                "fault.resize",
+                                obs::labels(&[("dp", &target.to_string())]),
+                            );
+                        }
                         drained
                     }
                 };
+                if let Some(m) = metrics.as_deref_mut() {
+                    if !drained.is_empty() {
+                        m.add(
+                            "serve.drained",
+                            obs::labels(&[]),
+                            drained.len() as f64,
+                        );
+                    }
+                }
                 // Every drained request frees its closed-loop user.
                 if gw.is_closed_loop() {
                     for _ in &drained {
@@ -676,6 +776,17 @@ fn run_scale_inner(
                     ],
                 );
             }
+            if let Some(m) = metrics.as_deref_mut() {
+                m.inc(
+                    if is_prefill {
+                        "serve.prefill_steps"
+                    } else {
+                        "serve.decode_steps"
+                    },
+                    obs::replica(r),
+                );
+                m.add("serve.step_ns", obs::replica(r), t);
+            }
             reps.in_flight[r] = ids;
             reps.in_flight_is_prefill[r] = is_prefill;
             reps.busy_ns[r] += t;
@@ -691,6 +802,38 @@ fn run_scale_inner(
             batcher.all_done(),
             "replica {r} stalled with work left (KV pool too small?)"
         );
+    }
+
+    // End-of-run telemetry: DES engine counters and per-replica
+    // TTFT/latency histograms. A separate read-only pass, so the
+    // Streaming finalization below stays bit-identical to the
+    // metrics-off path.
+    if let Some(m) = metrics.as_deref_mut() {
+        let root = obs::labels(&[]);
+        m.add("engine.events_popped", root.clone(), q.pops() as f64);
+        m.add("engine.events_scheduled", root.clone(), q.scheduled() as f64);
+        m.add("engine.calendar_rebuilds", root, q.rebuilds() as f64);
+        for (r, batcher) in reps.batchers.iter().enumerate() {
+            for req in &batcher.requests {
+                if req.state == RequestState::Failed {
+                    continue;
+                }
+                if let (Some(t), Some(l)) = (req.ttft_ns(), req.latency_ns()) {
+                    m.observe(
+                        "serve.ttft_ns",
+                        obs::replica(r),
+                        &obs::LATENCY_BOUNDS_NS,
+                        t,
+                    );
+                    m.observe(
+                        "serve.latency_ns",
+                        obs::replica(r),
+                        &obs::LATENCY_BOUNDS_NS,
+                        l,
+                    );
+                }
+            }
+        }
     }
 
     // Streaming accumulators in the same replica-major visit order the

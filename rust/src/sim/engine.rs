@@ -150,6 +150,7 @@ pub struct EventQueue<E> {
     seq: u64,
     now: Time,
     pops: u64,
+    rebuilds: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -173,6 +174,7 @@ impl<E> EventQueue<E> {
             seq: 0,
             now: 0.0,
             pops: 0,
+            rebuilds: 0,
         };
         q.buckets.resize_with(MIN_BUCKETS, Bucket::default);
         q.set_calendar(0.0);
@@ -200,6 +202,13 @@ impl<E> EventQueue<E> {
     /// Total events scheduled so far.
     pub fn scheduled(&self) -> u64 {
         self.seq
+    }
+
+    /// Total calendar rebuilds so far (grow, shrink, and
+    /// drain-redistribute all count — the amortized-O(1) claim is only
+    /// honest if this stays small relative to [`Self::pops`]).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
     }
 
     /// Live calendar geometry `(cal_start, width, n_buckets)` — exposed
@@ -296,6 +305,7 @@ impl<E> EventQueue<E> {
     /// Collect every live event and redistribute into `target_len`-sized
     /// calendar re-anchored on the live min/max times.
     fn rebuild(&mut self, target_len: usize) {
+        self.rebuilds += 1;
         let mut scratch: Vec<u32> = Vec::with_capacity(self.len);
         for bk in &mut self.buckets {
             scratch.extend_from_slice(bk.live());

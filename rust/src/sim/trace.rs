@@ -100,6 +100,26 @@ impl Trace {
         self.events.push(obj(ev));
     }
 
+    /// A counter-track sample (`"C"` phase) at `ts_ns` on `pid`:
+    /// chrome://tracing renders one stacked track per counter name,
+    /// which is how sampled gauges (queue depth, KV occupancy) appear
+    /// alongside the span lanes.
+    pub fn counter(
+        &mut self,
+        pid: usize,
+        name: &str,
+        ts_ns: f64,
+        values: Vec<(&str, Json)>,
+    ) {
+        self.events.push(obj(vec![
+            ("ph", Json::from("C")),
+            ("name", Json::from(name)),
+            ("pid", Json::from(pid)),
+            ("ts", Json::from(ts_ns / 1e3)),
+            ("args", obj(values)),
+        ]));
+    }
+
     /// The chrome://tracing document.
     pub fn to_json(&self) -> Json {
         obj(vec![
@@ -159,6 +179,42 @@ mod tests {
                 .as_usize()
                 .unwrap(),
             4
+        );
+    }
+
+    #[test]
+    fn counter_events_pin_the_chrome_counter_shape() {
+        // Regression (satellite): the "C"-phase counter track emission
+        // is byte-stable and carries its samples in `args`.
+        let build = || {
+            let mut t = Trace::new();
+            t.process_name(3, "flux/replica0");
+            t.counter(
+                3,
+                "serve.queue_depth",
+                2_000_000.0,
+                vec![("value", Json::from(5.0))],
+            );
+            t.counter(
+                3,
+                "serve.kv_used_blocks",
+                2_000_000.0,
+                vec![("value", Json::from(128.0))],
+            );
+            t.to_json().to_string()
+        };
+        let a = build();
+        assert_eq!(a, build(), "counter emission must be byte-stable");
+        assert_eq!(
+            a,
+            "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\
+             {\"args\":{\"name\":\"flux/replica0\"},\"name\":\
+             \"process_name\",\"ph\":\"M\",\"pid\":3,\"tid\":0},\
+             {\"args\":{\"value\":5},\"name\":\"serve.queue_depth\",\
+             \"ph\":\"C\",\"pid\":3,\"ts\":2000},\
+             {\"args\":{\"value\":128},\"name\":\
+             \"serve.kv_used_blocks\",\"ph\":\"C\",\"pid\":3,\
+             \"ts\":2000}]}"
         );
     }
 

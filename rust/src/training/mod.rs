@@ -36,6 +36,7 @@ use anyhow::{bail, ensure, Result};
 use crate::cost::arch::TrainTopology;
 use crate::faults::FaultTimeline;
 use crate::model::configs::TransformerConfig;
+use crate::obs::{self, Metrics};
 use crate::parallel::{
     ideal_stage_times, step_costs, train_step_ns, Layout, Method,
     StepCosts,
@@ -256,7 +257,22 @@ pub fn run_train_with(
     sc: &TrainScenario,
     method: Method,
     faults: Option<&FaultTimeline>,
+    trace: Option<(&mut Trace, usize)>,
+) -> Result<TrainRun> {
+    run_train_observed(sc, method, faults, trace, None)
+}
+
+/// The fully-instrumented entry: [`run_train_with`] plus an optional
+/// [`Metrics`] registry recording per-stage fwd/bwd/hop/bucket time
+/// attribution, sampled pipeline occupancy and fault-window markers.
+/// The registry only reads simulator state, so `metrics: None` is the
+/// exact [`run_train_with`] path.
+pub fn run_train_observed(
+    sc: &TrainScenario,
+    method: Method,
+    faults: Option<&FaultTimeline>,
     mut trace: Option<(&mut Trace, usize)>,
+    mut metrics: Option<&mut Metrics>,
 ) -> Result<TrainRun> {
     validate_scenario(sc)?;
     if let Some(tl) = faults {
@@ -292,6 +308,20 @@ pub fn run_train_with(
             }
         }
     }
+    // Fault windows as instant markers: when each straggler / NIC
+    // degradation window opens, stamped at its start time.
+    if let Some(m) = metrics.as_deref_mut() {
+        if let Some(tl) = faults {
+            for w in &tl.stragglers {
+                if w.replica < sc.topo.pp {
+                    m.marker(w.start_ns, "fault.straggler", obs::stage(w.replica));
+                }
+            }
+            for w in &tl.nic {
+                m.marker(w.start_ns, "fault.nic", obs::labels(&[]));
+            }
+        }
+    }
     let costs = sc.costs(method);
     let out = simulate_with_costs(
         sc.topo,
@@ -299,6 +329,7 @@ pub fn run_train_with(
         &costs,
         faults,
         trace,
+        metrics,
     )?;
     Ok(TrainRun {
         method,
@@ -335,6 +366,7 @@ pub fn ideal_step_ns(sc: &TrainScenario) -> Result<f64> {
         sc.topo,
         sc.microbatches,
         &ideal,
+        None,
         None,
         None,
     )?
@@ -379,6 +411,7 @@ fn simulate_with_costs(
     costs: &StepCosts,
     faults: Option<&FaultTimeline>,
     mut trace: Option<(&mut Trace, usize)>,
+    mut metrics: Option<&mut Metrics>,
 ) -> Result<TrainRun> {
     // Empty timelines take the exact fault-free arithmetic.
     let faults = faults.filter(|tl| !tl.is_empty());
@@ -414,10 +447,34 @@ fn simulate_with_costs(
 
     while let Some((now, ev)) = q.next() {
         events += 1;
+        // Seeded-cadence occupancy snapshot: in-flight microbatches
+        // and busy flag per stage — read-only against the 1F1B state.
+        if let Some(m) = metrics.as_deref_mut() {
+            if let Some(t) = m.sample_due(now) {
+                for s in 0..pp {
+                    let in_flight =
+                        (stages.fwd_done[s] - stages.bwd_done[s]) as f64;
+                    let busy = if stages.busy[s] { 1.0 } else { 0.0 };
+                    m.point(t, "train.in_flight", obs::stage(s), in_flight);
+                    m.point(t, "train.busy", obs::stage(s), busy);
+                    if let Some((tr, pid0)) = trace.as_mut() {
+                        tr.counter(
+                            *pid0 + s,
+                            "train.in_flight",
+                            t,
+                            vec![("value", Json::from(in_flight))],
+                        );
+                    }
+                }
+            }
+        }
         match ev {
             Ev::FwdDone(s) => {
                 stages.busy[s] = false;
                 stages.fwd_done[s] += 1;
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.add("train.fwd_ns", obs::stage(s), stages.cur_dur[s]);
+                }
                 if let Some((tr, pid0)) = trace.as_mut() {
                     tr.span(
                         *pid0 + s,
@@ -439,6 +496,9 @@ fn simulate_with_costs(
                         now,
                         nic_slow(faults, now),
                     );
+                    if let Some(m) = metrics.as_deref_mut() {
+                        m.add("train.hop_ns", obs::stage(s + 1), end - hop_start);
+                    }
                     if let Some((tr, pid0)) = trace.as_mut() {
                         tr.span(
                             *pid0 + s + 1,
@@ -460,6 +520,9 @@ fn simulate_with_costs(
                 stages.busy[s] = false;
                 stages.bwd_done[s] += 1;
                 stages.last_bwd_end[s] = now;
+                if let Some(m) = metrics.as_deref_mut() {
+                    m.add("train.bwd_ns", obs::stage(s), stages.cur_dur[s]);
+                }
                 if let Some((tr, pid0)) = trace.as_mut() {
                     tr.span(
                         *pid0 + s,
@@ -481,6 +544,9 @@ fn simulate_with_costs(
                         now,
                         nic_slow(faults, now),
                     );
+                    if let Some(m) = metrics.as_deref_mut() {
+                        m.add("train.hop_ns", obs::stage(s - 1), end - hop_start);
+                    }
                     if let Some((tr, pid0)) = trace.as_mut() {
                         tr.span(
                             *pid0 + s - 1,
@@ -506,6 +572,13 @@ fn simulate_with_costs(
                     for _ in 0..release {
                         let (b_start, b_end) =
                             stages.dp_link[s].acquire(now, b_dur);
+                        if let Some(m) = metrics.as_deref_mut() {
+                            m.add(
+                                "train.bucket_ns",
+                                obs::stage(s),
+                                b_end - b_start,
+                            );
+                        }
                         if let Some((tr, pid0)) = trace.as_mut() {
                             tr.span(
                                 *pid0 + s,
@@ -559,6 +632,18 @@ fn simulate_with_costs(
         stages.ar_end.iter().copied().fold(0.0f64, f64::max);
     let busy: f64 = stages.busy_ns.iter().sum();
     let step_ns = pipe_ns.max(ar_max) + costs.opt_ns;
+    // End-of-run telemetry: engine counters plus the step's
+    // exposed-vs-overlapped communication split — the Eq.-2 quantities
+    // as gauges the time-series figure plots per method.
+    if let Some(m) = metrics.as_deref_mut() {
+        let root = obs::labels(&[]);
+        m.add("engine.events_popped", root.clone(), q.pops() as f64);
+        m.add("engine.events_scheduled", root.clone(), q.scheduled() as f64);
+        m.add("engine.calendar_rebuilds", root.clone(), q.rebuilds() as f64);
+        m.gauge("train.pipe_ns", root.clone(), pipe_ns);
+        m.gauge("train.dp_exposed_ns", root.clone(), pipe_ns.max(ar_max) - pipe_ns);
+        m.gauge("train.step_ns", root, step_ns);
+    }
     Ok(TrainRun {
         method: Method::NonOverlap, // overwritten by run_train
         step_ns,

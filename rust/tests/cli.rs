@@ -513,6 +513,142 @@ fn trace_flag_writes_byte_stable_chrome_traces() {
 }
 
 #[test]
+fn schema_subcommand_dumps_every_registered_schema() {
+    // Discoverability: every name `flux list` advertises has a typed
+    // field dump, human and --json.
+    for s in flux::report::SCHEMAS {
+        let out = flux_bin().args(["schema", s.name]).output().unwrap();
+        assert!(
+            out.status.success(),
+            "schema {}: {}",
+            s.name,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(s.name), "{}: dump names the schema", s.name);
+
+        let out = flux_bin()
+            .args(["schema", s.name, "--json"])
+            .output()
+            .unwrap();
+        assert!(out.status.success());
+        let doc = flux::util::json::Json::parse(
+            &String::from_utf8_lossy(&out.stdout),
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), s.name);
+        assert_eq!(doc.get("command").unwrap().as_str().unwrap(), s.command);
+        assert!(
+            !doc.get("fields").unwrap().as_arr().unwrap().is_empty(),
+            "{}: dump has fields",
+            s.name
+        );
+    }
+    // Unknown names fail with the registry listed; a bare `schema`
+    // prints usage and fails.
+    let out = flux_bin().args(["schema", "flux-nope-v9"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains(flux::report::METRICS_SCHEMA),
+        "error must list known schemas: {err}"
+    );
+    let out = flux_bin().arg("schema").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn metrics_flag_writes_byte_stable_telemetry() {
+    // Tentpole acceptance at the CLI surface: `--faults replica-churn
+    // --metrics` is byte-stable across reruns AND thread counts, and
+    // the document carries the fault markers.
+    let dir = tmp_dir("metrics");
+    let run = |name: &str, threads: &str| -> String {
+        let mpath = dir.join(name);
+        let out = flux_bin()
+            .args([
+                "simulate", "--scale", "--quick",
+                "--topo", "1-node-tp8",
+                "--faults", "replica-churn",
+                "--json", "--threads", threads,
+            ])
+            .arg("--out")
+            .arg(dir.join(format!("report_{name}")))
+            .arg("--metrics")
+            .arg(&mpath)
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        std::fs::read_to_string(&mpath).unwrap()
+    };
+    let a = run("m_a.json", "1");
+    let b = run("m_b.json", "3");
+    assert_eq!(a, b, "--metrics must not depend on --threads");
+    let doc = flux::util::json::Json::parse(&a).unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        flux::report::METRICS_SCHEMA
+    );
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert!(!cells.is_empty(), "metrics doc has cells");
+    for c in cells {
+        for key in [
+            "counters", "gauges", "histograms", "markers", "method",
+            "series", "topology",
+        ] {
+            assert!(c.opt(key).is_some(), "cell missing {key}");
+        }
+    }
+    assert!(a.contains("fault.kill"), "churn kill markers recorded");
+    assert!(a.contains("serve.queue_depth"), "sampled series recorded");
+
+    // Combined --trace --metrics: one capture serves both files, so
+    // the sampled gauges additionally land in the trace as chrome
+    // counter ("C") events.
+    let tpath = dir.join("trace.json");
+    let mpath = dir.join("m_trace.json");
+    let out = flux_bin()
+        .args([
+            "simulate", "--scale", "--quick", "--topo", "1-node-tp8",
+        ])
+        .arg("--trace")
+        .arg(&tpath)
+        .arg("--metrics")
+        .arg(&mpath)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let trace = flux::util::json::Json::parse(
+        &std::fs::read_to_string(&tpath).unwrap(),
+    )
+    .unwrap();
+    let evs = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        evs.iter().any(|e| {
+            matches!(e.opt("ph").and_then(|p| p.as_str().ok()), Some("C"))
+        }),
+        "combined capture must emit counter events"
+    );
+    let metrics = flux::util::json::Json::parse(
+        &std::fs::read_to_string(&mpath).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        metrics.get("schema").unwrap().as_str().unwrap(),
+        flux::report::METRICS_SCHEMA
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn simulate_train_json_is_reproducible_byte_for_byte() {
     // Acceptance: the event-driven training report is deterministic,
     // covers every topology, and the 128-GPU PCIe speedup lands in the

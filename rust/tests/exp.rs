@@ -271,12 +271,138 @@ fn scenario_json_round_trips_through_the_cli_surface() {
         workload: Some(WorkloadRef::Preset("diurnal-chat".into())),
         methods: Some(vec![Method::NonOverlap, Method::Flux]),
         faults: None,
+        metrics: Some("metrics.json".into()),
         quick: true,
     };
     let text = sc.to_json().to_string();
     let parsed = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
     assert_eq!(parsed, sc);
     assert_eq!(parsed.to_json().to_string(), text);
+}
+
+#[test]
+fn metrics_docs_are_byte_identical_across_drawn_thread_counts() {
+    // Observability determinism contract: the flux-metrics-v1
+    // document — counters, seeded-cadence gauge series, fault
+    // markers — replays byte-stably at ANY worker count, for both
+    // modes. Thread counts are drawn by propcheck.
+    let mut serve =
+        Scenario::serve(Some(&SCALE_H800_TP8_DP4), None, true);
+    serve.faults = Some(FaultsRef::Preset("replica-churn".into()));
+    let train = Scenario::train(Some(&TRAIN_NVLINK_128), true);
+    let bytes = |sc: &Scenario, threads: usize| {
+        flux::exp::metrics_doc(sc, &Runner::with_threads(threads))
+            .unwrap()
+            .to_string()
+    };
+    let seq_serve = bytes(&serve, 1);
+    let seq_train = bytes(&train, 1);
+    assert!(seq_serve.contains("flux-metrics-v1"));
+    assert!(seq_serve.contains("serve.queue_depth"));
+    assert!(seq_serve.contains("fault.kill"));
+    assert!(seq_train.contains("flux-metrics-v1"));
+    assert!(seq_train.contains("train.pipe_ns"));
+    forall_gen(3, 0x0B57, usize_in(2, 9), |&threads| {
+        assert_eq!(
+            bytes(&serve, threads),
+            seq_serve,
+            "serve metrics doc at {threads} threads diverged"
+        );
+        assert_eq!(
+            bytes(&train, threads),
+            seq_train,
+            "train metrics doc at {threads} threads diverged"
+        );
+    });
+}
+
+#[test]
+fn metrics_observer_never_perturbs_the_reports() {
+    // The zero-cost-when-disabled half of the contract, both ways:
+    // attaching a registry must not move one bit of the simulation
+    // result, and a metrics-off run of the benched documents
+    // (BENCH_1/2/6 builders) must reproduce their bytes exactly even
+    // when the scenario carries a `metrics` key.
+    use flux::obs::Metrics;
+    use flux::serving::scale::{
+        run_scale, run_scale_observed, ScaleScenario,
+    };
+    use flux::training::{
+        run_train, run_train_observed, TrainScenario,
+    };
+
+    let sc = ScaleScenario::quick(&SCALE_H800_TP8_DP4);
+    for m in Method::SERVE_SET {
+        let plain = run_scale(&sc, m).unwrap();
+        let mut metrics = Metrics::new(sc.seed);
+        let observed =
+            run_scale_observed(&sc, m, None, None, Some(&mut metrics))
+                .unwrap();
+        assert_eq!(plain.completed, observed.completed);
+        assert_eq!(plain.tokens, observed.tokens);
+        assert_eq!(plain.makespan_ns.to_bits(), observed.makespan_ns.to_bits());
+        assert_eq!(
+            plain.tokens_per_sec.to_bits(),
+            observed.tokens_per_sec.to_bits()
+        );
+        let doc = metrics.to_json().to_string();
+        assert!(doc.contains("serve.admitted"), "observer recorded");
+    }
+
+    let tr = TrainScenario::quick(&TRAIN_NVLINK_128);
+    for m in Method::TRAIN_SET {
+        let plain = run_train(&tr, m).unwrap();
+        let mut metrics = Metrics::new(tr.seed);
+        let observed =
+            run_train_observed(&tr, m, None, None, Some(&mut metrics))
+                .unwrap();
+        assert_eq!(plain.step_ns.to_bits(), observed.step_ns.to_bits());
+        assert_eq!(plain.pipe_ns.to_bits(), observed.pipe_ns.to_bits());
+        assert_eq!(plain.dp_exposed_ns.to_bits(), observed.dp_exposed_ns.to_bits());
+        let doc = metrics.to_json().to_string();
+        assert!(doc.contains("train.fwd_ns"), "observer recorded");
+    }
+
+    // Report builders ignore the scenario's `metrics` key entirely.
+    let runner = Runner::with_threads(2);
+    let scale_sc = Scenario::serve(Some(&SCALE_H800_TP8_DP4), None, true);
+    let mut scale_keyed = scale_sc.clone();
+    scale_keyed.metrics = Some("unused.json".into());
+    assert_eq!(
+        report::scale_doc_scenario(&scale_keyed, &runner)
+            .unwrap()
+            .to_string(),
+        report::scale_doc_scenario(&scale_sc, &runner)
+            .unwrap()
+            .to_string(),
+        "scale doc perturbed by the metrics key"
+    );
+    let train_sc = Scenario::train(Some(&TRAIN_NVLINK_128), true);
+    let mut train_keyed = train_sc.clone();
+    train_keyed.metrics = Some("unused.json".into());
+    assert_eq!(
+        report::train_doc_scenario(&train_keyed, &runner)
+            .unwrap()
+            .to_string(),
+        report::train_doc_scenario(&train_sc, &runner)
+            .unwrap()
+            .to_string(),
+        "train doc perturbed by the metrics key"
+    );
+    let mut churn_sc = Scenario::serve(Some(&SCALE_H800_TP8_DP4), None, true);
+    churn_sc.faults = Some(FaultsRef::Preset("replica-churn".into()));
+    let mut churn_keyed = churn_sc.clone();
+    churn_keyed.metrics = Some("unused.json".into());
+    let spec = churn_sc.faults.as_ref().unwrap().resolved().unwrap();
+    assert_eq!(
+        report::churn_doc_scenario(&churn_keyed, &spec, &runner)
+            .unwrap()
+            .to_string(),
+        report::churn_doc_scenario(&churn_sc, &spec, &runner)
+            .unwrap()
+            .to_string(),
+        "churn doc perturbed by the metrics key"
+    );
 }
 
 #[test]

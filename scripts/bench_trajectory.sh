@@ -12,6 +12,7 @@
 #   BENCH_4.json  sweep, 1 thread vs default  (parallel determinism)
 #   BENCH_5.json  bench --wall: events/sec    (machine-local, NOT compared)
 #   BENCH_6.json  replica-churn scenario      (flux-churn-v1, byte-stable)
+#   BENCH_7.json  churn scenario + telemetry  (flux-metrics-v1, byte-stable)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -53,6 +54,20 @@ rm -f BENCH_4_par.json
 
 echo "== BENCH_6: replica-churn degradation curves (flux-churn-v1) =="
 stable BENCH_6.json scenario artifacts/scenario_churn_h800.json --json
+
+echo "== BENCH_7: churn telemetry (flux-metrics-v1) =="
+# The metrics file is a side output next to the report, so the rerun
+# compares both documents: the churn report AND the telemetry must be
+# byte-identical across runs and thread counts.
+flux scenario artifacts/scenario_churn_h800.json --json --threads 1 \
+  --out BENCH_7.json --metrics BENCH_7_metrics.json
+head -c 2000 BENCH_7_metrics.json
+echo
+flux scenario artifacts/scenario_churn_h800.json --json \
+  --out BENCH_7.json.repro --metrics BENCH_7_metrics.json.repro
+cmp BENCH_7.json BENCH_7.json.repro
+cmp BENCH_7_metrics.json BENCH_7_metrics.json.repro
+rm -f BENCH_7.json.repro BENCH_7_metrics.json.repro
 
 echo "== BENCH_5: DES engine events/sec (wall clock; not byte-compared) =="
 flux bench --json --quick --wall --out BENCH_5.json
