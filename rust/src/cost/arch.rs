@@ -235,6 +235,71 @@ pub const ALL_SCALE_TOPOLOGIES: [&ScaleTopology; 4] = [
     &SCALE_H800_TP8_DP4,
 ];
 
+/// The fleet DP degrees [`ScaleTopology::fleet`] is parametric over.
+pub const FLEET_DPS: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+/// One parametric fleet pool: `dp` nodes, one TP8 replica per node
+/// (the Megatron serving layout at datacenter width — `nodes == dp`
+/// keeps TP intra-node at every scale).
+macro_rules! fleet_pool {
+    ($cluster:expr, $name:literal, $dp:literal) => {
+        &ScaleTopology {
+            name: $name,
+            cluster: $cluster,
+            nodes: $dp,
+            tp: 8,
+            dp: $dp,
+        }
+    };
+}
+
+/// The dp64 NVLink fleet pool — the deterministic `fleet` bench cell
+/// and the CI events/sec perf-gate point (`report::bench`).
+pub const FLEET_NVLINK_DP64: ScaleTopology = ScaleTopology {
+    name: "fleet nvlink tp8 dp64",
+    cluster: &A100_NVLINK,
+    nodes: 64,
+    tp: 8,
+    dp: 64,
+};
+
+/// The dp256 NVLink fleet pool — the full-suite fleet cell (2048
+/// GPUs; skipped under `flux bench --quick` to bound CI wall time).
+pub const FLEET_NVLINK_DP256: ScaleTopology = ScaleTopology {
+    name: "fleet nvlink tp8 dp256",
+    cluster: &A100_NVLINK,
+    nodes: 256,
+    tp: 8,
+    dp: 256,
+};
+
+/// The parametric fleet registry: dp8–dp256 pools on each evaluation
+/// cluster, addressable by `--topo`, scenario `topologies` entries and
+/// [`ScaleTopology::fleet`]. Deliberately *separate* from
+/// [`ALL_SCALE_TOPOLOGIES`]: the default `simulate --scale` /
+/// `sweep-workloads` sweeps (and their pinned report bytes) stay on
+/// the four paper topologies; fleet cells run only when named.
+pub const ALL_FLEET_TOPOLOGIES: [&ScaleTopology; 18] = [
+    fleet_pool!(&A100_NVLINK, "fleet nvlink tp8 dp8", 8),
+    fleet_pool!(&A100_NVLINK, "fleet nvlink tp8 dp16", 16),
+    fleet_pool!(&A100_NVLINK, "fleet nvlink tp8 dp32", 32),
+    &FLEET_NVLINK_DP64,
+    fleet_pool!(&A100_NVLINK, "fleet nvlink tp8 dp128", 128),
+    &FLEET_NVLINK_DP256,
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp8", 8),
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp16", 16),
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp32", 32),
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp64", 64),
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp128", 128),
+    fleet_pool!(&A100_PCIE, "fleet pcie tp8 dp256", 256),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp8", 8),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp16", 16),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp32", 32),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp64", 64),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp128", 128),
+    fleet_pool!(&H800_NVLINK, "fleet h800 tp8 dp256", 256),
+];
+
 /// A training cluster layout: DP x PP x TP over nodes of a base
 /// [`ClusterSpec`], Megatron-LM convention (§5.2): TP inside a node,
 /// one pipeline stage per node, DP replicas tile the remaining nodes.
@@ -323,11 +388,30 @@ impl TrainTopology {
 impl ScaleTopology {
     pub fn by_name(name: &str) -> Option<&'static ScaleTopology> {
         // Topology names contain hyphens themselves ("2-node tp8 dp2"),
-        // so normalize both sides.
+        // so normalize both sides. Fleet pools resolve here too, so
+        // `--topo fleet-nvlink-tp8-dp64` and scenario files reach them
+        // without entering the default sweep registry.
         let norm =
             |s: &str| s.to_ascii_lowercase().replace(['-', '_'], " ");
         let key = norm(name);
-        ALL_SCALE_TOPOLOGIES.iter().copied().find(|t| norm(t.name) == key)
+        ALL_SCALE_TOPOLOGIES
+            .iter()
+            .chain(ALL_FLEET_TOPOLOGIES.iter())
+            .copied()
+            .find(|t| norm(t.name) == key)
+    }
+
+    /// Parametric fleet constructor: the registered
+    /// `fleet <link> tp8 dp<N>` pool for `dp` in [`FLEET_DPS`] and
+    /// `link` one of `nvlink` | `pcie` | `h800` (case-insensitive).
+    pub fn fleet(dp: usize, link: &str) -> Option<&'static ScaleTopology> {
+        let key = link.to_ascii_lowercase();
+        ALL_FLEET_TOPOLOGIES
+            .iter()
+            .copied()
+            .find(|t| {
+                t.dp == dp && t.name.split(' ').nth(1) == Some(key.as_str())
+            })
     }
 
     pub fn gpus(&self) -> usize {
@@ -418,6 +502,50 @@ mod tests {
             Some(&SCALE_TP8_DP2)
         );
         assert!(ScaleTopology::by_name("mystery").is_none());
+    }
+
+    #[test]
+    fn fleet_registry_is_parametric_and_validates() {
+        // Every (dp, link) point exists, validates the TP-intra-node
+        // layout, and round-trips through both lookup surfaces.
+        assert_eq!(ALL_FLEET_TOPOLOGIES.len(), FLEET_DPS.len() * 3);
+        for &dp in &FLEET_DPS {
+            for link in ["nvlink", "pcie", "h800"] {
+                let t = ScaleTopology::fleet(dp, link)
+                    .unwrap_or_else(|| panic!("missing fleet {link} dp{dp}"));
+                t.validate().unwrap();
+                assert_eq!(t.dp, dp);
+                assert_eq!(t.tp, 8);
+                assert_eq!(t.nodes, dp, "one TP8 replica per node");
+                assert_eq!(t.replicas_per_node(), 1);
+                assert_eq!(ScaleTopology::by_name(t.name), Some(t));
+            }
+        }
+        // The default sweep registry is untouched by the fleet pools.
+        assert_eq!(ALL_SCALE_TOPOLOGIES.len(), 4);
+        assert!(ALL_SCALE_TOPOLOGIES
+            .iter()
+            .all(|t| !t.name.starts_with("fleet")));
+    }
+
+    #[test]
+    fn fleet_lookup_rejects_unregistered_points() {
+        assert!(ScaleTopology::fleet(64, "NVLink").is_some(), "case");
+        assert!(ScaleTopology::fleet(512, "nvlink").is_none());
+        assert!(ScaleTopology::fleet(64, "infiniband").is_none());
+        assert_eq!(
+            ScaleTopology::by_name("fleet-h800-tp8-dp128")
+                .map(|t| (t.dp, t.cluster.name)),
+            Some((128, "H800 NVLink"))
+        );
+        assert_eq!(
+            ScaleTopology::fleet(256, "nvlink"),
+            Some(&FLEET_NVLINK_DP256)
+        );
+        assert_eq!(
+            ScaleTopology::fleet(64, "nvlink"),
+            Some(&FLEET_NVLINK_DP64)
+        );
     }
 
     #[test]

@@ -21,14 +21,15 @@ use std::path::Path;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::cost::arch::{
-    ScaleTopology, TrainTopology, ALL_SCALE_TOPOLOGIES,
-    ALL_TRAIN_TOPOLOGIES,
+    ScaleTopology, TrainTopology, ALL_FLEET_TOPOLOGIES,
+    ALL_SCALE_TOPOLOGIES, ALL_TRAIN_TOPOLOGIES,
 };
 use crate::faults::FaultsRef;
 use crate::overlap::Method;
 use crate::serving::scale::ScaleScenario;
 use crate::training::TrainScenario;
 use crate::util::json::{obj, Json};
+use crate::util::stats::PercentileMode;
 use crate::workload::{self, WorkloadSpec};
 
 /// Which end-to-end path a scenario drives.
@@ -98,6 +99,12 @@ pub struct Scenario {
     /// `--metrics <path>` CLI flag overrides it). Absence keeps every
     /// run byte-identical to the pre-observability binary.
     pub metrics: Option<String>,
+    /// Serve-mode percentile accounting (`percentiles` key:
+    /// `"exact"` | `"sketch"`). `Exact` (the default, omitted from
+    /// JSON) buffers every sample and keeps all pinned report bytes;
+    /// `Sketch` additionally folds samples into a constant-space
+    /// fixed-boundary sketch surfaced as additive `*_sketch` fields.
+    pub percentiles: PercentileMode,
     pub quick: bool,
 }
 
@@ -116,6 +123,7 @@ impl Scenario {
             methods: None,
             faults: None,
             metrics: None,
+            percentiles: PercentileMode::Exact,
             quick,
         }
     }
@@ -133,6 +141,7 @@ impl Scenario {
             methods: None,
             faults: None,
             metrics: None,
+            percentiles: PercentileMode::Exact,
             quick,
         }
     }
@@ -182,13 +191,17 @@ impl Scenario {
         );
         match &self.topos {
             None => Ok(ALL_SCALE_TOPOLOGIES.to_vec()),
-            Some(filter) => resolve_filter(
-                &self.name,
-                filter,
-                &ALL_SCALE_TOPOLOGIES,
-                scale_topo,
-                |t| t.name,
-            ),
+            Some(filter) => {
+                // `resolve_filter` intersects the picks with `all` to
+                // impose registry order, so the fleet pools must be in
+                // the slice — otherwise a filtered fleet selection
+                // would resolve and then silently vanish.
+                let mut all = ALL_SCALE_TOPOLOGIES.to_vec();
+                all.extend(ALL_FLEET_TOPOLOGIES);
+                resolve_filter(&self.name, filter, &all, scale_topo, |t| {
+                    t.name
+                })
+            }
         }
     }
 
@@ -272,10 +285,15 @@ impl Scenario {
         Ok(self
             .scale_topos()?
             .into_iter()
-            .map(|topo| match &wl {
-                Some(wl) => ScaleScenario::with_workload(topo, wl.clone()),
-                None if self.quick => ScaleScenario::quick(topo),
-                None => ScaleScenario::full(topo),
+            .map(|topo| {
+                let cell = match &wl {
+                    Some(wl) => {
+                        ScaleScenario::with_workload(topo, wl.clone())
+                    }
+                    None if self.quick => ScaleScenario::quick(topo),
+                    None => ScaleScenario::full(topo),
+                };
+                cell.with_percentiles(self.percentiles)
             })
             .collect())
     }
@@ -302,6 +320,12 @@ impl Scenario {
             ensure!(
                 self.workload.is_none(),
                 "scenario {:?}: train mode takes no workload",
+                self.name
+            );
+            ensure!(
+                self.percentiles == PercentileMode::Exact,
+                "scenario {:?}: \"percentiles\" applies to serve mode \
+                 only (train reports carry no percentile blocks)",
                 self.name
             );
         }
@@ -401,6 +425,11 @@ impl Scenario {
         if let Some(p) = &self.metrics {
             fields.push(("metrics", Json::from(p.as_str())));
         }
+        // `exact` is the default and stays implicit: existing files
+        // (and their byte-stable round trips) never see the key.
+        if self.percentiles == PercentileMode::Sketch {
+            fields.push(("percentiles", Json::from("sketch")));
+        }
         obj(fields)
     }
 
@@ -454,6 +483,13 @@ impl Scenario {
                     Some(p.to_string())
                 }
                 None => None,
+            },
+            percentiles: match j.opt("percentiles") {
+                Some(p) => {
+                    PercentileMode::from_name(p.as_str().with_context(ctx)?)
+                        .with_context(ctx)?
+                }
+                None => PercentileMode::Exact,
             },
             methods: match j.opt("methods") {
                 Some(ms) => {
@@ -525,7 +561,8 @@ fn resolve_filter<T>(
 fn scale_topo(name: &str) -> Result<&'static ScaleTopology> {
     ScaleTopology::by_name(name).ok_or_else(|| {
         anyhow!(
-            "unknown topology {name:?}; one of: {}",
+            "unknown topology {name:?}; one of: {} | fleet \
+             <nvlink|pcie|h800> tp8 dp<8|16|32|64|128|256>",
             ALL_SCALE_TOPOLOGIES
                 .iter()
                 .map(|t| t.name)
@@ -566,6 +603,7 @@ mod tests {
             ]),
             faults: None,
             metrics: None,
+            percentiles: PercentileMode::Exact,
             quick: true,
         }
     }
@@ -574,6 +612,11 @@ mod tests {
     fn json_round_trips_byte_stably() {
         for sc in [
             named(),
+            Scenario {
+                name: "sketchy".into(),
+                percentiles: PercentileMode::Sketch,
+                ..named()
+            },
             Scenario {
                 name: "inline".into(),
                 workload: Some(WorkloadRef::Inline(
@@ -603,6 +646,7 @@ mod tests {
                 methods: None,
                 faults: None,
                 metrics: Some("out/metrics.json".into()),
+                percentiles: PercentileMode::Exact,
                 quick: false,
             },
         ] {
@@ -646,6 +690,56 @@ mod tests {
     }
 
     #[test]
+    fn fleet_topologies_resolve_through_the_filter() {
+        // Fleet pools are addressable by scenario files and `--topo`
+        // without living in the default registry: a mixed filter
+        // resolves both, built-ins first (registry order), and the
+        // expansion carries the fleet DP width into the cell.
+        let sc = Scenario {
+            name: "fleet".into(),
+            topos: Some(vec![
+                "fleet-nvlink-tp8-dp64".into(),
+                "1-node tp8".into(),
+            ]),
+            ..named()
+        };
+        sc.validate().unwrap();
+        let names: Vec<&str> =
+            sc.scale_topos().unwrap().iter().map(|t| t.name).collect();
+        assert_eq!(names, vec!["1-node tp8", "fleet nvlink tp8 dp64"]);
+        let cells = sc.serve_cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[1].topo.dp, 64);
+        assert_eq!(
+            sc.topo_filter_names().unwrap().unwrap(),
+            vec!["1-node tp8", "fleet nvlink tp8 dp64"]
+        );
+    }
+
+    #[test]
+    fn percentile_mode_reaches_the_expanded_cells() {
+        let mut sc = named();
+        assert_eq!(
+            sc.serve_cells().unwrap()[0].percentiles,
+            PercentileMode::Exact
+        );
+        sc.percentiles = PercentileMode::Sketch;
+        sc.validate().unwrap();
+        assert_eq!(
+            sc.serve_cells().unwrap()[0].percentiles,
+            PercentileMode::Sketch
+        );
+        // The explicit spelling of the default parses too (and stays
+        // implicit on re-serialization).
+        let text = r#"{"name": "ok", "mode": "serve",
+                       "percentiles": "exact"}"#;
+        let parsed =
+            Scenario::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(parsed.percentiles, PercentileMode::Exact);
+        assert!(!parsed.to_json().to_string().contains("percentiles"));
+    }
+
+    #[test]
     fn default_method_sets_follow_the_mode() {
         assert_eq!(
             Scenario::serve(None, None, true).method_set(),
@@ -680,6 +774,7 @@ mod tests {
         bad(r#""topologies": []"#, "empty topology filter");
         bad(r#""workload": "mystery""#, "unknown workload preset");
         bad(r#""faults": "mystery""#, "unknown fault preset");
+        bad(r#""percentiles": "tdigest""#, "unknown percentile mode");
         bad(r#""faults": 7"#, "preset name or an inline fault");
         bad(
             r#""faults": {"name": "bad", "seed": 1,
@@ -693,6 +788,13 @@ mod tests {
             .map(|_| ())
             .unwrap_err();
         assert!(format!("{err:#}").contains("no workload"));
+        // ... and no sketch percentiles (nothing to sketch).
+        let text = r#"{"name": "bad", "mode": "train",
+                       "percentiles": "sketch"}"#;
+        let err = Scenario::from_json(&Json::parse(text).unwrap())
+            .map(|_| ())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("serve mode only"));
         // Unknown mode.
         let text = r#"{"name": "bad", "mode": "dream"}"#;
         assert!(Scenario::from_json(&Json::parse(text).unwrap()).is_err());

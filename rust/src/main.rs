@@ -60,7 +60,9 @@ COMMANDS:
                  --scale: multi-node TP x DP serving-at-scale sweep
                    (seeded arrivals, per-replica continuous batching,
                    flux vs decoupled per topology); [--topo <name>]
-                   restricts to one topology, [--quick] trims the
+                   restricts to one topology (incl. the parametric
+                   fleet pools, e.g. \"fleet nvlink tp8 dp64\" — see
+                   `flux list`), [--quick] trims the
                    workload, [--workload <preset|file.json>] swaps
                    the request source (arrival process, length mix,
                    routing, SLOs), [--faults <preset|file.json>]
@@ -108,7 +110,9 @@ COMMANDS:
                    (see `flux list` for the names a file can use and
                    artifacts/scenario_*.json for checked-in examples;
                    a \"metrics\" key in the file sets the default
-                   telemetry path, --metrics overrides it)
+                   telemetry path, --metrics overrides it; a
+                   \"percentiles\": \"sketch\" key adds fixed-boundary
+                   sketch percentile twins to serve reports)
     list         print the registries scenarios draw from: serving +
                    training topologies, workload presets, overlap
                    methods, fault presets, report schemas
@@ -119,9 +123,10 @@ COMMANDS:
                    bookkeeping [--out <path>] (default:
                    <artifacts dir>/golden_swizzle.json)
     bench        pinned-seed benchmark suite, incl. the DES-engine
-                   events_per_sec hold workload (deterministic counts;
-                   wall-clock throughput + heap-queue comparison with
-                   --wall)
+                   events_per_sec hold workload and the fleet section
+                   (dpN pool hold + quick-scale cells; deterministic
+                   counts; wall-clock throughput + heap-queue
+                   comparison with --wall; --quick skips dp256)
                    --json write BENCH_<n>.json (byte-stable) instead of
                           printing; [--out <path>] [--quick] [--wall]
                           [--threads <n>]
@@ -489,9 +494,21 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 /// `flux list`: the registries scenarios (and the sweep flags) draw
 /// from — sourced from the same tables the runner resolves against.
 fn cmd_list() -> Result<()> {
-    use flux::cost::arch::{ALL_SCALE_TOPOLOGIES, ALL_TRAIN_TOPOLOGIES};
+    use flux::cost::arch::{
+        ALL_FLEET_TOPOLOGIES, ALL_SCALE_TOPOLOGIES, ALL_TRAIN_TOPOLOGIES,
+    };
     println!("serving topologies (simulate --scale --topo <name>):");
     for t in ALL_SCALE_TOPOLOGIES {
+        println!(
+            "  {:<22} {} | {} node(s), TP{} x DP{}",
+            t.name, t.cluster.name, t.nodes, t.tp, t.dp
+        );
+    }
+    println!(
+        "\nfleet topologies (parametric dpN pools; same --topo flag \
+         and scenario \"topos\" key):"
+    );
+    for t in ALL_FLEET_TOPOLOGIES {
         println!(
             "  {:<22} {} | {} node(s), TP{} x DP{}",
             t.name, t.cluster.name, t.nodes, t.tp, t.dp

@@ -2,16 +2,39 @@
 //! `flux-bench-v1`): the hotpath suite on the cluster simulator with
 //! pinned seeds, every (cluster, op, m) cell an independent
 //! [`crate::exp::Runner`] job.
+//!
+//! # Which cells run when
+//!
+//! | section          | `--quick`                  | full              |
+//! |------------------|----------------------------|-------------------|
+//! | `suite`          | 1 m × 2 seeds per cluster  | 3 m × 5 seeds     |
+//! | `events_per_sec` | resident 4096              | 256/4096/65536    |
+//! | `fleet` (hold)   | dp64                       | dp64 + dp256      |
+//! | `fleet` (scale)  | dp64 quick-scale cell      | dp64 + dp256      |
+//!
+//! Every key in the base document is a pure function of `(quick,)` —
+//! byte-stable across reruns and machines. `--wall` adds the
+//! machine-local timings (`wall_ns`, `events_per_sec`, the heap-queue
+//! comparison) on top, re-running the hold/fleet cells with wall
+//! clocks on; those keys live under `wall` and inside wall-mode cell
+//! objects, never in the byte-compared base document. The `--quick`
+//! bound exists so CI's byte-compare loop stays fast: dp256 (65536
+//! resident events, a 2048-request serving cell) runs only in full
+//! mode.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::cost::arch::{ClusterSpec, ALL_CLUSTERS};
+use crate::cost::arch::{
+    ClusterSpec, ScaleTopology, ALL_CLUSTERS, FLEET_NVLINK_DP256,
+    FLEET_NVLINK_DP64,
+};
 use crate::cost::gemm::tile_grid;
 use crate::exp::Runner;
 use crate::figures::{ag_problem, rs_problem};
-use crate::overlap::{baseline, medium, Problem};
+use crate::overlap::{baseline, medium, Method, Problem};
+use crate::serving::scale::{run_scale, ScaleScenario};
 use crate::sim::engine::{hold_workload, hold_workload_heap, HoldRun};
 use crate::tuner::TunerCache;
 use crate::util::json::{obj, Json};
@@ -34,6 +57,14 @@ const HOLD_RESIDENT_FULL: [usize; 3] = [256, 4096, 65536];
 const HOLD_RESIDENT_QUICK: [usize; 1] = [4096];
 const HOLD_OPS_FULL: usize = 2_000_000;
 const HOLD_OPS_QUICK: usize = 200_000;
+
+/// Pinned seed and sizes for the `fleet` section: hold populations
+/// sized to the dpN pools at [`FLEET_EVENTS_PER_REPLICA`] resident
+/// events per DP replica (dp64 → 16384, dp256 → 65536).
+const FLEET_SEED: u64 = 0x0F1E;
+const FLEET_EVENTS_PER_REPLICA: usize = 256;
+const FLEET_OPS_FULL: usize = 1_000_000;
+const FLEET_OPS_QUICK: usize = 100_000;
 
 /// One suite entry: a (cluster, op, m) cell with per-method metrics.
 /// Cells never share tuner state: every (cluster, problem) pair is
@@ -144,6 +175,97 @@ pub fn bench_doc_with(quick: bool, runner: &Runner) -> Json {
         // throughput lives under `wall.events_per_sec` (--wall only) so
         // this document stays byte-stable across reruns and machines.
         ("events_per_sec", events_per_sec_doc(quick, false, runner)),
+        // Also additive: fleet-scale engine populations + quick-scale
+        // serving cells on the dpN pools (wall twin under `wall.fleet`).
+        ("fleet", fleet_doc(quick, false, runner)),
+    ])
+}
+
+/// Fleet pools benched in the given mode: dp64 always; dp256 only in
+/// full mode, so `--quick` wall time stays bounded (module docs).
+fn fleet_topos(quick: bool) -> Vec<&'static ScaleTopology> {
+    let mut topos = vec![&FLEET_NVLINK_DP64];
+    if !quick {
+        topos.push(&FLEET_NVLINK_DP256);
+    }
+    topos
+}
+
+/// The `fleet` section: the DES engine under fleet-scale event
+/// populations, plus a quick-scale serving cell per pool proving the
+/// full serving hot path completes at that DP.
+///
+/// `cells` drives the pinned-seed hold workload with one resident
+/// event per in-flight request slot ([`FLEET_EVENTS_PER_REPLICA`] per
+/// replica) — pop/schedule counts, the FNV pop-sequence checksum and
+/// the event-slab high-water mark are all pure functions of
+/// `(quick,)`. `scale` runs the quick serving preset end to end on
+/// each pool and reports its deterministic totals. Same wall split as
+/// [`events_per_sec_doc`]: `wall_ns`/`events_per_sec` appear only
+/// with `wall = true`, so the base document stays byte-stable.
+pub fn fleet_doc(quick: bool, wall: bool, runner: &Runner) -> Json {
+    let ops = if quick { FLEET_OPS_QUICK } else { FLEET_OPS_FULL };
+    let topos = fleet_topos(quick);
+    let holds: Vec<HoldRun> = runner
+        .run_matrix(&topos, |t| {
+            Ok(hold_workload(
+                t.dp * FLEET_EVENTS_PER_REPLICA,
+                ops,
+                FLEET_SEED,
+            ))
+        })
+        .expect("fleet hold cells are infallible");
+    let scales: Vec<(usize, usize, f64)> = runner
+        .run_matrix(&topos, |t| {
+            let rep = run_scale(&ScaleScenario::quick(*t), Method::Flux)?;
+            Ok((rep.completed, rep.tokens, rep.makespan_ns))
+        })
+        .expect("fleet pools serve the quick preset");
+
+    let mut cells = Vec::new();
+    for (t, run) in topos.iter().zip(&holds) {
+        let mut kv = vec![
+            ("topo", Json::from(t.name)),
+            ("dp", Json::from(t.dp)),
+            ("resident", Json::from(run.resident)),
+            ("ops", Json::from(run.ops)),
+            ("pops", Json::from(run.pops as usize)),
+            ("schedules", Json::from(run.schedules as usize)),
+            ("checksum", Json::from(format!("{:016x}", run.checksum))),
+            ("slab_high_water", Json::from(run.high_water)),
+        ];
+        if wall {
+            kv.push(("wall_ns", Json::from(run.wall_ns)));
+            kv.push((
+                "events_per_sec",
+                Json::from(
+                    (run.pops + run.schedules) as f64
+                        / (run.wall_ns * 1e-9),
+                ),
+            ));
+        }
+        cells.push(obj(kv));
+    }
+    let scale_cells: Vec<Json> = topos
+        .iter()
+        .zip(&scales)
+        .map(|(t, &(completed, tokens, makespan_ns))| {
+            obj(vec![
+                ("topo", Json::from(t.name)),
+                ("dp", Json::from(t.dp)),
+                ("completed", Json::from(completed)),
+                ("tokens", Json::from(tokens)),
+                ("makespan_ns", Json::from(makespan_ns)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("workload", Json::from("hold")),
+        ("seed", Json::from(FLEET_SEED as usize)),
+        ("ops_per_cell", Json::from(ops)),
+        ("events_per_replica", Json::from(FLEET_EVENTS_PER_REPLICA)),
+        ("cells", Json::Arr(cells)),
+        ("scale", Json::Arr(scale_cells)),
     ])
 }
 
@@ -301,6 +423,10 @@ pub fn write_bench(
                     "events_per_sec".to_string(),
                     events_per_sec_doc(quick, true, runner),
                 );
+                wm.insert(
+                    "fleet".to_string(),
+                    fleet_doc(quick, true, runner),
+                );
             }
             m.insert("wall".to_string(), w);
         }
@@ -356,6 +482,44 @@ pub fn print_bench(doc: &Json) -> Result<()> {
         crate::util::bench::table(
             "DES engine hold workload (pinned seed)",
             &["resident", "ops", "pops", "checksum", "events/s"],
+            &rows,
+        );
+    }
+    if let Some(fl) = doc.opt("fleet") {
+        let mut rows = Vec::new();
+        for c in fl.get("cells")?.as_arr()? {
+            let mut row = vec![
+                c.get("topo")?.as_str()?.to_string(),
+                c.get("resident")?.as_usize()?.to_string(),
+                c.get("pops")?.as_usize()?.to_string(),
+                c.get("slab_high_water")?.as_usize()?.to_string(),
+                c.get("checksum")?.as_str()?.to_string(),
+            ];
+            row.push(match c.opt("events_per_sec") {
+                Some(v) => format!("{:.2e}", v.as_f64()?),
+                None => "- (--wall)".to_string(),
+            });
+            rows.push(row);
+        }
+        for s in fl.get("scale")?.as_arr()? {
+            rows.push(vec![
+                format!("{} (scale)", s.get("topo")?.as_str()?),
+                "-".to_string(),
+                s.get("completed")?.as_usize()?.to_string(),
+                "-".to_string(),
+                format!(
+                    "{:.3}ms",
+                    s.get("makespan_ns")?.as_f64()? / 1e6
+                ),
+                "-".to_string(),
+            ]);
+        }
+        crate::util::bench::table(
+            "fleet cells (dpN pools, pinned seed)",
+            &[
+                "topo", "resident", "pops", "slab hw", "checksum",
+                "events/s",
+            ],
             &rows,
         );
     }
@@ -420,6 +584,82 @@ mod tests {
         assert!(c.opt("wall_ns").is_none());
         assert!(c.opt("events_per_sec").is_none());
         assert!(eps.opt("events_per_sec").is_none());
+        // The additive fleet section: deterministic keys only.
+        let fl = parsed.get("fleet").unwrap();
+        assert_eq!(fl.get("workload").unwrap().as_str().unwrap(), "hold");
+        let cells = fl.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1, "quick mode runs dp64 only");
+        let c = &cells[0];
+        assert_eq!(c.get("dp").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(
+            c.get("resident").unwrap().as_usize().unwrap(),
+            64 * FLEET_EVENTS_PER_REPLICA
+        );
+        assert!(c.opt("wall_ns").is_none());
+        assert!(c.opt("events_per_sec").is_none());
+        let scale = fl.get("scale").unwrap().as_arr().unwrap();
+        assert_eq!(scale.len(), 1);
+        // Quick serving preset: 8 requests per replica at dp64.
+        assert_eq!(
+            scale[0].get("completed").unwrap().as_usize().unwrap(),
+            512
+        );
+    }
+
+    #[test]
+    fn fleet_section_quick_skips_dp256() {
+        let fl = fleet_doc(true, false, &Runner::with_threads(1));
+        let cells = fl.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.get("dp").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(
+            c.get("ops").unwrap().as_usize().unwrap(),
+            FLEET_OPS_QUICK
+        );
+        // Pop-then-schedule keeps the pending population pinned at the
+        // resident size, so the slab never outgrows it.
+        assert_eq!(
+            c.get("slab_high_water").unwrap().as_usize().unwrap(),
+            16384
+        );
+        assert!(c.get("pops").unwrap().as_usize().unwrap() > 0);
+    }
+
+    #[test]
+    fn fleet_section_full_completes_dp256_quick_scale_cell() {
+        let fl = fleet_doc(false, false, &Runner::with_threads(2));
+        let cells = fl.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        let c = &cells[1];
+        assert_eq!(c.get("dp").unwrap().as_usize().unwrap(), 256);
+        assert_eq!(
+            c.get("resident").unwrap().as_usize().unwrap(),
+            65536
+        );
+        assert_eq!(
+            c.get("slab_high_water").unwrap().as_usize().unwrap(),
+            65536
+        );
+        let scale = fl.get("scale").unwrap().as_arr().unwrap();
+        assert_eq!(scale.len(), 2);
+        let s = &scale[1];
+        assert_eq!(s.get("dp").unwrap().as_usize().unwrap(), 256);
+        // The acceptance bar: a dp256 pool completes the quick-scale
+        // serving cell (256 replicas x 8 requests each).
+        assert_eq!(s.get("completed").unwrap().as_usize().unwrap(), 2048);
+        assert!(s.get("makespan_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fleet_wall_mode_reports_throughput() {
+        let fl = fleet_doc(true, true, &Runner::with_threads(1));
+        for c in fl.get("cells").unwrap().as_arr().unwrap() {
+            assert!(c.get("wall_ns").unwrap().as_f64().unwrap() > 0.0);
+            assert!(
+                c.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0
+            );
+        }
     }
 
     #[test]

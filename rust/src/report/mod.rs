@@ -29,8 +29,8 @@ mod sweep;
 mod train;
 
 pub use bench::{
-    bench_doc, bench_doc_with, events_per_sec_doc, print_bench, wall_doc,
-    write_bench,
+    bench_doc, bench_doc_with, events_per_sec_doc, fleet_doc, print_bench,
+    wall_doc, write_bench,
 };
 pub use churn::{churn_doc_scenario, print_churn, INTENSITIES};
 pub use scale::{

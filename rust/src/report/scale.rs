@@ -28,6 +28,18 @@ fn scale_method_json(r: &ScaleReport) -> Json {
         ("per_token_ns", latency_percentiles(&r.per_token)),
         ("latency_ns", latency_percentiles(&r.latency)),
     ];
+    // Sketch-mode twins: additive keys, populated only when the
+    // scenario opted into `percentiles: "sketch"` — the default
+    // document keeps its historical byte shape.
+    if let Some(s) = &r.ttft_sketch {
+        fields.push(("ttft_ns_sketch", latency_percentiles(s)));
+    }
+    if let Some(s) = &r.per_token_sketch {
+        fields.push(("per_token_ns_sketch", latency_percentiles(s)));
+    }
+    if let Some(s) = &r.latency_sketch {
+        fields.push(("latency_ns_sketch", latency_percentiles(s)));
+    }
     if let Some(slo) = &r.slo {
         fields.push(("slo", slo.to_json()));
     }
@@ -290,6 +302,7 @@ mod tests {
             ]),
             faults: None,
             metrics: None,
+            percentiles: crate::util::stats::PercentileMode::Exact,
             quick: true,
         };
         let doc =
@@ -311,6 +324,43 @@ mod tests {
         assert!(fx <= de, "flux {fx} vs decoupled {de}");
         // Comparative fields still present (both references in set).
         assert!(t.get("speedup").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn sketch_scenario_adds_sketch_blocks_without_touching_exact() {
+        use crate::util::stats::PercentileMode;
+        let base = Scenario {
+            name: "sketchy".into(),
+            mode: Mode::Serve,
+            topos: Some(vec!["1-node tp8".into()]),
+            workload: None,
+            methods: None,
+            faults: None,
+            metrics: None,
+            percentiles: PercentileMode::Exact,
+            quick: true,
+        };
+        let mut sketchy = base.clone();
+        sketchy.percentiles = PercentileMode::Sketch;
+        let runner = Runner::with_threads(1);
+        let exact = scale_doc_scenario(&base, &runner).unwrap();
+        let doc = scale_doc_scenario(&sketchy, &runner).unwrap();
+        let te = &exact.get("topologies").unwrap().as_arr().unwrap()[0];
+        let ts = &doc.get("topologies").unwrap().as_arr().unwrap()[0];
+        let fe = te.get("flux").unwrap();
+        let fs = ts.get("flux").unwrap();
+        // Exact mode emits no sketch twins.
+        assert!(fe.opt("ttft_ns_sketch").is_none());
+        // Sketch mode adds them and leaves the exact fields bit-equal.
+        for k in ["ttft_ns", "per_token_ns", "latency_ns"] {
+            assert_eq!(
+                fe.get(k).unwrap().to_string(),
+                fs.get(k).unwrap().to_string(),
+                "exact block {k} must not move in sketch mode"
+            );
+            let sk = fs.get(&format!("{k}_sketch")).unwrap();
+            assert!(sk.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ const COMMON: [Field; 2] = [
     f("quick", "bool", "true when run with the trimmed quick sweep"),
 ];
 
-const BENCH_FIELDS: [Field; 7] = [
+const BENCH_FIELDS: [Field; 9] = [
     f("model", "string", "transformer config the op shapes come from"),
     f("suite", "array[object]", "one cell per (cluster, op, m) point"),
     f("suite[].cluster", "string", "GPU cluster the cell is costed on"),
@@ -55,9 +55,21 @@ const BENCH_FIELDS: [Field; 7] = [
         "string",
         "order-sensitive event-stream checksum (determinism witness)",
     ),
+    f(
+        "fleet",
+        "object",
+        "fleet-scale section: hold cells on the parametric dpN pools \
+         (dp64; + dp256 in full mode) plus a quick-scale serving cell \
+         per pool; wall-clock throughput only under --wall",
+    ),
+    f(
+        "fleet.cells[].slab_high_water",
+        "number",
+        "peak event-slab population of the cell's calendar queue",
+    ),
 ];
 
-const SCALE_FIELDS: [Field; 9] = [
+const SCALE_FIELDS: [Field; 10] = [
     f("model", "string", "transformer config being served"),
     f("topologies", "array[object]", "one cell per serving topology"),
     f("topologies[].topology", "string", "topology registry name"),
@@ -77,6 +89,12 @@ const SCALE_FIELDS: [Field; 9] = [
         "topologies[].<method>.ttft_ns",
         "object",
         "time-to-first-token percentiles p50/p95/p99, ns",
+    ),
+    f(
+        "topologies[].<method>.ttft_ns_sketch",
+        "object",
+        "fixed-boundary sketch twin of ttft_ns (also per_token_ns/\
+         latency_ns); present only under percentiles: \"sketch\"",
     ),
     f("topo_filter", "string|array", "present when --topo filtered"),
     f("scenario", "string", "present when run from a scenario file"),

@@ -219,6 +219,41 @@ impl<E> EventQueue<E> {
         (self.cal_start, self.width, self.buckets.len())
     }
 
+    /// High-water mark of the event arena: the peak number of
+    /// simultaneously-pending events this queue has ever held (slots
+    /// are recycled through the free list, so the slab only grows when
+    /// every existing slot is live). A pure function of the
+    /// schedule/pop stream — reported by the fleet bench section.
+    pub fn slab_high_water(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Clear the queue for reuse, keeping every allocation (event
+    /// slab, free list, bucket storage). A reset queue is
+    /// observationally identical to [`EventQueue::new`] — clock,
+    /// counters and calendar geometry all return to their initial
+    /// state — but the next run skips the slab growth this one paid
+    /// for. The per-worker arenas in `serving::scale` lean on the
+    /// identity (the tests pin it).
+    pub fn reset(&mut self) {
+        self.arena.clear();
+        self.free.clear();
+        self.buckets.truncate(MIN_BUCKETS);
+        for bk in &mut self.buckets {
+            bk.items.clear();
+            bk.head = 0;
+        }
+        self.width = 1.0;
+        self.cur = 0;
+        self.far.clear();
+        self.len = 0;
+        self.seq = 0;
+        self.now = 0.0;
+        self.pops = 0;
+        self.rebuilds = 0;
+        self.set_calendar(0.0);
+    }
+
     /// Re-anchor the window at `start`, keeping the current bucket count
     /// and (roughly) the current width. Doubles the width until the
     /// window has positive float extent: at huge magnitudes
@@ -350,13 +385,9 @@ impl<E> EventQueue<E> {
         }
     }
 
-    /// Schedule `payload` at absolute time `at` (>= now).
-    ///
-    /// Panics on non-finite `at` and on times behind the clock; times in
-    /// the 1e-9 float-noise sliver below `now` are clamped to `now` so a
-    /// pop can never rewind the clock. See the shared `admit` validation
-    /// for the rationale.
-    pub fn schedule(&mut self, at: Time, payload: E) {
+    /// Admit and file one event; the caller owes the grow check.
+    #[inline]
+    fn admit_one(&mut self, at: Time, payload: E) {
         let at = admit(at, self.now);
         if self.len == 0 {
             // Empty queue: re-anchor the window on the new event so a
@@ -384,10 +415,48 @@ impl<E> EventQueue<E> {
             }
         };
         self.insert(idx);
+    }
+
+    /// Re-run the resize policy after admissions: grow when the load
+    /// factor passes 2 events/bucket (same threshold whether events
+    /// arrived one at a time or in a batch).
+    #[inline]
+    fn maybe_grow(&mut self) {
         if self.len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS
         {
             self.rebuild(self.len);
         }
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now).
+    ///
+    /// Panics on non-finite `at` and on times behind the clock; times in
+    /// the 1e-9 float-noise sliver below `now` are clamped to `now` so a
+    /// pop can never rewind the clock. See the shared `admit` validation
+    /// for the rationale.
+    pub fn schedule(&mut self, at: Time, payload: E) {
+        self.admit_one(at, payload);
+        self.maybe_grow();
+    }
+
+    /// Batch-admit a stream of events in iteration order.
+    ///
+    /// Each event passes the exact same `admit` validation and takes
+    /// consecutive `seq` numbers, so ties break exactly as the
+    /// equivalent sequence of [`EventQueue::schedule`] calls would and
+    /// the pop sequence is identical (the differential tests pin
+    /// this). What's amortized is the *resize policy*: the grow check
+    /// runs once after the whole batch instead of per event, so a
+    /// large pre-scheduled arrival stream (time-sorted, which takes
+    /// the bucket fast path) admits without intermediate rebuilds.
+    pub fn schedule_many<I>(&mut self, events: I)
+    where
+        I: IntoIterator<Item = (Time, E)>,
+    {
+        for (at, payload) in events {
+            self.admit_one(at, payload);
+        }
+        self.maybe_grow();
     }
 
     /// Schedule `payload` `delay` after now.
@@ -601,6 +670,11 @@ pub struct HoldRun {
     /// checksums across queue implementations certify identical pop
     /// sequences without storing them.
     pub checksum: u64,
+    /// Peak pending-event population — for the calendar queue exactly
+    /// its slab high-water mark ([`EventQueue::slab_high_water`]),
+    /// tracked here through the queue-agnostic `len()` so the heap
+    /// reference reports the same number.
+    pub high_water: usize,
     pub wall_ns: f64,
 }
 
@@ -639,6 +713,7 @@ fn run_hold<Q: DesQueue<u64>>(
     }
     let mut schedules = resident as u64;
     let mut pops = 0u64;
+    let mut high_water = q.len();
     for _ in 0..ops {
         let (t, p) = q.next().expect("resident population never drains");
         pops += 1;
@@ -650,13 +725,16 @@ fn run_hold<Q: DesQueue<u64>>(
         };
         q.schedule(t + gap, p);
         schedules += 1;
+        if q.len() > high_water {
+            high_water = q.len();
+        }
     }
     while let Some((t, p)) = q.next() {
         pops += 1;
         checksum = fnv_fold(checksum, t.to_bits() ^ p);
     }
     let wall_ns = start.elapsed_ns();
-    HoldRun { resident, ops, pops, schedules, checksum, wall_ns }
+    HoldRun { resident, ops, pops, schedules, checksum, high_water, wall_ns }
 }
 
 #[cfg(test)]
@@ -835,5 +913,95 @@ mod tests {
         assert_eq!(a.schedules, b.schedules);
         assert_eq!(a.pops, 64 + 2_000);
         assert_eq!(a.schedules, 64 + 2_000);
+        // The hold model keeps the population constant, so the peak is
+        // exactly the resident count — on both implementations.
+        assert_eq!(a.high_water, 64);
+        assert_eq!(b.high_water, 64);
+    }
+
+    #[test]
+    fn schedule_many_pops_identically_to_single_schedules() {
+        // The batch admit defers only the resize policy; admission
+        // order, seq numbering and therefore the full pop sequence
+        // must match event-for-event.
+        let mut rng = Rng::new(0xFEE7);
+        let stream: Vec<(Time, u64)> = (0..5_000u64)
+            .map(|i| {
+                let at = match rng.below(8) {
+                    0 => rng.f64() * 1e9, // overflow territory
+                    1 => 250.0,           // tie lattice
+                    _ => rng.f64() * 1e4,
+                };
+                (at, i)
+            })
+            .collect();
+        let mut one = EventQueue::new();
+        for &(at, p) in &stream {
+            one.schedule(at, p);
+        }
+        let mut many = EventQueue::new();
+        many.schedule_many(stream.iter().copied());
+        assert_eq!(one.len(), many.len());
+        assert_eq!(one.scheduled(), many.scheduled());
+        assert_eq!(one.slab_high_water(), many.slab_high_water());
+        loop {
+            match (one.next(), many.next()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(
+                    a.map(|(t, p)| (t.to_bits(), p)),
+                    b.map(|(t, p)| (t.to_bits(), p))
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn reset_queue_replays_like_a_fresh_one() {
+        // reset() must restore new-queue state exactly (slab capacity
+        // aside): the same seeded hold stream replayed through a
+        // recycled queue reproduces counters, checksum and geometry.
+        let fresh = hold_workload(256, 5_000, 0x0E5C);
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule(i as f64 * 3.5, i);
+        }
+        while q.next().is_some() {}
+        assert_eq!(q.slab_high_water(), 10_000);
+        q.reset();
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.pops(), 0);
+        assert_eq!(q.scheduled(), 0);
+        assert_eq!(q.rebuilds(), 0);
+        assert_eq!(q.slab_high_water(), 0);
+        assert_eq!(
+            q.bucket_params(),
+            EventQueue::<u64>::new().bucket_params()
+        );
+        let recycled = run_hold(q, 256, 5_000, 0x0E5C);
+        assert_eq!(recycled.checksum, fresh.checksum);
+        assert_eq!(recycled.pops, fresh.pops);
+        assert_eq!(recycled.schedules, fresh.schedules);
+        assert_eq!(recycled.high_water, fresh.high_water);
+    }
+
+    #[test]
+    fn slab_high_water_tracks_peak_population() {
+        let mut q = EventQueue::new();
+        for i in 0..100u64 {
+            q.schedule(i as f64, i);
+        }
+        assert_eq!(q.slab_high_water(), 100);
+        for _ in 0..50 {
+            q.next();
+        }
+        // Pops recycle slots; the slab remembers the peak.
+        assert_eq!(q.len(), 50);
+        assert_eq!(q.slab_high_water(), 100);
+        // Refilling reuses freed slots before growing.
+        q.schedule_many((0..50u64).map(|i| (1e3 + i as f64, i)));
+        assert_eq!(q.slab_high_water(), 100);
+        q.schedule(2e3, 7);
+        assert_eq!(q.slab_high_water(), 101);
     }
 }

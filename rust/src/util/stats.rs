@@ -58,10 +58,12 @@ impl Summary {
 ///
 /// The buffer itself cannot be dropped: the schemas pin **exact**
 /// linear-interpolated percentiles, and exact order statistics need the
-/// whole sample (constant space would force an approximate sketch like
-/// P²/t-digest, which would change pinned report bytes). The variance
-/// pass runs over the buffer in push order *before* sorting, exactly as
-/// the old code read its input slice, so `std` is also bit-identical.
+/// whole sample. Constant space is available as the *opt-in* [`Sketch`]
+/// (scenario `percentiles: "sketch"`), which surfaces as additive
+/// `*_sketch` report fields precisely so the exact default — and every
+/// pinned report byte — survives untouched. The variance pass runs over
+/// the buffer in push order *before* sorting, exactly as the old code
+/// read its input slice, so `std` is also bit-identical.
 #[derive(Clone, Debug, Default)]
 pub struct Streaming {
     sum: f64,
@@ -120,6 +122,174 @@ impl Streaming {
             p95: percentile(&self.buf, 0.95),
             p99: percentile(&self.buf, 0.99),
             max: self.buf[n - 1],
+        }
+    }
+}
+
+/// Percentile accounting mode of a serving cell: the scenario
+/// `percentiles` key (`"exact"` | `"sketch"`). Exact buffers every
+/// sample ([`Streaming`]); Sketch *additionally* folds each sample
+/// into a constant-space [`Sketch`] whose bucketed percentiles ride
+/// the report as additive `*_sketch` fields — the default stays exact
+/// so every pinned report byte is untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PercentileMode {
+    #[default]
+    Exact,
+    Sketch,
+}
+
+impl PercentileMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PercentileMode::Exact => "exact",
+            PercentileMode::Sketch => "sketch",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<PercentileMode> {
+        match name {
+            "exact" => Ok(PercentileMode::Exact),
+            "sketch" => Ok(PercentileMode::Sketch),
+            _ => anyhow::bail!(
+                "unknown percentile mode {name:?} (exact|sketch)"
+            ),
+        }
+    }
+}
+
+/// Constant-space percentile sketch over fixed boundaries.
+///
+/// A deterministic fixed-boundary histogram (the caller supplies the
+/// bucket upper bounds — in practice the power-of-4 ladder
+/// `obs::LATENCY_BOUNDS_NS`): `observe` is O(log buckets) and the
+/// memory is O(buckets) no matter how many samples stream through,
+/// which is what makes million-request fleet runs summarizable without
+/// buffering every latency. `n`/`mean`/`min`/`max` stay exact
+/// (streamed scalars); only the percentile fields are bucketed, each
+/// linearly interpolated inside the bucket holding its rank — so a
+/// sketch percentile lands within the bucket that contains the exact
+/// order statistic (one bucket width of the exact value when the
+/// neighboring order statistics share a bucket; `tests/prop.rs` pins
+/// the differential bound on seeded samples).
+///
+/// No randomness, no data-dependent resizing: two runs over the same
+/// sample stream produce bit-identical estimates at any thread count,
+/// same as every other number in the reports.
+#[derive(Clone, Debug)]
+pub struct Sketch {
+    bounds: &'static [f64],
+    /// `counts[i]` holds samples `<= bounds[i]`; the final slot is the
+    /// overflow bucket (`> bounds[last]`).
+    counts: Vec<u64>,
+    n: usize,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Sketch {
+    /// Build over `bounds` (finite, strictly increasing upper bounds).
+    pub fn new(bounds: &'static [f64]) -> Sketch {
+        assert!(!bounds.is_empty(), "Sketch bounds must be non-empty");
+        for w in bounds.windows(2) {
+            assert!(
+                w[0].is_finite() && w[1].is_finite() && w[0] < w[1],
+                "Sketch bounds must be finite and strictly increasing"
+            );
+        }
+        Sketch {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Fold one observation in. Panics on NaN/infinite input — same
+    /// contract as [`Streaming::push`].
+    pub fn observe(&mut self, x: f64) {
+        assert!(x.is_finite(), "non-finite sample {x} in Sketch");
+        let i = self.bounds.partition_point(|&b| b < x);
+        self.counts[i] += 1;
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// The `[lo, hi]` boundaries of the bucket `x` falls in, clamped
+    /// to the observed `[min, max]` range at the edge buckets.
+    pub fn bucket_of(&self, x: f64) -> (f64, f64) {
+        let i = self.bounds.partition_point(|&b| b < x);
+        let lo = if i == 0 { self.min } else { self.bounds[i - 1] };
+        let hi = if i == self.bounds.len() {
+            self.max
+        } else {
+            self.bounds[i]
+        };
+        (lo, hi)
+    }
+
+    /// Bucketed percentile estimate: locate the bucket containing the
+    /// rank position `q * (n - 1)` (the exact [`percentile`]'s
+    /// convention) and interpolate linearly inside its boundaries.
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!(self.n > 0, "Sketch::percentile on empty sample");
+        assert!((0.0..=1.0).contains(&q));
+        let pos = q * (self.n - 1) as f64;
+        let mut before = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let after = before + c;
+            if pos < after as f64 {
+                let lo =
+                    if i == 0 { self.min } else { self.bounds[i - 1] };
+                let hi = if i == self.bounds.len() {
+                    self.max
+                } else {
+                    self.bounds[i]
+                };
+                let t = (pos - before as f64) / c as f64;
+                let est = lo + (hi - lo) * t;
+                return est.clamp(self.min, self.max);
+            }
+            before = after;
+        }
+        self.max
+    }
+
+    /// Project into a [`Summary`]: exact `n`/`mean`/`min`/`max`,
+    /// bucketed `p50`/`p95`/`p99`, sum-of-squares `std`. Panics if
+    /// nothing was observed.
+    pub fn summary(&self) -> Summary {
+        assert!(self.n > 0, "Sketch::summary on empty sample");
+        let mean = self.sum / self.n as f64;
+        let var = (self.sumsq / self.n as f64 - mean * mean).max(0.0);
+        Summary {
+            n: self.n,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            p50: self.percentile(0.50),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+            max: self.max,
         }
     }
 }
@@ -221,6 +391,94 @@ mod tests {
     #[should_panic(expected = "empty sample")]
     fn streaming_finalize_rejects_empty() {
         Streaming::new().finalize();
+    }
+
+    const POW4: [f64; 13] = [
+        1.0e3, 4.0e3, 1.6e4, 6.4e4, 2.56e5, 1.024e6, 4.096e6, 1.6384e7,
+        6.5536e7, 2.62144e8, 1.048576e9, 4.194304e9, 1.6777216e10,
+    ];
+
+    #[test]
+    fn sketch_exact_scalars_and_bracketed_percentiles() {
+        let mut sk = Sketch::new(&POW4);
+        assert!(sk.is_empty());
+        let xs: Vec<f64> =
+            (1..=1000).map(|i| i as f64 * 1.7e4).collect();
+        for &x in &xs {
+            sk.observe(x);
+        }
+        assert_eq!(sk.n(), 1000);
+        let s = sk.summary();
+        let exact = Summary::of(&xs);
+        // n/mean/min/max are exact; std within float noise of exact.
+        assert_eq!(s.n, exact.n);
+        assert_eq!(s.min, exact.min);
+        assert_eq!(s.max, exact.max);
+        assert!((s.mean - exact.mean).abs() < 1e-6 * exact.mean);
+        assert!((s.std - exact.std).abs() < 1e-6 * exact.std);
+        // Each sketch percentile lands inside the bucket containing
+        // the exact order statistic.
+        for (sp, ep) in [
+            (s.p50, exact.p50),
+            (s.p95, exact.p95),
+            (s.p99, exact.p99),
+        ] {
+            let (lo, hi) = sk.bucket_of(ep);
+            assert!(
+                sp >= lo && sp <= hi,
+                "sketch {sp} outside bucket [{lo}, {hi}] of exact {ep}"
+            );
+        }
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.min <= s.p50 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn sketch_is_deterministic_across_reruns() {
+        let run = || {
+            let mut sk = Sketch::new(&POW4);
+            for i in 0..257u64 {
+                sk.observe(((i * 2654435761) % 100_000) as f64 * 37.0);
+            }
+            let s = sk.summary();
+            [s.mean, s.std, s.p50, s.p95, s.p99]
+                .map(f64::to_bits)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sketch_handles_out_of_range_samples() {
+        // Below the first bound and above the last: edge buckets clamp
+        // to the observed min/max.
+        let mut sk = Sketch::new(&POW4);
+        sk.observe(5.0);
+        sk.observe(1.0e12);
+        let s = sk.summary();
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 1.0e12);
+        assert!(s.p50 >= 5.0 && s.p99 <= 1.0e12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample")]
+    fn sketch_rejects_nan() {
+        Sketch::new(&POW4).observe(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn sketch_summary_rejects_empty() {
+        Sketch::new(&POW4).summary();
+    }
+
+    #[test]
+    fn percentile_mode_round_trips() {
+        for m in [PercentileMode::Exact, PercentileMode::Sketch] {
+            assert_eq!(PercentileMode::from_name(m.name()).unwrap(), m);
+        }
+        assert_eq!(PercentileMode::default(), PercentileMode::Exact);
+        assert!(PercentileMode::from_name("tdigest").is_err());
     }
 
     #[test]

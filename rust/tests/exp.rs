@@ -10,6 +10,7 @@ use flux::overlap::Method;
 use flux::report;
 use flux::util::json::Json;
 use flux::util::propcheck::{forall_gen, usize_in};
+use flux::util::stats::PercentileMode;
 
 #[test]
 fn sweep_matrix_is_byte_identical_at_any_thread_count() {
@@ -272,12 +273,58 @@ fn scenario_json_round_trips_through_the_cli_surface() {
         methods: Some(vec![Method::NonOverlap, Method::Flux]),
         faults: None,
         metrics: Some("metrics.json".into()),
+        percentiles: PercentileMode::Exact,
         quick: true,
     };
     let text = sc.to_json().to_string();
     let parsed = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
     assert_eq!(parsed, sc);
     assert_eq!(parsed.to_json().to_string(), text);
+
+    // The sketch opt-in rides the same surface: emitted as a
+    // "percentiles" key, parsed back, byte-stable.
+    let mut sketchy = sc.clone();
+    sketchy.percentiles = PercentileMode::Sketch;
+    let text = sketchy.to_json().to_string();
+    assert!(text.contains("\"percentiles\":\"sketch\""));
+    let parsed = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, sketchy);
+    assert_eq!(parsed.to_json().to_string(), text);
+}
+
+#[test]
+fn fleet_scenario_docs_are_byte_identical_across_thread_counts() {
+    // The parametric dpN pools run through the same scenario surface
+    // as the named registry, under the same determinism contract:
+    // byte-identical expansion and execution at propcheck-drawn
+    // worker counts.
+    let sc = Scenario {
+        name: "fleet-hot-path".into(),
+        mode: Mode::Serve,
+        topos: Some(vec![
+            "fleet nvlink tp8 dp8".into(),
+            "fleet h800 tp8 dp16".into(),
+        ]),
+        workload: None,
+        methods: Some(vec![Method::Flux]),
+        faults: None,
+        metrics: None,
+        percentiles: PercentileMode::Sketch,
+        quick: true,
+    };
+    let seq = report::scale_doc_scenario(&sc, &Runner::with_threads(1))
+        .unwrap()
+        .to_string();
+    assert!(seq.contains("fleet nvlink tp8 dp8"));
+    assert!(seq.contains("fleet h800 tp8 dp16"));
+    assert!(seq.contains("ttft_ns_sketch"));
+    forall_gen(3, 0xDE5_0006, usize_in(2, 9), |&threads| {
+        let par =
+            report::scale_doc_scenario(&sc, &Runner::with_threads(threads))
+                .unwrap()
+                .to_string();
+        assert_eq!(par, seq, "fleet doc at {threads} threads diverged");
+    });
 }
 
 #[test]

@@ -104,6 +104,56 @@ fn tile_dest_is_a_balanced_bijection_onto_ranks() {
 }
 
 #[test]
+fn sketch_percentiles_bracket_the_exact_ones_bucketwise() {
+    // Differential contract of the opt-in sketch mode against the
+    // exact sorted-sample percentiles, on latency-like draws:
+    //  - n/min/max are exact (bit-equal) — only percentiles bucket;
+    //  - the sketch estimate always lands inside the bucket of the
+    //    exact percentile's floor order statistic;
+    //  - when the floor and ceil order statistics share that bucket
+    //    (so the exact interpolation cannot cross a boundary), sketch
+    //    and exact differ by at most one bucket width.
+    use flux::obs::LATENCY_BOUNDS_NS;
+    use flux::util::stats::Sketch;
+    let gen = vec_of(usize_in(1, 300), f64_in(0.0, 2.0e10));
+    forall_gen(128, 0xDE5_0005, gen, |xs| {
+        let mut sk = Sketch::new(&LATENCY_BOUNDS_NS);
+        for &x in xs {
+            sk.observe(x);
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let ex = Summary::of(xs);
+        let s = sk.summary();
+        assert_eq!(s.n, ex.n);
+        assert_eq!(s.min.to_bits(), ex.min.to_bits());
+        assert_eq!(s.max.to_bits(), ex.max.to_bits());
+        for (q, sp, ep) in [
+            (0.50, s.p50, ex.p50),
+            (0.95, s.p95, ex.p95),
+            (0.99, s.p99, ex.p99),
+        ] {
+            let pos = q * (sorted.len() - 1) as f64;
+            let x_floor = sorted[pos.floor() as usize];
+            let x_ceil = sorted[pos.ceil() as usize];
+            let (lo, hi) = sk.bucket_of(x_floor);
+            let tol = 1e-9 * hi.abs().max(1.0);
+            assert!(
+                sp >= lo - tol && sp <= hi + tol,
+                "p{q}: sketch {sp} outside bucket [{lo}, {hi}]"
+            );
+            if sk.bucket_of(x_ceil) == (lo, hi) {
+                assert!(
+                    (sp - ep).abs() <= (hi - lo) + tol,
+                    "p{q}: |{sp} - {ep}| > bucket width {}",
+                    hi - lo
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn summary_percentiles_are_monotone_on_random_samples() {
     // min <= p50 <= p95 <= p99 <= max on any non-empty finite sample,
     // mean inside [min, max], std never negative.

@@ -13,6 +13,7 @@
 #   BENCH_5.json  bench --wall: events/sec    (machine-local, NOT compared)
 #   BENCH_6.json  replica-churn scenario      (flux-churn-v1, byte-stable)
 #   BENCH_7.json  churn scenario + telemetry  (flux-metrics-v1, byte-stable)
+#   BENCH_8.json  fleet dp64 + sketch pctls   (flux-scale-v2, byte-stable)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -68,6 +69,13 @@ flux scenario artifacts/scenario_churn_h800.json --json \
 cmp BENCH_7.json BENCH_7.json.repro
 cmp BENCH_7_metrics.json BENCH_7_metrics.json.repro
 rm -f BENCH_7.json.repro BENCH_7_metrics.json.repro
+
+echo "== BENCH_8: fleet dp64 pool + sketch percentiles (flux-scale-v2) =="
+# The parametric fleet topologies and the opt-in sketch-percentile mode
+# ride the same byte-stability contract as the named registry: the
+# scenario file pins a dp64 pool with percentiles: "sketch", and the
+# rerun must reproduce every sketch twin bit for bit.
+stable BENCH_8.json scenario artifacts/scenario_fleet_sketch.json --json
 
 echo "== BENCH_5: DES engine events/sec (wall clock; not byte-compared) =="
 flux bench --json --quick --wall --out BENCH_5.json

@@ -5,11 +5,25 @@ baseline times its tolerance.
 
 Usage: perf_gate.py <BENCH_5.json> <artifacts/perf_baseline.json>
 
-The tolerance is deliberately generous (default 0.5x): shared CI runners
-are noisy, and the gate exists to catch order-of-magnitude regressions
-(an accidental O(log n) -> O(n) slip in the queue, a debug build), not
-5% drift. Ratchet `events_per_sec` in the baseline upward as real CI
-numbers accumulate — see README "Performance".
+Two checks run:
+
+1. The hold-workload throughput (`wall.events_per_sec.events_per_sec`)
+   must clear `events_per_sec * tolerance` from the baseline file.
+2. The dp64 fleet hold cell (`wall.fleet.cells[0].events_per_sec`) must
+   stay within `fleet_factor` of the bare hold-model throughput: the
+   fleet cell runs the same engine with a 4x larger resident
+   population, so falling more than ~2x behind means the hot path
+   stopped scaling (a bucket-width pathology, an accidental re-sort),
+   not runner noise.
+
+The tolerance is deliberately below 1.0 (0.7x after the first ratchet):
+shared CI runners are noisy, and the gate exists to catch
+order-of-magnitude regressions (an accidental O(log n) -> O(n) slip in
+the queue, a debug build), not 5% drift.
+
+Ratchet recipe: take the minimum `wall.events_per_sec` over the last
+~20 green CI runs, set `events_per_sec` in the baseline to half of it,
+and keep `tolerance` at 0.7. Never ratchet from a single fast run.
 """
 
 import json
@@ -56,6 +70,38 @@ def main() -> int:
             file=sys.stderr,
         )
         return 1
+
+    # Fleet cell: relative check against the just-measured hold
+    # throughput, so it is immune to absolute runner speed.
+    fleet_factor = base.get("fleet_factor")
+    if fleet_factor is not None:
+        try:
+            cells = bench["wall"]["fleet"]["cells"]
+            fleet = cells[0]["events_per_sec"]
+            dp = cells[0]["dp"]
+        except (KeyError, IndexError):
+            print(
+                f"{bench_path}: no wall.fleet.cells[0].events_per_sec "
+                "-- bench report predates the fleet section?",
+                file=sys.stderr,
+            )
+            return 2
+        factor = float(fleet_factor)
+        fleet_floor = measured / factor
+        print(
+            f"fleet dp{dp} {fleet:.3e} events/s; hold {measured:.3e} "
+            f"/ factor {factor} -> floor {fleet_floor:.3e}"
+        )
+        if fleet < fleet_floor:
+            print(
+                f"FAIL: the dp{dp} fleet cell fell more than {factor}x "
+                f"behind the bare hold model ({fleet:.3e} < "
+                f"{fleet_floor:.3e}): the engine hot path stopped "
+                "scaling with the resident population.",
+                file=sys.stderr,
+            )
+            return 1
+
     print("perf gate OK")
     return 0
 
